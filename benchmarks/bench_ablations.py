@@ -1,0 +1,53 @@
+"""Fig. 10 — effects of individual optimizations on Black-Scholes
+(compute-bound) and the crime-index workload (data-movement-bound).
+
+Matches the paper's finding: fusion dominates for the data-intensive
+workload, while the compute-bound workload is insensitive to it.
+Pass toggles reuse the optimizer's `passes` parameter.
+"""
+from __future__ import annotations
+
+from repro.core.lazy import Evaluate
+
+from .common import Suite, time_fn
+from .workloads import (black_scholes_weld_expr, make_bs_data,
+                        make_crime_data)
+from .bench_motivating import _weld_total
+
+ALL = ["inline", "fusion", "size", "tiling", "predication", "cse"]
+
+
+def _variants():
+    return {
+        "all": ALL,
+        "no_fusion": [p for p in ALL if p != "fusion"],
+        "no_predication": [p for p in ALL if p != "predication"],
+        "no_cse": [p for p in ALL if p != "cse"],
+        "none": [],
+    }
+
+
+def run(emit, n=1_000_000):
+    s = Suite(emit)
+    bs = make_bs_data(n)
+    cr = make_crime_data(n)
+
+    for wname, obj_fn in (
+        ("blackscholes", lambda: black_scholes_weld_expr(bs).obj),
+        ("crimeindex", lambda: _weld_total(cr).obj),
+    ):
+        ref = None
+        for vname, passes in _variants().items():
+            def go(passes=passes):
+                return Evaluate(obj_fn(), passes=passes).value
+
+            val = go()
+            if ref is None:
+                ref = val
+            assert abs(val - ref) < 1e-6 * max(abs(ref), 1), (wname, vname)
+            us = time_fn(go)
+            tag = f"fig10/{wname}/{vname}"
+            if vname == "all":
+                s.record(tag, us, baseline_of=wname)
+            else:
+                s.record(tag, us, vs=wname)

@@ -1,0 +1,23 @@
+"""Fig. 5a — NumPy Black-Scholes: native eager NumPy (8 operator calls,
+materialized intermediates) vs the Weld-integrated weldnp (one fused
+program; vectorized erf/exp/log)."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import Suite, time_fn
+from .workloads import (black_scholes_native, black_scholes_weld,
+                        make_bs_data)
+
+
+def run(emit, n=2_000_000):
+    s = Suite(emit)
+    d = make_bs_data(n)
+    want = black_scholes_native(d)
+    got = black_scholes_weld(d)
+    assert abs(got - want) < 1e-4 * abs(want), (got, want)
+
+    us = time_fn(lambda: black_scholes_native(d))
+    s.record("fig5a/native_numpy", us, baseline_of="bs")
+    us = time_fn(lambda: black_scholes_weld(d))
+    s.record("fig5a/weld", us, vs="bs")

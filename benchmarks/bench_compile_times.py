@@ -1,0 +1,36 @@
+"""§7.8 — Weld compile times (IR optimization + XLA codegen) across the
+suite's programs; the paper reports 62–257 ms (mean 126 ms)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import runtime
+from repro.core.lazy import Evaluate
+
+from .common import Suite, row
+from .workloads import (black_scholes_weld_expr, make_bs_data,
+                        make_crime_data)
+from .bench_motivating import _weld_total
+
+
+def run(emit, n=100_000):
+    s = Suite(emit)
+    times = []
+
+    progs = {
+        "crimeindex": lambda: _weld_total(make_crime_data(n)).obj,
+        "blackscholes": lambda: black_scholes_weld_expr(make_bs_data(n)).obj,
+    }
+    for name, fn in progs.items():
+        runtime.clear_cache()
+        res = Evaluate(fn())
+        times.append(res.compile_ms)
+        emit(row(f"compile/{name}", res.compile_ms * 1e3,
+                 f"compile_ms={res.compile_ms:.0f}"))
+        # second evaluation hits the cache
+        res2 = Evaluate(fn())
+        assert res2.from_cache
+        emit(row(f"compile/{name}_cached", res2.compile_ms * 1e3,
+                 "cached=true"))
+    emit(row("compile/mean", float(np.mean(times)) * 1e3,
+             f"mean_ms={np.mean(times):.0f},median_ms={np.median(times):.0f}"))

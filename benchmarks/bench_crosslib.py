@@ -1,0 +1,68 @@
+"""Fig. 6a/6b — cross-library workloads (Pandas + NumPy):
+
+  6b  crime index: filter -> linear model -> total (Fig 3's workload)
+  6a  softmax-model variant: filter -> per-class linear scores ->
+      per-state aggregation of the best class score (groupby)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.frames import welddf, weldnp
+
+from .common import Suite, time_fn
+from .workloads import crime_index_native, crime_index_weld, make_crime_data
+
+
+def softmax_state_native(d, n_classes=4):
+    m = d["population"] > 500_000
+    pop = d["population"][m]
+    crime = d["crime"][m]
+    state = d["state"][m]
+    best = None
+    for k in range(n_classes):
+        score = pop * (0.1 + 0.01 * k) + crime * (2.0 - 0.1 * k)
+        best = score if best is None else np.maximum(best, score)
+    out = np.zeros(50)
+    np.add.at(out, state, best)
+    return out
+
+
+def softmax_state_weld(d, n_classes=4):
+    df = welddf.DataFrame({
+        "population": d["population"], "crime": d["crime"],
+        "state": d["state"],
+    })
+    big = df[df["population"] > 500_000]
+    pop = big["population"]
+    crime = big["crime"]
+    best = None
+    for k in range(n_classes):
+        score = pop * (0.1 + 0.01 * k) + crime * (2.0 - 0.1 * k)
+        best = score if best is None else weldnp.maximum(best, score)
+    # per-state aggregation via the fused dictmerger
+    fdf = welddf.DataFrame({"state": big["state"], "best": best})
+    return fdf.groupby_sum("state", "best", capacity=64)
+
+
+def run(emit, n=4_000_000):
+    s = Suite(emit)
+    d = make_crime_data(n)
+
+    want = crime_index_native(d)
+    got = crime_index_weld(d)
+    assert abs(got - want) < 1e-6 * abs(want)
+    us = time_fn(lambda: crime_index_native(d))
+    s.record("fig6b/native", us, baseline_of="6b")
+    us = time_fn(lambda: crime_index_weld(d))
+    s.record("fig6b/weld", us, vs="6b")
+
+    w = softmax_state_native(d)
+    g = softmax_state_weld(d)
+    for k in range(50):
+        if abs(w[k]) > 1:
+            assert abs(g.get(float(k), g.get(k, 0.0)) - w[k]) < 1e-6 * abs(w[k])
+    us = time_fn(lambda: softmax_state_native(d))
+    s.record("fig6a/native", us, baseline_of="6a")
+    us = time_fn(lambda: softmax_state_weld(d))
+    s.record("fig6a/weld", us, vs="6a")

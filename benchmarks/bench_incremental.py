@@ -1,0 +1,76 @@
+"""Fig. 7 — incremental integration: Black-Scholes with k of its 8
+operators ported to Weld (most-expensive-first, as the paper measured);
+un-ported operators run in native NumPy with materialization at every
+library boundary."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.frames import weldnp
+
+from .common import Suite, time_fn
+from .workloads import (INV_SQRT2, RISKFREE, VOL, _cnd_np, _erf_np,
+                        black_scholes_native, make_bs_data)
+
+
+def bs_partial(d, ported: int):
+    """ported = how many of the 8 ops run in Weld (expensive-first:
+    erf(d1), erf(d2), final combine, d1, log, d2, sqrt, sig_t)."""
+    s_np, k_np, t_np = d["price"], d["strike"], d["t"]
+
+    def W(x):
+        return weldnp.array(x)
+
+    def N(x):
+        return x.to_numpy() if isinstance(x, weldnp.ndarray) else x
+
+    # ops in cost order with their implementations
+    sqrt_t = np.sqrt(t_np) if ported < 7 else weldnp.sqrt(W(t_np))
+    log_sk = np.log(s_np / k_np) if ported < 5 else weldnp.log(
+        W(s_np) / W(k_np))
+    sig_t = VOL * N(sqrt_t) if ported < 8 else sqrt_t * VOL
+
+    if ported < 4:
+        d1 = (N(log_sk) + (RISKFREE + 0.5 * VOL * VOL) * t_np) / N(sig_t)
+    else:
+        d1 = ((W(N(log_sk)) if not isinstance(log_sk, weldnp.ndarray)
+               else log_sk)
+              + W(t_np) * (RISKFREE + 0.5 * VOL * VOL)) / \
+            (W(N(sig_t)) if not isinstance(sig_t, weldnp.ndarray) else sig_t)
+    if ported < 6:
+        d2 = N(d1) - N(sig_t)
+    else:
+        d2 = (d1 if isinstance(d1, weldnp.ndarray) else W(d1)) - \
+            (sig_t if isinstance(sig_t, weldnp.ndarray) else W(N(sig_t)))
+
+    if ported < 1:
+        cnd1 = _cnd_np(N(d1))
+    else:
+        x = d1 if isinstance(d1, weldnp.ndarray) else W(N(d1))
+        cnd1 = (weldnp.erf(x * INV_SQRT2) + 1.0) * 0.5
+    if ported < 2:
+        cnd2 = _cnd_np(N(d2))
+    else:
+        x = d2 if isinstance(d2, weldnp.ndarray) else W(N(d2))
+        cnd2 = (weldnp.erf(x * INV_SQRT2) + 1.0) * 0.5
+
+    if ported < 3:
+        call = s_np * N(cnd1) - k_np * np.exp(-RISKFREE * t_np) * N(cnd2)
+        return call.sum()
+    c1 = cnd1 if isinstance(cnd1, weldnp.ndarray) else W(N(cnd1))
+    c2 = cnd2 if isinstance(cnd2, weldnp.ndarray) else W(N(cnd2))
+    call = W(s_np) * c1 - W(k_np) * weldnp.exp(W(t_np) * (-RISKFREE)) * c2
+    return call.sum().item()
+
+
+def run(emit, n=500_000):
+    s = Suite(emit)
+    d = make_bs_data(n)
+    want = black_scholes_native(d)
+    base = time_fn(lambda: bs_partial(d, 0))
+    s.record("fig7/ported_0", base, baseline_of="inc")
+    for k in (1, 2, 4, 6, 8):
+        got = bs_partial(d, k)
+        assert abs(got - want) < 1e-3 * abs(want), (k, got, want)
+        us = time_fn(lambda k=k: bs_partial(d, k))
+        s.record(f"fig7/ported_{k}", us, vs="inc")

@@ -1,0 +1,45 @@
+"""Fig. 5d — logistic-regression scoring through weldflow:
+
+    native  per-op jit dispatch + materialization (TF-without-XLA)
+    xla     whole graph in one jax.jit (TF-with-XLA — literally XLA)
+    weld    graph transformer -> WeldOp -> Weld optimizer
+
+The paper's claim: Weld ≈ XLA on this workload despite Weld's generality
+(both ≫ native).  Mirrored here exactly since our "xla" IS XLA.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.frames import weldflow
+
+from .common import Suite, time_fn
+
+
+def _graph(m, w, b):
+    x = weldflow.placeholder()
+    logits = weldflow.matvec(x, weldflow.constant(w)) + b
+    probs = weldflow.sigmoid(logits)
+    return x, weldflow.reduce_mean(weldflow.log(probs))
+
+
+def run(emit, n=500_000, d=64):
+    s = Suite(emit)
+    rng = np.random.RandomState(4)
+    m = rng.rand(n, d)
+    w = rng.rand(d)
+    x, loss = _graph(m, w, 0.25)
+    feed = {x: m}
+
+    sessions = {k: weldflow.Session(k) for k in ("native", "xla", "weld")}
+    vals = {k: float(sessions[k].run(loss, feed)) for k in sessions}
+    assert abs(vals["weld"] - vals["native"]) < 1e-9
+    assert abs(vals["xla"] - vals["native"]) < 1e-9
+
+    us = time_fn(lambda: sessions["native"].run(loss, feed))
+    s.record("fig5d/native_per_op", us, baseline_of="lr")
+    us = time_fn(lambda: sessions["xla"].run(loss, feed))
+    s.record("fig5d/xla", us, vs="lr", baseline_of="xla")
+    us = time_fn(lambda: sessions["weld"].run(loss, feed))
+    s.record("fig5d/weld", us, vs="lr")
+    s.record("fig5d/weld_vs_xla", us, vs="xla")

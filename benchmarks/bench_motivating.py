@@ -1,0 +1,72 @@
+"""Fig. 3 — the motivating data-science workflow (Pandas + NumPy crime
+index) under optimization toggles:
+
+    native          eager NumPy, per-op materialization
+    weld_nofusion   Weld codegen, loop fusion disabled
+    weld_nocrosslib fusion within each library only (evaluation forced at
+                    the library boundary)
+    weld            all optimizations across both libraries
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import runtime
+from repro.core.lazy import Evaluate
+from repro.frames import welddf
+
+from .common import Suite, time_fn
+from .workloads import crime_index_native, crime_index_weld, make_crime_data
+
+
+def _weld_total(d, passes=None):
+    df = welddf.DataFrame({"population": d["population"],
+                           "crime": d["crime"]})
+    big = df[df["population"] > 500_000]
+    index = big["population"] * 0.1 + big["crime"] * 2.0
+    return index.sum()
+
+
+def _weld_crosslib_cut(d):
+    """Force evaluation at the Pandas/NumPy boundary: filtered columns
+    materialize, then the arithmetic fuses only within weldnp."""
+    df = welddf.DataFrame({"population": d["population"],
+                           "crime": d["crime"]})
+    big = df[df["population"] > 500_000]
+    import numpy as _np
+
+    from repro.frames import weldnp
+    pop = weldnp.array(_np.asarray(big["population"].evaluate()))
+    crime = weldnp.array(_np.asarray(big["crime"].evaluate()))
+    return (pop * 0.1 + crime * 2.0).sum().item()
+
+
+def run(emit, n=4_000_000):
+    s = Suite(emit)
+    d = make_crime_data(n)
+    want = crime_index_native(d)
+
+    us = time_fn(lambda: crime_index_native(d))
+    s.record("fig3/native", us, baseline_of="fig3")
+
+    def nofusion():
+        obj = _weld_total(d).obj
+        return Evaluate(obj, passes=None, optimize=False).value
+
+    # warm the caches first so timing excludes compilation (paper reports
+    # runtime; §7.8 reports compile separately)
+    from repro.core.runtime import compile_and_run  # noqa: F401
+    got = nofusion()
+    assert abs(got - want) < 1e-6 * abs(want)
+    us = time_fn(nofusion)
+    s.record("fig3/weld_nofusion", us, vs="fig3")
+
+    got = _weld_crosslib_cut(d)
+    assert abs(got - want) < 1e-6 * abs(want)
+    us = time_fn(lambda: _weld_crosslib_cut(d))
+    s.record("fig3/weld_nocrosslib", us, vs="fig3")
+
+    got = crime_index_weld(d)
+    assert abs(got - want) < 1e-6 * abs(want)
+    us = time_fn(lambda: crime_index_weld(d))
+    s.record("fig3/weld", us, vs="fig3")

@@ -1,0 +1,20 @@
+"""Fig. 5b — Pandas zipcode cleaning: slice to 5 digits, drop
+nonexistent codes, count distinct.  Native = eager NumPy column ops;
+Weld = welddf fused program (numeric-code adaptation per DESIGN.md §2)."""
+from __future__ import annotations
+
+from .common import Suite, time_fn
+from .workloads import make_zip_data, pandas_clean_native, pandas_clean_weld
+
+
+def run(emit, n=1_000_000):
+    s = Suite(emit)
+    d = make_zip_data(n)
+    want = pandas_clean_native(d)
+    got = pandas_clean_weld(d)
+    assert got == want, (got, want)
+
+    us = time_fn(lambda: pandas_clean_native(d))
+    s.record("fig5b/native_pandas", us, baseline_of="pd")
+    us = time_fn(lambda: pandas_clean_weld(d))
+    s.record("fig5b/weld", us, vs="pd")

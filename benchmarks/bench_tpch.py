@@ -1,0 +1,130 @@
+"""Fig. 5c / Fig. 8 — TPC-H Q1 and Q6 on a synthetic lineitem table.
+
+    native      eager NumPy relational operators (materialized masks)
+    weld        weldrel operators fused by Weld (one pass per query)
+    handcoded   a hand-fused jax.jit kernel (the paper's "C baseline")
+    weld_pallas Q6 through the filter_reduce kernel (TPU target form,
+                interpret-validated; CPU timing is indicative only)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.frames import weldrel
+from repro.kernels import ops as kops
+
+from .common import Suite, time_fn
+
+
+def make_lineitem(n=2_000_000, seed=3):
+    rng = np.random.RandomState(seed)
+    return {
+        "ship": rng.randint(0, 2557, n).astype(np.int64),
+        "disc": rng.uniform(0, 0.1, n),
+        "qty": rng.uniform(1, 50, n),
+        "price": rng.uniform(100, 10_000, n),
+        "tax": rng.uniform(0, 0.08, n),
+        "rf": rng.randint(0, 3, n).astype(np.int64),
+        "ls": rng.randint(0, 2, n).astype(np.int64),
+    }
+
+
+# -- Q6 -------------------------------------------------------------------------
+
+
+def q6_native(c):
+    m = (c["ship"] >= 365) & (c["ship"] < 730)
+    m &= (c["disc"] >= 0.05) & (c["disc"] <= 0.07)
+    m &= c["qty"] < 24.0
+    return (c["price"][m] * c["disc"][m]).sum()
+
+
+def q6_weld(c):
+    t = weldrel.Table(c)
+    q = weldrel.Query(t).filter(
+        (t.col("ship") >= 365) & (t.col("ship") < 730)
+        & (t.col("disc") >= 0.05) & (t.col("disc") <= 0.07)
+        & (t.col("qty") < 24.0)
+    )
+    return q.agg({"rev": (t.col("price") * t.col("disc"), "+")})["rev"]
+
+
+def _q6_hand(ship, disc, qty, price):
+    m = (ship >= 365) & (ship < 730) & (disc >= 0.05) & (disc <= 0.07) \
+        & (qty < 24.0)
+    return jnp.sum(jnp.where(m, price * disc, 0.0))
+
+
+# -- Q1 -------------------------------------------------------------------------
+
+
+def q1_native(c):
+    m = c["ship"] <= 2000
+    out = {}
+    rf, ls = c["rf"][m], c["ls"][m]
+    qty, price = c["qty"][m], c["price"][m]
+    disc, tax = c["disc"][m], c["tax"][m]
+    dp = price * (1 - disc)
+    ch = dp * (1 + tax)
+    for r in range(3):
+        for l in range(2):
+            g = (rf == r) & (ls == l)
+            out[(r, l)] = (qty[g].sum(), price[g].sum(), dp[g].sum(),
+                           ch[g].sum(), int(g.sum()))
+    return out
+
+
+def q1_weld(c):
+    t = weldrel.Table(c)
+    dp = t.col("price") * (1.0 - t.col("disc"))
+    ch = dp * (1.0 + t.col("tax"))
+    q = weldrel.Query(t).filter(t.col("ship") <= 2000)
+    return q.group_agg(
+        [t.col("rf"), t.col("ls")],
+        {"sq": (t.col("qty"), "+"), "sb": (t.col("price"), "+"),
+         "sdp": (dp, "+"), "sch": (ch, "+")},
+        capacity=16,
+    )
+
+
+def run(emit, n=1_000_000):
+    s = Suite(emit)
+    c = make_lineitem(n)
+
+    want = q6_native(c)
+    got = q6_weld(c)
+    assert abs(got - want) < 1e-6 * max(abs(want), 1)
+    us = time_fn(lambda: q6_native(c))
+    s.record("fig8/q6_native", us, baseline_of="q6")
+    us = time_fn(lambda: q6_weld(c))
+    s.record("fig8/q6_weld", us, vs="q6")
+
+    hand = jax.jit(_q6_hand)
+    args = [jnp.asarray(c[k]) for k in ("ship", "disc", "qty", "price")]
+    hand(*args).block_until_ready()
+    us = time_fn(lambda: hand(*args).block_until_ready())
+    s.record("fig8/q6_handcoded", us, vs="q6")
+
+    cols = jnp.stack([jnp.asarray(c["ship"], jnp.float64),
+                      jnp.asarray(c["disc"]), jnp.asarray(c["qty"])])
+    lo = jnp.asarray([365.0, 0.05, 0.0])
+    hi = jnp.asarray([730.0, 0.07 + 1e-12, 24.0])
+    val = jnp.asarray(c["price"] * 1.0) * 0 + jnp.asarray(c["price"])
+    val = jnp.asarray(c["price"] * c["disc"])
+    got = kops.filter_reduce_q6(cols, lo, hi, val, impl="ref")
+    assert abs(float(got) - want) < 1e-6 * max(abs(want), 1)
+    us = time_fn(lambda: jax.block_until_ready(
+        kops.filter_reduce_q6(cols, lo, hi, val, impl="ref")))
+    s.record("fig8/q6_kernel_ref", us, vs="q6")
+
+    w1 = q1_native(c)
+    g1 = q1_weld(c)
+    for k in w1:
+        assert abs(g1[k][0] - w1[k][0]) < 1e-6 * max(w1[k][0], 1)
+        assert g1[k][4] == w1[k][4]
+    us = time_fn(lambda: q1_native(c))
+    s.record("fig8/q1_native", us, baseline_of="q1")
+    us = time_fn(lambda: q1_weld(c))
+    s.record("fig8/q1_weld", us, vs="q1")

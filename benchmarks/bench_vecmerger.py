@@ -1,0 +1,60 @@
+"""Fig. 11 — builder implementation strategies for the vecmerger
+(count occurrences of each key), swept over the number of distinct keys.
+
+The paper's point: the best strategy is platform-specific, and the
+builder abstraction lets the backend choose.  Strategies here:
+
+    native        NumPy np.add.at (the library a user would call)
+    scatter       XLA scatter-add (jnp .at[].add) — "global, atomic-free"
+    onehot_mxu    one-hot matmul accumulation — the TPU MXU strategy of
+                  kernels/segment_reduce.py (timed via its jnp form)
+    sort_segment  sort + segment-sum — the dictmerger lowering
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import Suite, time_fn
+
+
+def run(emit, n=1_000_000):
+    s = Suite(emit)
+    rng = np.random.RandomState(6)
+
+    for k in (16, 256, 4096, 65_536):
+        keys = rng.randint(0, k, n).astype(np.int32)
+        ones = np.ones(n, np.float32)
+        kj = jnp.asarray(keys)
+        oj = jnp.asarray(ones)
+
+        def native():
+            out = np.zeros(k, np.float32)
+            np.add.at(out, keys, ones)
+            return out
+
+        scatter = jax.jit(
+            lambda kk, vv: jnp.zeros(k, jnp.float32).at[kk].add(vv))
+        onehot = jax.jit(
+            lambda kk, vv: jnp.einsum(
+                "nk,n->k",
+                jax.nn.one_hot(kk, k, dtype=jnp.float32), vv))
+        sortseg = jax.jit(
+            lambda kk, vv: jax.ops.segment_sum(
+                vv[jnp.argsort(kk)], jnp.sort(kk), num_segments=k))
+
+        strategies = [("scatter", scatter), ("sort_segment", sortseg)]
+        if k <= 4096:  # one-hot blows up past the VMEM-tile regime
+            strategies.insert(1, ("onehot_mxu", onehot))
+
+        want = native()
+        for name, fn in strategies:
+            got = np.asarray(fn(kj, oj))
+            np.testing.assert_allclose(got, want, rtol=1e-5)
+
+        base = time_fn(native)
+        s.record(f"fig11/k{k}/native", base, baseline_of=f"vm{k}")
+        for name, fn in strategies:
+            us = time_fn(lambda fn=fn: jax.block_until_ready(fn(kj, oj)))
+            s.record(f"fig11/k{k}/{name}", us, vs=f"vm{k}")

@@ -1,0 +1,50 @@
+"""Shared benchmark utilities: robust timing + CSV rows.
+
+Every benchmark emits ``name,us_per_call,derived`` rows where `derived`
+carries the figure-relevant ratio (e.g. speedup vs the native baseline).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Optional
+
+import numpy as np
+
+
+def time_fn(fn: Callable, *, warmup: int = 2, iters: int = 5,
+            min_time_s: float = 0.05) -> float:
+    """Median wall time per call, in microseconds."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        n = 0
+        while True:
+            fn()
+            n += 1
+            dt = time.perf_counter() - t0
+            if dt >= min_time_s:
+                break
+        times.append(dt / n)
+    return float(np.median(times) * 1e6)
+
+
+def row(name: str, us: float, derived: str = "") -> str:
+    return f"{name},{us:.1f},{derived}"
+
+
+class Suite:
+    def __init__(self, emit):
+        self.emit = emit
+        self.baselines = {}
+
+    def record(self, name: str, us: float, baseline_of: Optional[str] = None,
+               vs: Optional[str] = None):
+        derived = ""
+        if baseline_of is not None:
+            self.baselines[baseline_of] = us
+        if vs is not None and vs in self.baselines:
+            derived = f"speedup_vs_{vs}={self.baselines[vs] / us:.2f}x"
+        self.emit(row(name, us, derived))
+        return us

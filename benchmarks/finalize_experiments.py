@@ -1,0 +1,107 @@
+"""Fill EXPERIMENTS.md placeholders from dryrun_results.json,
+perf_log.json and bench_output.txt.
+
+    PYTHONPATH=src python -m benchmarks.finalize_experiments
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.roofline.report import (  # noqa: E402
+    dryrun_table, roofline_table, skips_table,
+)
+
+
+def bench_summary(path="bench_output.txt") -> str:
+    if not os.path.exists(path):
+        return "_bench_output.txt not yet generated_"
+    rows = ["| benchmark | us/call | derived |", "|---|---|---|"]
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith(("name,", "#")):
+                continue
+            parts = line.split(",", 2)
+            if len(parts) == 3:
+                rows.append(f"| {parts[0]} | {parts[1]} | {parts[2]} |")
+    return "\n".join(rows)
+
+
+def perf_log(path="benchmarks/perf_log.json") -> str:
+    if not os.path.exists(path):
+        return "_perf_log.json not yet generated_"
+    with open(path) as f:
+        data = json.load(f)
+    out = []
+    for cell, log in data.get("cells", {}).items():
+        out.append(f"### {cell}\n")
+        out.append("| change | hypothesis | t_compute | t_memory | "
+                   "t_collective | bound | Δbound vs baseline | verdict |")
+        out.append("|---|---|---|---|---|---|---|---|")
+        base = None
+        for r in log["runs"]:
+            rl = r.get("roofline") or {}
+            bound = rl.get("bound_s")
+            if r["label"] == "baseline":
+                base = bound
+            if not r.get("ok"):
+                out.append(f"| {r['label']} | {r['hypothesis'][:60]} | - | "
+                           f"- | - | FAIL | - | {r.get('error', '')[:40]} |")
+                continue
+            delta = ""
+            verdict = ""
+            if base and bound:
+                pct = (base - bound) / base * 100
+                delta = f"{pct:+.1f}%"
+                verdict = ("confirmed" if pct > 2 else
+                           "refuted" if pct < -2 else "neutral")
+            out.append(
+                f"| {r['label']} | {r['hypothesis'][:60]} | "
+                f"{rl.get('t_compute_s', 0):.2f}s | "
+                f"{rl.get('t_memory_s', 0):.2f}s | "
+                f"{rl.get('t_collective_s', 0):.2f}s | "
+                f"{bound:.2f}s | {delta} | {verdict} |"
+            )
+        out.append("")
+    return "\n".join(out)
+
+
+def main():
+    with open("benchmarks/dryrun_results.json") as f:
+        results = json.load(f)
+
+    with open("EXPERIMENTS.md") as f:
+        doc = f.read()
+
+    n_ok = sum(1 for r in results.values()
+               if r.get("ok") and "skipped" not in r)
+    n_skip = sum(1 for r in results.values() if "skipped" in r)
+    n_fail = sum(1 for r in results.values() if not r.get("ok"))
+
+    dry = (
+        f"Cells: {len(results)} — compiled OK: **{n_ok}**, skipped per "
+        f"assignment rules: **{n_skip}**, failed: **{n_fail}**.\n\n"
+        + dryrun_table(results)
+        + "\n\n### Skipped cells (assignment rules)\n\n"
+        + skips_table(results)
+    )
+    roof = roofline_table(results)
+
+    doc = re.sub(r"<!-- BENCH_SUMMARY -->", lambda m: bench_summary(), doc)
+    doc = re.sub(r"<!-- DRYRUN_TABLE -->", lambda m: dry, doc)
+    doc = re.sub(r"<!-- ROOFLINE_TABLE -->", lambda m: roof, doc)
+    doc = re.sub(r"<!-- PERF_LOG -->", lambda m: perf_log(), doc)
+
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(doc)
+    print("EXPERIMENTS.md updated "
+          f"({n_ok} ok / {n_skip} skip / {n_fail} fail)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+"""§Perf hillclimbing driver: re-lower a dry-run cell under candidate
+changes and report the roofline deltas.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --cell dbrx-132b/train_4k \
+        --out benchmarks/perf_log.json
+
+Each experiment is (name, knobs); knobs:
+  cfg:<field>=<value>      ModelConfig patch (attn_chunk, remat, ...)
+  rules:<axis>=a,b|none    sharding-rule override for a logical axis
+  seq_shard                shard token sequence over 'model' (SP)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.launch.dryrun import dryrun_cell
+from repro.launch.mesh import make_production_mesh
+
+#: candidate ladders per chosen cell: (label, hypothesis, kwargs)
+EXPERIMENTS: Dict[str, List[Tuple[str, str, dict]]] = {
+    # most collective-bound cell: MoE EP traffic dominates
+    "dbrx-132b/train_4k": [
+        ("baseline", "paper-faithful: EP over model, ZeRO-1, remat", {}),
+        ("cap_1.0",
+         "capacity factor 1.25->1.0 cuts dispatch/combine and expert "
+         "matmul bytes ~20% with bounded drop risk",
+         {"cfg_overrides": {"capacity_factor": 1.0}}),
+        ("experts_replicated",
+         "replicating experts kills the EP all-to-all but multiplies "
+         "param/opt bytes by 16 — expect memory to explode (refutation "
+         "probe for 'collectives are the problem')",
+         {"sharding_overrides": {"experts": []}}),
+        ("seq_shard",
+         "sequence-sharded activations shrink per-dev layer I/O and the "
+         "gather sizes feeding the router",
+         {"seq_shard_inputs": True}),
+        ("cap1.0+seq_shard",
+         "compose the two confirmed wins",
+         {"cfg_overrides": {"capacity_factor": 1.0},
+          "seq_shard_inputs": True}),
+    ],
+    # worst memory/compute ratio: long-context prefill
+    "llama3.2-3b/prefill_32k": [
+        ("baseline", "paper-faithful: chunked attention, chunk=2048", {}),
+        ("chunk_4096",
+         "bigger kv chunks halve the number of passes over q/acc "
+         "(bytes-accessed ~ nck * q_bytes), VMEM-feasible at 4k",
+         {"cfg_overrides": {"attn_chunk": 4096}}),
+        ("chunk_8192",
+         "same direction, 4x fewer passes than baseline",
+         {"cfg_overrides": {"attn_chunk": 8192}}),
+        ("seq_shard",
+         "shard the 32k sequence over 'model': per-dev activation bytes "
+         "drop 16x; attention must all-gather kv once per layer — net "
+         "win predicted on the memory term",
+         {"seq_shard_inputs": True}),
+        ("chunk_8192+seq_shard",
+         "compose",
+         {"cfg_overrides": {"attn_chunk": 8192}, "seq_shard_inputs": True}),
+    ],
+    # the paper's-technique representative: dense train step
+    "starcoder2-15b/train_4k": [
+        ("baseline", "paper-faithful: TP over model, ZeRO-1, remat", {}),
+        ("no_remat",
+         "remat trades 4/3x flops for activation memory; with 16GB/chip "
+         "headroom the recompute is pure waste — expect compute term "
+         "down 25%",
+         {"cfg_overrides": {"remat": False}}),
+        ("seq_shard",
+         "SP on layer boundaries cuts per-dev activation traffic",
+         {"seq_shard_inputs": True}),
+        ("attn_chunk_4096",
+         "single-chunk attention at 4k seq: one pass, fewer "
+         "rescale-corrections",
+         {"cfg_overrides": {"attn_chunk": 4096}}),
+        ("no_remat+seq_shard",
+         "compose the confirmed wins",
+         {"cfg_overrides": {"remat": False}, "seq_shard_inputs": True}),
+    ],
+}
+
+
+def run_cell(cell: str, out_path: str, experiments=None):
+    arch, shape = cell.split("/")
+    mesh = make_production_mesh(multi_pod=False)
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            prev = json.load(f)
+        if isinstance(prev, dict) and prev.get("cells"):
+            log_all = prev
+        else:
+            log_all = {"cells": {}}
+    else:
+        log_all = {"cells": {}}
+    # append to an existing cell ladder instead of replacing it
+    log = log_all["cells"].get(cell, {"cell": cell, "runs": []})
+
+    for label, hypothesis, kw in (experiments or EXPERIMENTS[cell]):
+        t0 = time.time()
+        rec = dryrun_cell(arch, shape, mesh, **kw)
+        entry = {
+            "label": label,
+            "hypothesis": hypothesis,
+            "knobs": {k: str(v) for k, v in kw.items()},
+            "ok": rec.get("ok"),
+            "error": rec.get("error"),
+            "roofline": rec.get("roofline"),
+            "collectives": rec.get("collectives"),
+            "memory_analysis": rec.get("memory_analysis"),
+            "param_bytes_per_dev": rec.get("param_bytes_per_dev"),
+            "wall_s": time.time() - t0,
+        }
+        log["runs"].append(entry)
+        rl = entry["roofline"] or {}
+        print(f"[hillclimb] {cell} :: {label}: "
+              f"ok={entry['ok']} "
+              f"c={rl.get('t_compute_s', 0):.3f}s "
+              f"m={rl.get('t_memory_s', 0):.3f}s "
+              f"x={rl.get('t_collective_s', 0):.3f}s "
+              f"bound={rl.get('bound_s', 0):.3f}s ({rl.get('bottleneck')})",
+              flush=True)
+        log_all["cells"][cell] = log
+        with open(out_path, "w") as f:
+            json.dump(log_all, f, indent=1)
+    return log
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default="all")
+    ap.add_argument("--out", default="benchmarks/perf_log.json")
+    args = ap.parse_args()
+    cells = list(EXPERIMENTS) if args.cell == "all" else [args.cell]
+    for cell in cells:
+        run_cell(cell, args.out)
+
+
+if __name__ == "__main__":
+    main()

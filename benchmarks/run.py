@@ -1,0 +1,65 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig3,fig8] [--scale 0.5]
+
+Prints ``name,us_per_call,derived`` CSV.  Every benchmark validates its
+Weld result against the native baseline before timing.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = [
+    ("fig3_motivating", "benchmarks.bench_motivating"),
+    ("fig5a_blackscholes", "benchmarks.bench_blackscholes"),
+    ("fig5b_pandas_clean", "benchmarks.bench_pandas_clean"),
+    ("fig5d_logreg", "benchmarks.bench_logreg"),
+    ("fig6_crosslib", "benchmarks.bench_crosslib"),
+    ("fig7_incremental", "benchmarks.bench_incremental"),
+    ("fig8_tpch", "benchmarks.bench_tpch"),
+    ("fig8e_pagerank", "benchmarks.bench_pagerank"),
+    ("fig10_ablations", "benchmarks.bench_ablations"),
+    ("fig11_vecmerger", "benchmarks.bench_vecmerger"),
+    ("compile_times", "benchmarks.bench_compile_times"),
+    ("fused_adamw", "benchmarks.bench_fused_adamw"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated substring filter on module names")
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="scale default dataset sizes")
+    args = ap.parse_args()
+    only = args.only.split(",") if args.only else None
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    failures = []
+    for name, modpath in MODULES:
+        if only and not any(o in name for o in only):
+            continue
+        print(f"# {name}", file=sys.stderr, flush=True)
+        mod = __import__(modpath, fromlist=["run"])
+        try:
+            import inspect
+            sig = inspect.signature(mod.run)
+            kw = {}
+            if "n" in sig.parameters and args.scale != 1.0:
+                default_n = sig.parameters["n"].default
+                kw["n"] = max(int(default_n * args.scale), 1000)
+            mod.run(lambda line: print(line, flush=True), **kw)
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            print(f"{name},NaN,ERROR:{e!r}", flush=True)
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+    if failures:
+        print(f"# FAILURES: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

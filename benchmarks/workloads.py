@@ -1,0 +1,143 @@
+"""The paper's workloads, shared across benchmark modules.
+
+Each workload has a `native` (eager NumPy — the paper's "optimized C
+operators composed through the function-call interface") and a `weld`
+variant; both return a comparable scalar for validation.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.frames import welddf, weldnp
+
+N_DEFAULT = 2_000_000
+
+
+def make_crime_data(n=N_DEFAULT, seed=0):
+    rng = np.random.RandomState(seed)
+    return {
+        "population": rng.randint(0, 1_000_000, n).astype(np.float64),
+        "crime": rng.rand(n),
+        "state": rng.randint(0, 50, n).astype(np.int64),
+    }
+
+
+def crime_index_native(d):
+    """Fig 3 / 6b: filter + linear model + aggregate, eager NumPy."""
+    m = d["population"] > 500_000          # pass 1
+    pop = d["population"][m]               # pass 2 (materialize)
+    crime = d["crime"][m]                  # pass 3
+    a = pop * 0.1                          # pass 4
+    b = crime * 2.0                        # pass 5
+    idx = a + b                            # pass 6
+    return idx.sum()                       # pass 7
+
+
+def crime_index_weld(d, collect_stats=None):
+    df = welddf.DataFrame({"population": d["population"],
+                           "crime": d["crime"]})
+    big = df[df["population"] > 500_000]
+    index = big["population"] * 0.1 + big["crime"] * 2.0
+    total = index.sum()
+    if collect_stats is not None:
+        from repro.core.lazy import Evaluate
+        return Evaluate(total.obj, collect_stats=collect_stats).value
+    return total.item()
+
+
+# -- Black-Scholes (Fig 5a) ----------------------------------------------------
+
+_A1, _A2, _A3, _A4, _A5, _P = (
+    0.254829592, -0.284496736, 1.421413741, -1.453152027, 1.061405429,
+    0.3275911,
+)
+
+
+def _erf_np(x):
+    """Vectorized Abramowitz–Stegun erf — the 'optimized C' analogue the
+    native baseline would ship (numpy has no erf; scipy absent here)."""
+    s = np.sign(x)
+    x = np.abs(x)
+    t = 1.0 / (1.0 + _P * x)
+    y = 1.0 - (((((_A5 * t + _A4) * t) + _A3) * t + _A2) * t + _A1) * t \
+        * np.exp(-x * x)
+    return s * y
+
+
+def make_bs_data(n=N_DEFAULT, seed=1):
+    rng = np.random.RandomState(seed)
+    return {
+        "price": rng.uniform(10, 200, n),
+        "strike": rng.uniform(10, 200, n),
+        "t": rng.uniform(0.1, 2.0, n),
+    }
+
+
+RISKFREE, VOL = 0.02, 0.30
+INV_SQRT2 = 1.0 / np.sqrt(2.0)
+
+
+def _cnd_np(x):
+    return 0.5 * (1.0 + _erf_np(x * INV_SQRT2))
+
+
+def black_scholes_native(d):
+    """Eight eager NumPy operator calls, intermediates materialized."""
+    s, k, t = d["price"], d["strike"], d["t"]
+    sqrt_t = np.sqrt(t)                                   # op 1
+    log_sk = np.log(s / k)                                # op 2 (+div)
+    sig_t = VOL * sqrt_t                                  # op 3
+    d1 = (log_sk + (RISKFREE + 0.5 * VOL * VOL) * t) / sig_t   # op 4
+    d2 = d1 - sig_t                                       # op 5
+    cnd1 = _cnd_np(d1)                                    # op 6 (erf)
+    cnd2 = _cnd_np(d2)                                    # op 7 (erf)
+    call = s * cnd1 - k * np.exp(-RISKFREE * t) * cnd2    # op 8
+    return call.sum()
+
+
+def _cnd_w(x):
+    return (weldnp.erf(x * INV_SQRT2) + 1.0) * 0.5
+
+
+def black_scholes_weld_expr(d):
+    s = weldnp.array(d["price"])
+    k = weldnp.array(d["strike"])
+    t = weldnp.array(d["t"])
+    sqrt_t = weldnp.sqrt(t)
+    log_sk = weldnp.log(s / k)
+    sig_t = sqrt_t * VOL
+    d1 = (log_sk + t * (RISKFREE + 0.5 * VOL * VOL)) / sig_t
+    d2 = d1 - sig_t
+    call = s * _cnd_w(d1) - k * weldnp.exp(t * (-RISKFREE)) * _cnd_w(d2)
+    return call.sum()
+
+
+def black_scholes_weld(d):
+    return black_scholes_weld_expr(d).item()
+
+
+# -- Pandas zipcode cleaning (Fig 5b) -------------------------------------------
+
+
+def make_zip_data(n=N_DEFAULT, seed=2):
+    rng = np.random.RandomState(seed)
+    return {"zip": rng.randint(1, 100_000_000, n).astype(np.int64),
+            "value": rng.rand(n)}
+
+
+def pandas_clean_native(d):
+    z = d["zip"]
+    width = np.where(z > 0, np.floor(np.log10(np.maximum(z, 1))) + 1, 1)
+    drop = np.maximum(width - 5, 0).astype(np.int64)
+    z5 = (z // np.power(10, drop)).astype(np.int64)        # slice to 5
+    valid = (z5 >= 501) & (z5 <= 99_950)                   # drop nonexistent
+    zv = z5[valid]
+    return np.unique(zv).shape[0]
+
+
+def pandas_clean_weld(d):
+    df = welddf.DataFrame({"zip": d["zip"], "value": d["value"]})
+    z5 = df.slice_code("zip", 5)
+    df2 = welddf.DataFrame({"zip5": z5})
+    fdf = df2[(df2["zip5"] >= 501) & (df2["zip5"] <= 99_950)]
+    return fdf.unique("zip5", capacity=1 << 17).shape[0]

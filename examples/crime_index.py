@@ -1,0 +1,40 @@
+"""The paper's motivating workload (Fig. 3) end to end, with timings:
+native NumPy/Pandas vs Weld without fusion vs Weld — reproducing the
+"order of magnitude below hardware limits due to data movement" claim.
+
+    PYTHONPATH=src python examples/crime_index.py [n_rows]
+"""
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, ".")
+from benchmarks.common import time_fn  # noqa: E402
+from benchmarks.workloads import (  # noqa: E402
+    crime_index_native, crime_index_weld, make_crime_data,
+)
+from repro.core.lazy import Evaluate  # noqa: E402
+from benchmarks.bench_motivating import _weld_total  # noqa: E402
+
+n = int(sys.argv[1]) if len(sys.argv) > 1 else 4_000_000
+d = make_crime_data(n)
+print(f"rows: {n:,}  (~{n * 24 / 1e6:.0f} MB across three columns)")
+
+want = crime_index_native(d)
+t_native = time_fn(lambda: crime_index_native(d)) / 1e3
+
+got = Evaluate(_weld_total(d).obj, optimize=False).value
+assert abs(got - want) < 1e-6 * abs(want)
+t_nofuse = time_fn(
+    lambda: Evaluate(_weld_total(d).obj, optimize=False).value) / 1e3
+
+got = crime_index_weld(d)
+assert abs(got - want) < 1e-6 * abs(want)
+t_weld = time_fn(lambda: crime_index_weld(d)) / 1e3
+
+print(f"{'native NumPy+Pandas':28s} {t_native:8.1f} ms   1.0x")
+print(f"{'Weld (no optimization)':28s} {t_nofuse:8.1f} ms   "
+      f"{t_native / t_nofuse:.1f}x")
+print(f"{'Weld (fused, one pass)':28s} {t_weld:8.1f} ms   "
+      f"{t_native / t_weld:.1f}x")

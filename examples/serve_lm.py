@@ -1,0 +1,26 @@
+"""Batched serving: prefill a batch of prompts, then greedy-decode with
+the static KV cache — the same `decode_step` the decode_32k/long_500k
+dry-run cells lower.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch zamba2-1.2b
+"""
+import argparse
+
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=32)
+    args = ap.parse_args()
+    out = serve(args.arch, smoke=True, batch=args.batch,
+                prompt_len=args.prompt_len, gen_len=args.gen_len)
+    print(f"generated shape: {out['tokens'].shape}; "
+          f"{out['tok_per_s']:.1f} tok/s decode")
+
+
+if __name__ == "__main__":
+    main()

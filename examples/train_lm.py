@@ -1,0 +1,40 @@
+"""End-to-end training driver: train a ~10M-parameter llama-family model
+for a few hundred steps on CPU with the full production stack —
+sharding rules, AdamW + cosine schedule, grad clipping, deterministic
+data pipeline, async checkpointing, straggler monitor.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/weld_lm_ckpt")
+    args = ap.parse_args()
+
+    out = train(
+        "llama3.2-3b",          # smoke variant: 2L x 64d (~10M with vocab)
+        smoke=True,
+        steps=args.steps,
+        global_batch=16,
+        seq_len=128,
+        accum=1,
+        peak_lr=3e-3,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=100,
+        log_every=20,
+    )
+    losses = out["losses"]
+    print(f"\nfirst-10 mean loss: {sum(losses[:10]) / 10:.4f}")
+    print(f"last-10  mean loss: {sum(losses[-10:]) / 10:.4f}")
+    print(f"straggler monitor : {out['straggler']}")
+    assert sum(losses[-10:]) < sum(losses[:10]), "loss did not decrease"
+    print("loss decreased ✓  (resume with the same --ckpt-dir to continue)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+# Weld core: the paper's primary contribution — a data-parallel IR
+# (loops + builders), a lazy runtime API (WeldObject DAG), and an
+# optimizer + JAX backend that fuse cross-library fragments into one
+# XLA program per evaluation point.
+from . import ir, macros, wtypes  # noqa: F401
+from .cudf import register_cudf  # noqa: F401
+from .lazy import (  # noqa: F401
+    ArrayEncoder,
+    Encoder,
+    Evaluate,
+    FreeWeldObject,
+    FreeWeldResult,
+    GetObjectType,
+    NewWeldObject,
+    WeldObject,
+    WeldResult,
+    ScalarEncoder,
+)

@@ -1,0 +1,3 @@
+"""JAX backend: lowers optimized Weld IR to fused jnp/lax programs."""
+from .jaxgen import WeldCompileError, WeldMemoryError, emit_program  # noqa: F401
+from .values import WVec, WDict, WGroup  # noqa: F401

@@ -1,0 +1,909 @@
+"""Lower optimized Weld IR to a fused JAX program.
+
+The emitter *interprets the IR while tracing*: running the emitted closure
+under ``jax.jit`` stages one XLA program for the whole multi-library
+workflow — the Weld evaluation point becomes exactly one compiled
+executable, which is the paper's central mechanism.
+
+Loop lowering ("vectorization", paper Table 3, adapted per DESIGN.md §2):
+
+* A parallel ``for`` is evaluated in **vector form**: the element parameter
+  is bound to the whole (tiled-by-XLA) array, builders become accumulator
+  objects collecting masked contributions, and conditional control flow
+  becomes predication masks.  This is the TPU-native analogue of the
+  paper's AVX2 vectorization — the VPU consumes whole-array ops.
+* Bodies that use their element as a *vector* (nested loops, e.g. a dot
+  per row) fall back to ``jax.vmap`` over a scalar-world evaluation —
+  the un-nesting transform the paper applies for its GPU backend.
+* There is deliberately no sequential fallback: anything else raises
+  ``WeldCompileError`` (see DESIGN.md §8.2 — SPMD hardware has no cheap
+  dynamic parallelism, so we refuse rather than silently serialize).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import ir
+from .. import wtypes as wt
+from ..cudf import has_cudf, lookup_cudf_jax
+from .values import WDict, WGroup, WVec
+
+
+class WeldCompileError(RuntimeError):
+    pass
+
+
+class WeldMemoryError(RuntimeError):
+    pass
+
+
+class _NeedsVmap(Exception):
+    """Raised when a loop body needs its element as a vector."""
+
+
+_NP_OF = {
+    "bool": jnp.bool_, "i8": jnp.int8, "i32": jnp.int32,
+    "i64": jnp.int64, "f32": jnp.float32, "f64": jnp.float64,
+}
+
+
+def _jdtype(ty: wt.Scalar):
+    return _NP_OF[ty.kind]
+
+
+# ---------------------------------------------------------------------------
+# Builder accumulators
+# ---------------------------------------------------------------------------
+
+
+class _Acc:
+    """Base accumulator.  Contributions are ('single', value) or
+    ('batch', value, mask_or_None); struct values are tuples of arrays."""
+
+    def __init__(self, bt: wt.BuilderType):
+        self.bt = bt
+        self.contribs: List[tuple] = []
+
+    def add_single(self, value, mask=None):
+        self.contribs.append(("single", value, mask))
+
+    def add_batch(self, value, mask):
+        self.contribs.append(("batch", value, mask))
+
+
+class _MergerAcc(_Acc):
+    def __init__(self, bt: wt.Merger, init=None):
+        super().__init__(bt)
+        self.init = init
+
+    def finalize(self):
+        acc = _identity_value(self.bt.elem, self.bt.op)
+        if self.init is not None:
+            acc = _combine(self.bt.op, acc, self.init)
+        for kind, value, mask in self.contribs:
+            if kind == "single":
+                if mask is not None:
+                    value = _select_struct(mask, value,
+                                           _identity_value(self.bt.elem, self.bt.op))
+                acc = _combine(self.bt.op, acc, value)
+            else:
+                red = _masked_reduce(self.bt, value, mask)
+                acc = _combine(self.bt.op, acc, red)
+        return acc
+
+
+class _VecBuilderAcc(_Acc):
+    def __init__(self, bt: wt.VecBuilder):
+        super().__init__(bt)
+        self.segments: List[tuple] = []  # sealed per enclosing loop
+
+    def seal(self):
+        """Called when an enclosing For finishes: fix the ordering of the
+        contributions it produced (interleaved across merge sites)."""
+        if not self.contribs:
+            return
+        batches = [(v, m) for k, v, m in self.contribs if k == "batch"]
+        singles = [(v, m) for k, v, m in self.contribs if k == "single"]
+        self.contribs = []
+        if batches:
+            vals = _interleave([b[0] for b in batches])
+            masks = [
+                b[1] if b[1] is not None
+                else jnp.ones(_lead(b[0]), dtype=bool)
+                for b in batches
+            ]
+            mask = _interleave(masks) if any(
+                b[1] is not None for b in batches
+            ) else None
+            self.segments.append(("batch", vals, mask))
+        for v, m in singles:
+            self.segments.append(("single", v, m))
+
+    def finalize(self):
+        self.seal()
+        if not self.segments:
+            dt = _jdtype(self.bt.elem) if isinstance(self.bt.elem, wt.Scalar) else None
+            if dt is None:
+                raise WeldCompileError("empty struct vecbuilder")
+            return WVec(jnp.zeros((0,), dtype=dt))
+        if len(self.segments) == 1 and self.segments[0][0] == "batch":
+            _, vals, mask = self.segments[0]
+            if mask is None:
+                return WVec(vals)
+            return _compact(vals, mask)
+        # general: concatenate segments (singles become length-1 batches)
+        parts_v, parts_m = [], []
+        for kind, v, m in self.segments:
+            if kind == "single":
+                v = jax.tree_util.tree_map(lambda a: jnp.asarray(a)[None], v)
+                m = jnp.ones((1,), bool) if m is None else jnp.asarray(m)[None]
+            else:
+                m = jnp.ones(_lead(v), bool) if m is None else m
+            parts_v.append(v)
+            parts_m.append(m)
+        vals = _concat_struct(parts_v)
+        mask = jnp.concatenate(parts_m)
+        return _compact(vals, mask)
+
+
+class _VecMergerAcc(_Acc):
+    def __init__(self, bt: wt.VecMerger, base):
+        super().__init__(bt)
+        if not isinstance(base, WVec):
+            raise WeldCompileError("vecmerger needs a vector base")
+        if not base.is_dense:
+            raise WeldCompileError("vecmerger base must be dense")
+        self.base = base
+
+    def finalize(self):
+        out = self.base.data
+        ident = _identity_value(self.bt.elem, self.bt.op)
+        for kind, value, mask in self.contribs:
+            idx, v = value  # struct {i64, T}
+            if kind == "single":
+                idx = jnp.asarray(idx)[None]
+                v = jax.tree_util.tree_map(lambda a: jnp.asarray(a)[None], v)
+                mask = None if mask is None else jnp.asarray(mask)[None]
+            if mask is not None:
+                idx = jnp.where(mask, idx, 0)
+                v = _select_struct(mask, v, ident)
+            op = self.bt.op
+            if op == "+":
+                out = out.at[idx].add(v)
+            elif op == "*":
+                out = out.at[idx].multiply(v)
+            elif op == "min":
+                out = out.at[idx].min(v)
+            elif op == "max":
+                out = out.at[idx].max(v)
+        return WVec(out)
+
+
+class _DictMergerAcc(_Acc):
+    def __init__(self, bt, capacity: int):
+        super().__init__(bt)
+        self.capacity = int(capacity)
+
+
+class _GroupAcc(_Acc):
+    def __init__(self, bt, capacity: int):
+        super().__init__(bt)
+        self.capacity = int(capacity)
+
+
+def _finalize_keyed(acc, is_group: bool):
+    """Shared finalize for dictmerger/groupbuilder: sort by packed key +
+    segment-reduce (the TPU-native 'global builder' strategy — atomic-free)."""
+    parts_k, parts_v, parts_m = [], [], []
+    for kind, value, mask in acc.contribs:
+        k, v = value
+        if kind == "single":
+            k = jax.tree_util.tree_map(lambda a: jnp.asarray(a)[None], k)
+            v = jax.tree_util.tree_map(lambda a: jnp.asarray(a)[None], v)
+            mask = None if mask is None else jnp.asarray(mask)[None]
+        n = _lead(k)
+        parts_k.append(k)
+        parts_v.append(v)
+        parts_m.append(jnp.ones(n, bool) if mask is None else mask)
+    if not parts_k:
+        raise WeldCompileError("empty dict builder")
+    keys = _concat_struct(parts_k)
+    vals = _concat_struct(parts_v)
+    mask = jnp.concatenate(parts_m)
+
+    packed = _pack_keys(keys)
+    big = jnp.iinfo(jnp.int64).max
+    packed = jnp.where(mask, packed, big)
+    order = jnp.argsort(packed, stable=True)
+    sp = packed[order]
+    sk = _gather_struct(keys, order)
+    sv = _gather_struct(vals, order)
+    n = sp.shape[0]
+    valid = sp != big
+    is_new = jnp.concatenate([valid[:1], (sp[1:] != sp[:-1]) & valid[1:]])
+    seg = jnp.cumsum(is_new.astype(jnp.int32)) - 1       # segment id per row
+    seg = jnp.where(valid, seg, acc.capacity)            # park invalid rows
+    count = is_new.sum()
+    cap = acc.capacity
+
+    first_idx = jnp.where(is_new, jnp.arange(n), n)
+    starts = jnp.sort(first_idx)[:cap]                   # first row per segment
+    out_keys = _gather_struct(sk, jnp.clip(starts, 0, n - 1))
+
+    if is_group:
+        # values stay sorted-by-key; offsets via counts per segment
+        ones = jnp.where(valid, 1, 0)
+        sizes = jax.ops.segment_sum(ones, seg, num_segments=cap + 1)[:cap]
+        offsets = jnp.concatenate(
+            [jnp.zeros((1,), sizes.dtype), jnp.cumsum(sizes)]
+        )
+        return WGroup(out_keys, sv, offsets, count)
+
+    opname = acc.bt.op
+    segfn = {
+        "+": jax.ops.segment_sum,
+        "*": jax.ops.segment_prod,
+        "min": jax.ops.segment_min,
+        "max": jax.ops.segment_max,
+    }[opname]
+
+    def red(col):
+        return segfn(col, seg, num_segments=cap + 1)[:cap]
+
+    out_vals = jax.tree_util.tree_map(red, sv)
+    return WDict(out_keys, out_vals, count)
+
+
+# ---------------------------------------------------------------------------
+# small helpers
+# ---------------------------------------------------------------------------
+
+
+def _lead(v) -> int:
+    leaf = v[0] if isinstance(v, tuple) else v
+    return leaf.shape[0]
+
+
+def _interleave(vals: List):
+    """[(n,...) x k] -> (n*k, ...) interleaved per-iteration."""
+    if len(vals) == 1:
+        return vals[0]
+    if isinstance(vals[0], tuple):
+        return tuple(
+            _interleave([v[f] for v in vals]) for f in range(len(vals[0]))
+        )
+    stacked = jnp.stack(vals, axis=1)
+    return stacked.reshape((-1,) + stacked.shape[2:])
+
+
+def _concat_struct(parts: List):
+    if isinstance(parts[0], tuple):
+        return tuple(
+            jnp.concatenate([p[f] for p in parts])
+            for f in range(len(parts[0]))
+        )
+    return jnp.concatenate(parts)
+
+
+def _gather_struct(v, idx):
+    if isinstance(v, tuple):
+        return tuple(f[idx] for f in v)
+    return v[idx]
+
+
+def _select_struct(mask, a, b):
+    if isinstance(a, tuple):
+        b = b if isinstance(b, tuple) else tuple(b for _ in a)
+        return tuple(_select_struct(mask, x, y) for x, y in zip(a, b))
+    return jnp.where(mask, a, b)
+
+
+def _identity_value(ty, op):
+    if isinstance(ty, wt.Struct):
+        return tuple(_identity_value(f, op) for f in ty.fields)
+    return jnp.asarray(wt.merge_identity(op, ty), dtype=_jdtype(ty))
+
+
+def _combine(op, a, b):
+    if isinstance(a, tuple):
+        return tuple(_combine(op, x, y) for x, y in zip(a, b))
+    return {
+        "+": jnp.add, "*": jnp.multiply,
+        "min": jnp.minimum, "max": jnp.maximum,
+    }[op](a, b)
+
+
+def _masked_reduce(bt: wt.Merger, value, mask):
+    ident = _identity_value(bt.elem, bt.op)
+    if mask is not None:
+        value = _select_struct(mask, value, ident)
+    fn = {
+        "+": jnp.sum, "*": jnp.prod, "min": jnp.min, "max": jnp.max,
+    }[bt.op]
+
+    def red(x):
+        return fn(x, axis=0) if hasattr(x, "shape") and x.ndim >= 1 else x
+
+    return jax.tree_util.tree_map(red, value)
+
+
+def _compact(vals, mask) -> WVec:
+    """Front-pack valid elements (stable) — TPU compaction via sort."""
+    order = jnp.argsort(~mask, stable=True)
+    packed = _gather_struct(vals, order)
+    return WVec(packed, count=mask.sum())
+
+
+def _pack_keys(keys):
+    """Pack a (possibly struct) key into one i64 for sorting.  Int fields
+    are bit-packed; floats are bit-cast (order-preserving for the grouping
+    use case — equality only matters, not order)."""
+    cols = list(keys) if isinstance(keys, tuple) else [keys]
+    packed = jnp.zeros(_lead(keys), dtype=jnp.int64)
+    for c in cols:
+        if jnp.issubdtype(c.dtype, jnp.floating):
+            c = jax.lax.bitcast_convert_type(
+                c.astype(jnp.float32), jnp.int32
+            ).astype(jnp.int64)
+        else:
+            c = c.astype(jnp.int64)
+        packed = packed * jnp.int64(1 << 32) + (c & jnp.int64(0xFFFFFFFF))
+    return packed
+
+
+_UNARY_JAX = {
+    "neg": jnp.negative,
+    "not": jnp.logical_not,
+    "exp": jnp.exp,
+    "log": jnp.log,
+    "sqrt": jnp.sqrt,
+    "erf": jax.lax.erf,
+    "sin": jnp.sin,
+    "cos": jnp.cos,
+    "tanh": jnp.tanh,
+    "abs": jnp.abs,
+    "sigmoid": jax.nn.sigmoid,
+    "floor": jnp.floor,
+    "rsqrt": jax.lax.rsqrt,
+}
+
+
+def _binop_jax(op, a, b):
+    if op in ("+", "-", "*"):
+        return {"+": jnp.add, "-": jnp.subtract, "*": jnp.multiply}[op](a, b)
+    if op == "/":
+        if jnp.issubdtype(jnp.result_type(a), jnp.integer):
+            return jax.lax.div(jnp.asarray(a), jnp.asarray(b))  # C trunc-div
+        return jnp.divide(a, b)
+    if op == "%":
+        if jnp.issubdtype(jnp.result_type(a), jnp.integer):
+            return jax.lax.rem(jnp.asarray(a), jnp.asarray(b))
+        return jnp.mod(a, b)
+    if op == "pow":
+        return jnp.power(a, b)
+    if op in ("min", "max"):
+        return (jnp.minimum if op == "min" else jnp.maximum)(a, b)
+    if op in ir.CMP_OPS:
+        return {
+            "==": jnp.equal, "!=": jnp.not_equal, "<": jnp.less,
+            "<=": jnp.less_equal, ">": jnp.greater, ">=": jnp.greater_equal,
+        }[op](a, b)
+    if op == "&&":
+        return jnp.logical_and(a, b)
+    if op == "||":
+        return jnp.logical_or(a, b)
+    raise WeldCompileError(f"binop {op}")
+
+
+# ---------------------------------------------------------------------------
+# static const-eval for iter bounds / capacities
+# ---------------------------------------------------------------------------
+
+
+def _static_eval(e: ir.Expr, shapes: Dict[str, tuple]) -> Optional[int]:
+    if isinstance(e, ir.Literal):
+        return int(e.value)
+    if isinstance(e, ir.Len) and isinstance(e.expr, ir.Ident):
+        shp = shapes.get(e.expr.name)
+        return None if shp is None else int(shp[0])
+    if isinstance(e, ir.BinOp):
+        a = _static_eval(e.left, shapes)
+        b = _static_eval(e.right, shapes)
+        if a is None or b is None:
+            return None
+        return int({
+            "+": a + b, "-": a - b, "*": a * b,
+            "/": int(a / b) if b else 0,
+            "min": min(a, b), "max": max(a, b),
+        }.get(e.op, None)) if e.op in ("+", "-", "*", "/", "min", "max") else None
+    return None
+
+
+# ---------------------------------------------------------------------------
+# The emitter
+# ---------------------------------------------------------------------------
+
+
+class _LoopCtx:
+    def __init__(self, n: int, mask, per_elem: frozenset, parent=None):
+        self.n = n
+        self.mask = mask  # (n,) bool or None
+        self.per_elem = per_elem
+        self.parent = parent
+        self.touched: List[_Acc] = []  # vecbuilders merged in this loop
+
+
+class Emitter:
+    def __init__(self, input_shapes: Dict[str, tuple],
+                 memory_limit: Optional[int] = None):
+        self.input_shapes = input_shapes
+        self.memory_limit = memory_limit
+        self.est_bytes = 0
+
+    # -- entry ---------------------------------------------------------------
+
+    def run(self, expr: ir.Expr, env: Dict[str, object]):
+        return self.ev(expr, dict(env), None)
+
+    # -- main dispatch ---------------------------------------------------------
+
+    def ev(self, x: ir.Expr, env, ctx: Optional[_LoopCtx]):
+        m = getattr(self, "_ev_" + type(x).__name__, None)
+        if m is None:
+            raise WeldCompileError(f"cannot lower {type(x).__name__}")
+        return m(x, env, ctx)
+
+    # -- leaves ---------------------------------------------------------------
+
+    def _ev_Literal(self, x: ir.Literal, env, ctx):
+        return jnp.asarray(x.value, dtype=_jdtype(x.ty))
+
+    def _ev_Ident(self, x: ir.Ident, env, ctx):
+        if x.name not in env:
+            raise WeldCompileError(f"unbound {x.name}")
+        return env[x.name]
+
+    def _ev_Let(self, x: ir.Let, env, ctx):
+        v = self.ev(x.value, env, ctx)
+        env2 = dict(env)
+        env2[x.name] = v
+        if ctx is not None and self._depends_per_elem(x.value, ctx):
+            ctx2 = _LoopCtx(ctx.n, ctx.mask, ctx.per_elem | {x.name}, ctx.parent)
+            ctx2.touched = ctx.touched  # share accumulator-seal tracking
+            ctx = ctx2
+        return self.ev(x.body, env2, ctx)
+
+    def _ev_BinOp(self, x: ir.BinOp, env, ctx):
+        return _binop_jax(x.op, self.ev(x.left, env, ctx),
+                          self.ev(x.right, env, ctx))
+
+    def _ev_UnaryOp(self, x: ir.UnaryOp, env, ctx):
+        v = self.ev(x.expr, env, ctx)
+        if x.op in ("exp", "log", "sqrt", "erf", "sin", "cos", "tanh",
+                    "sigmoid", "rsqrt"):
+            v = _to_float(v)
+        return _UNARY_JAX[x.op](v)
+
+    def _ev_Cast(self, x: ir.Cast, env, ctx):
+        return jnp.asarray(self.ev(x.expr, env, ctx)).astype(_jdtype(x.ty))
+
+    def _ev_Select(self, x: ir.Select, env, ctx):
+        c = self.ev(x.cond, env, ctx)
+        t = self.ev(x.on_true, env, ctx)
+        f = self.ev(x.on_false, env, ctx)
+        return _select_struct(c, t, f) if isinstance(t, tuple) else jnp.where(c, t, f)
+
+    def _ev_If(self, x: ir.If, env, ctx):
+        bty = self._is_builder_expr(x.on_true, env)
+        if not bty:
+            return self._ev_Select(ir.Select(x.cond, x.on_true, x.on_false),
+                                   env, ctx)
+        # control flow over builders -> predication masks
+        c = self.ev(x.cond, env, ctx)
+        if ctx is None:
+            raise WeldCompileError("builder If outside a loop")
+        c = jnp.broadcast_to(c, (ctx.n,))
+        mask_t = c if ctx.mask is None else ctx.mask & c
+        mask_f = ~c if ctx.mask is None else ctx.mask & ~c
+        ctx_t = _LoopCtx(ctx.n, mask_t, ctx.per_elem, ctx.parent)
+        ctx_t.touched = ctx.touched
+        ctx_f = _LoopCtx(ctx.n, mask_f, ctx.per_elem, ctx.parent)
+        ctx_f.touched = ctx.touched
+        t = self.ev(x.on_true, env, ctx_t)
+        self.ev(x.on_false, env, ctx_f)
+        return t  # same accumulator objects on both paths
+
+    def _ev_MakeStruct(self, x: ir.MakeStruct, env, ctx):
+        return tuple(self.ev(i, env, ctx) for i in x.items)
+
+    def _ev_GetField(self, x: ir.GetField, env, ctx):
+        v = self.ev(x.expr, env, ctx)
+        return v[x.index]
+
+    def _ev_MakeVec(self, x: ir.MakeVec, env, ctx):
+        items = [self.ev(i, env, ctx) for i in x.items]
+        return WVec(jnp.stack([jnp.asarray(i) for i in items]))
+
+    def _ev_Len(self, x: ir.Len, env, ctx):
+        if ctx is not None and self._depends_per_elem(x.expr, ctx):
+            raise _NeedsVmap()
+        v = self.ev(x.expr, env, ctx)
+        if isinstance(v, WVec):
+            return jnp.asarray(v.length(), dtype=jnp.int64)
+        raise WeldCompileError("len of non-vec")
+
+    def _ev_Lookup(self, x: ir.Lookup, env, ctx):
+        if ctx is not None and self._depends_per_elem(x.expr, ctx):
+            raise _NeedsVmap()
+        coll = self.ev(x.expr, env, ctx)
+        idx = self.ev(x.index, env, ctx)
+        if isinstance(coll, WVec):
+            return _gather_struct(coll.data, idx)  # gather (vectorized ok)
+        if isinstance(coll, WDict):
+            packed = _pack_keys(coll.keys)
+            want = _pack_keys(
+                tuple(jnp.asarray(a)[None] for a in idx)
+                if isinstance(idx, tuple) else jnp.asarray(idx)[None]
+            )
+            hit = (packed == want) & (
+                jnp.arange(packed.shape[0]) < coll.count
+            )
+            pos = jnp.argmax(hit)
+            return _gather_struct(coll.vals, pos)
+        raise WeldCompileError("lookup on unsupported value")
+
+    def _ev_KeyExists(self, x: ir.KeyExists, env, ctx):
+        d = self.ev(x.expr, env, ctx)
+        k = self.ev(x.key, env, ctx)
+        packed = _pack_keys(d.keys)
+        want = _pack_keys(
+            tuple(jnp.asarray(a)[None] for a in k) if isinstance(k, tuple)
+            else jnp.asarray(k)[None]
+        )
+        hit = (packed == want) & (jnp.arange(packed.shape[0]) < d.count)
+        return jnp.any(hit)
+
+    def _ev_CUDF(self, x: ir.CUDF, env, ctx):
+        if ctx is not None and any(
+            self._depends_per_elem(a, ctx) for a in x.args
+        ):
+            raise _NeedsVmap()
+        if not has_cudf(x.name) and not x.name.startswith("linalg."):
+            raise WeldCompileError(f"unknown cudf {x.name}")
+        args = [self.ev(a, env, ctx) for a in x.args]
+        uw = [a.data if isinstance(a, WVec) and a.is_dense else a for a in args]
+        if any(isinstance(a, WVec) for a in uw):
+            raise WeldCompileError(f"cudf {x.name} on padded vector")
+        if x.name == "linalg.dot":
+            out = jnp.dot(uw[0], uw[1])
+        elif x.name == "linalg.matvec":
+            out = uw[0] @ uw[1]
+        elif x.name == "linalg.matmul":
+            out = uw[0] @ uw[1]
+        else:
+            out = lookup_cudf_jax(x.name)(*uw)
+        if isinstance(x.ret_ty, wt.Vec):
+            return WVec(out)
+        return out
+
+    # -- builders -------------------------------------------------------------
+
+    def _ev_NewBuilder(self, x: ir.NewBuilder, env, ctx):
+        bt = x.ty
+        if isinstance(bt, wt.Merger):
+            init = self.ev(x.arg, env, ctx) if x.arg is not None else None
+            return _MergerAcc(bt, init)
+        if isinstance(bt, wt.VecBuilder):
+            if x.size_hint is not None and self.memory_limit is not None:
+                n = _static_eval(x.size_hint, self.input_shapes)
+                if n is not None and isinstance(bt.elem, wt.Scalar):
+                    self.est_bytes += n * np.dtype(bt.elem.np_dtype).itemsize
+                    if self.est_bytes > self.memory_limit:
+                        raise WeldMemoryError(
+                            f"estimated temp bytes {self.est_bytes} exceed "
+                            f"memory limit {self.memory_limit}"
+                        )
+            return _VecBuilderAcc(bt)
+        if isinstance(bt, wt.VecMerger):
+            base = self.ev(x.arg, env, ctx)
+            return _VecMergerAcc(bt, base)
+        if isinstance(bt, (wt.DictMerger, wt.GroupBuilder)):
+            cap = 1024
+            if x.arg is not None:
+                c = _static_eval(x.arg, self.input_shapes)
+                if c is not None:
+                    cap = c
+            cls = _DictMergerAcc if isinstance(bt, wt.DictMerger) else _GroupAcc
+            return cls(bt, cap)
+        raise WeldCompileError(f"cannot build {bt}")
+
+    def _ev_Merge(self, x: ir.Merge, env, ctx):
+        acc = self.ev(x.builder, env, ctx)
+        if not isinstance(acc, _Acc):
+            raise WeldCompileError("merge into non-builder value")
+        val = self.ev(x.value, env, ctx)
+        if ctx is None:
+            acc.add_single(val)
+        else:
+            val = self._broadcast_elem(val, ctx)
+            acc.add_batch(val, ctx.mask)
+            if isinstance(acc, _VecBuilderAcc) and acc not in ctx.touched:
+                ctx.touched.append(acc)
+        return acc
+
+    def _ev_Result(self, x: ir.Result, env, ctx):
+        acc = self.ev(x.builder, env, ctx)
+        if isinstance(acc, tuple):
+            return tuple(self._finalize(a) for a in acc)
+        return self._finalize(acc)
+
+    def _finalize(self, acc):
+        if isinstance(acc, (_MergerAcc, _VecBuilderAcc, _VecMergerAcc)):
+            return acc.finalize()
+        if isinstance(acc, _DictMergerAcc):
+            return _finalize_keyed(acc, is_group=False)
+        if isinstance(acc, _GroupAcc):
+            return _finalize_keyed(acc, is_group=True)
+        raise WeldCompileError("result of non-builder")
+
+    # -- loops ----------------------------------------------------------------
+
+    def _ev_Iter(self, x: ir.Iter, env, ctx):
+        data = self.ev(x.data, env, ctx)
+        if not isinstance(data, WVec):
+            raise WeldCompileError("iter over non-vec")
+        start = _static_eval(x.start, self.input_shapes) if x.start is not None else 0
+        end = (
+            _static_eval(x.end, self.input_shapes)
+            if x.end is not None else None
+        )
+        stride = (
+            _static_eval(x.stride, self.input_shapes)
+            if x.stride is not None else 1
+        )
+        if (x.start is not None and start is None) or \
+           (x.end is not None and end is None) or \
+           (x.stride is not None and stride is None):
+            raise WeldCompileError("iter bounds must be statically evaluable")
+        if start == 0 and end is None and stride == 1:
+            return data
+        if not data.is_dense:
+            raise WeldCompileError("cannot slice a padded (filtered) vector")
+        arr = data.data
+        sl = (slice(start, end, stride),)
+        arr = tuple(a[sl] for a in arr) if isinstance(arr, tuple) else arr[sl]
+        return WVec(arr)
+
+    def _ev_For(self, x: ir.For, env, ctx):
+        # nested loop whose data depends on the enclosing element -> vmap
+        if ctx is not None and any(
+            self._depends_per_elem(it, ctx) for it in x.iters
+        ):
+            raise _NeedsVmap()
+
+        acc_tree = self.ev(x.builder, env, ctx)
+        seqs = [self.ev(it, env, ctx) for it in x.iters]
+        lens = {s.capacity() for s in seqs}
+        n = min(lens)
+        mask = None
+        for s in seqs:
+            if not s.is_dense:
+                m = jnp.arange(n) < s.count
+                mask = m if mask is None else (mask & m)
+
+        b_p, i_p, x_p = x.func.params
+        idx = jnp.arange(n, dtype=jnp.int64)
+        if len(seqs) == 1:
+            elem = _first_n(seqs[0].data, n)
+        else:
+            elem = tuple(_first_n(s.data, n) for s in seqs)
+
+        env2 = dict(env)
+        env2[b_p.name] = acc_tree
+        env2[i_p.name] = idx
+        env2[x_p.name] = elem
+        loop = _LoopCtx(n, mask, frozenset({i_p.name, x_p.name}), ctx)
+        # Decide the lowering BEFORE evaluating: evaluation mutates the
+        # accumulators, so a mid-body fallback would double-merge.
+        if self._body_needs_vmap(x.func.body, {i_p.name, x_p.name}):
+            out = self._for_via_vmap(x, acc_tree, idx, elem, mask, env, loop)
+        else:
+            try:
+                out = self.ev(x.func.body, env2, loop)
+            except _NeedsVmap as exc:  # pre-scan missed a case: hard error
+                raise WeldCompileError(
+                    "loop body unexpectedly needed per-element vector "
+                    "evaluation"
+                ) from exc
+        # seal vecbuilder ordering for this loop
+        for a in loop.touched:
+            if isinstance(a, _VecBuilderAcc):
+                a.seal()
+        return out
+
+    def _body_needs_vmap(self, body: ir.Expr, per_elem: set) -> bool:
+        """Pre-scan: does the body use its element/index as a *vector*
+        (inner For / Len / Lookup / CUDF over per-element data)?"""
+
+        def dep(e: ir.Expr, pe: set) -> bool:
+            return bool(set(ir.free_vars(e)) & pe)
+
+        def scan(e: ir.Expr, pe: set) -> bool:
+            if isinstance(e, ir.For):
+                if any(dep(it, pe) for it in e.iters):
+                    return True
+                # the inner loop introduces its own element names; per-elem
+                # names from this level may still leak into its body
+                return scan(e.builder, pe) or scan(e.func.body, pe)
+            if isinstance(e, (ir.Len, ir.Lookup)):
+                tgt = e.expr
+                if dep(tgt, pe):
+                    return True
+            if isinstance(e, ir.CUDF):
+                if any(dep(a, pe) for a in e.args):
+                    return True
+            if isinstance(e, ir.Let):
+                pe2 = pe | {e.name} if dep(e.value, pe) else pe
+                return scan(e.value, pe) or scan(e.body, pe2)
+            if isinstance(e, ir.Lambda):
+                return scan(e.body, pe)
+            return any(scan(c, pe) for c in e.children())
+
+        return scan(body, set(per_elem))
+
+    def _for_via_vmap(self, x: ir.For, acc_tree, idx, elem, mask, env, loop):
+        """Un-nesting fallback: the body needs its element as a vector.
+        Supports (lets*) [If(cond,] Merge(b, V) [, b)] bodies — V computed
+        per element under jax.vmap."""
+        b_p, i_p, x_p = x.func.params
+        body = x.func.body
+        lets: List[Tuple[str, ir.Expr]] = []
+        while isinstance(body, ir.Let):
+            lets.append((body.name, body.value))
+            body = body.body
+        cond_expr = None
+        if isinstance(body, ir.If):
+            merge_branch, other = body.on_true, body.on_false
+            cond_expr = body.cond
+            if not isinstance(merge_branch, ir.Merge):
+                merge_branch, other = body.on_false, body.on_true
+                cond_expr = ir.UnaryOp("not", body.cond)
+            if not isinstance(merge_branch, ir.Merge):
+                raise WeldCompileError(
+                    "cannot lower nested loop body (no merge branch)"
+                )
+            body = merge_branch
+        if not isinstance(body, ir.Merge):
+            raise WeldCompileError(
+                "unsupported nested-vector loop body; restructure with "
+                "flat edge lists or weldnp 2-D ops (DESIGN.md §8.2)"
+            )
+        target = self.ev(body.builder, dict(env, **{b_p.name: acc_tree}), None)
+
+        def per_elem(i_s, x_s):
+            env_s = dict(env)
+            env_s[i_p.name] = i_s
+            env_s[x_p.name] = _wrap_rows(x_s, x.iters, self, env)
+            for nm, val in lets:
+                env_s[nm] = self.ev(val, env_s, None)
+            v = self.ev(body.value, env_s, None)
+            keep = (
+                jnp.asarray(True)
+                if cond_expr is None
+                else self.ev(cond_expr, env_s, None)
+            )
+            return v, keep
+
+        vals, keeps = jax.vmap(per_elem)(idx, elem)
+        m = keeps if cond_expr is not None else None
+        if mask is not None:
+            m = mask if m is None else (m & mask)
+        if not isinstance(target, _Acc):
+            raise WeldCompileError("nested loop must merge into a builder")
+        target.add_batch(vals, m)
+        if isinstance(target, _VecBuilderAcc) and target not in loop.touched:
+            loop.touched.append(target)
+        return acc_tree
+
+    # -- helpers --------------------------------------------------------------
+
+    def _depends_per_elem(self, e: ir.Expr, ctx: _LoopCtx) -> bool:
+        names = set(ir.free_vars(e))
+        c = ctx
+        while c is not None:
+            if names & c.per_elem:
+                return True
+            c = c.parent
+        return False
+
+    def _broadcast_elem(self, val, ctx: _LoopCtx):
+        def bc(a):
+            a = jnp.asarray(a)
+            if a.ndim >= 1 and a.shape[0] == ctx.n:
+                return a
+            return jnp.broadcast_to(a, (ctx.n,) + a.shape)
+
+        return jax.tree_util.tree_map(bc, val)
+
+    def _is_builder_expr(self, e: ir.Expr, env) -> bool:
+        try:
+            t = ir.typeof(e, {k: None for k in ()})
+            return isinstance(t, wt.BuilderType)
+        except Exception:
+            pass
+        # structural fallback: Merge / NewBuilder / structs thereof /
+        # idents bound to accumulators
+        if isinstance(e, (ir.Merge, ir.NewBuilder)):
+            return True
+        if isinstance(e, ir.MakeStruct):
+            return any(self._is_builder_expr(i, env) for i in e.items)
+        if isinstance(e, ir.Let):
+            return self._is_builder_expr(e.body, env)
+        if isinstance(e, ir.GetField):
+            return self._is_builder_expr(e.expr, env)
+        if isinstance(e, ir.Ident):
+            v = env.get(e.name)
+            if isinstance(v, _Acc):
+                return True
+            if isinstance(v, tuple):
+                return all(isinstance(i, _Acc) for i in v)
+        return False
+
+
+def _to_float(v):
+    v = jnp.asarray(v)
+    if jnp.issubdtype(v.dtype, jnp.integer) or v.dtype == jnp.bool_:
+        return v.astype(jnp.float64)
+    return v
+
+
+def _first_n(data, n):
+    if isinstance(data, tuple):
+        return tuple(a[:n] for a in data)
+    return data[:n]
+
+
+def _wrap_rows(x_s, iters, emitter, env):
+    """Inside vmap, an element of vec[vec[T]] is a row — re-wrap as WVec so
+    inner loops can iterate it."""
+
+    def wrap(a):
+        if hasattr(a, "ndim") and a.ndim >= 1:
+            return WVec(a)
+        return a
+
+    if isinstance(x_s, tuple):
+        return tuple(wrap(a) for a in x_s)
+    return wrap(x_s)
+
+
+# ---------------------------------------------------------------------------
+# Program entry
+# ---------------------------------------------------------------------------
+
+
+def emit_program(expr: ir.Expr, input_names: List[str],
+                 input_types: Dict[str, wt.WeldType],
+                 input_shapes: Dict[str, tuple],
+                 memory_limit: Optional[int] = None):
+    """Returns fn(*arrays) evaluating the program; wrap in jax.jit."""
+
+    def fn(*arrays):
+        env = {}
+        for name, arr in zip(input_names, arrays):
+            ty = input_types[name]
+            env[name] = _wrap_input(arr, ty)
+        em = Emitter(input_shapes, memory_limit)
+        return em.run(expr, env)
+
+    return fn
+
+
+def _wrap_input(arr, ty: wt.WeldType):
+    if isinstance(ty, wt.Vec):
+        return WVec(arr)
+    return arr

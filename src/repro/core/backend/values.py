@@ -1,0 +1,151 @@
+"""Runtime value representations for the JAX backend.
+
+XLA's static-shape world forces the one semantic adaptation documented in
+DESIGN.md §2: variable-length results carry a static-capacity buffer plus a
+dynamic count.  Dictionaries are (sorted-keys, vals, count) column arrays.
+All classes are registered as pytrees so they flow through jax.jit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+
+@dataclass
+class WVec:
+    """A Weld vec[T].  `data` leading axis is the vector axis.  If `count`
+    is None the vector is dense (every row valid); otherwise the first
+    `count` rows are valid (front-packed) and the rest is padding."""
+
+    data: object  # jnp array or tuple of arrays (vec of structs)
+    count: Optional[object] = None  # traced scalar or None
+
+    @property
+    def is_dense(self) -> bool:
+        return self.count is None
+
+    def capacity(self) -> int:
+        arr = self.data[0] if isinstance(self.data, tuple) else self.data
+        return arr.shape[0]
+
+    def length(self):
+        return self.capacity() if self.count is None else self.count
+
+    def to_numpy(self):
+        """Host-side decode: slice off padding."""
+        def cut(a):
+            a = np.asarray(a)
+            return a if self.count is None else a[: int(self.count)]
+
+        if isinstance(self.data, tuple):
+            return tuple(cut(a) for a in self.data)
+        return cut(self.data)
+
+
+@dataclass
+class WDict:
+    """A Weld dict[K,V]: parallel column arrays of static capacity with the
+    first `count` slots valid.  Keys/vals may be tuples of arrays (struct
+    keys/values, stored column-wise)."""
+
+    keys: object
+    vals: object
+    count: object
+
+    def to_numpy(self) -> dict:
+        n = int(self.count)
+
+        def cols(x):
+            return [np.asarray(a)[:n] for a in (x if isinstance(x, tuple) else (x,))]
+
+        kcols, vcols = cols(self.keys), cols(self.vals)
+        out = {}
+        for i in range(n):
+            k = tuple(c[i].item() for c in kcols)
+            v = tuple(c[i].item() for c in vcols)
+            out[k[0] if len(k) == 1 else k] = v[0] if len(v) == 1 else v
+        return out
+
+
+@dataclass
+class WGroup:
+    """groupbuilder result: dict[K, vec[V]] as sorted-values + offsets."""
+
+    keys: object          # (cap,) or tuple of (cap,)
+    values: object        # (n,) sorted by key; or tuple
+    offsets: object       # (cap+1,) int32 group boundaries
+    count: object         # number of distinct keys
+
+    def to_numpy(self) -> dict:
+        n = int(self.count)
+        offs = np.asarray(self.offsets)
+        kcols = [np.asarray(a) for a in
+                 (self.keys if isinstance(self.keys, tuple) else (self.keys,))]
+        vcols = [np.asarray(a) for a in
+                 (self.values if isinstance(self.values, tuple) else (self.values,))]
+        out = {}
+        for i in range(n):
+            k = tuple(c[i].item() for c in kcols)
+            vs = [c[offs[i]: offs[i + 1]] for c in vcols]
+            v = vs[0] if len(vs) == 1 else list(zip(*[x.tolist() for x in vs]))
+            out[k[0] if len(k) == 1 else k] = (
+                v.tolist() if hasattr(v, "tolist") else v
+            )
+    # NOTE: values within a group are in key-stable sorted order, which is
+    # loop order for stable sorts — matching the reference interpreter.
+        return out
+
+
+def _flatten_wvec(v: WVec):
+    leaves = list(v.data) if isinstance(v.data, tuple) else [v.data]
+    is_tuple = isinstance(v.data, tuple)
+    if v.count is None:
+        return leaves, (is_tuple, len(leaves), False)
+    return leaves + [v.count], (is_tuple, len(leaves), True)
+
+
+def _unflatten_wvec(aux, leaves):
+    is_tuple, n, has_count = aux
+    data = tuple(leaves[:n]) if is_tuple else leaves[0]
+    count = leaves[n] if has_count else None
+    return WVec(data, count)
+
+
+jax.tree_util.register_pytree_node(WVec, _flatten_wvec, _unflatten_wvec)
+
+
+def _flatten_wdict(d: WDict):
+    ks = list(d.keys) if isinstance(d.keys, tuple) else [d.keys]
+    vs = list(d.vals) if isinstance(d.vals, tuple) else [d.vals]
+    aux = (isinstance(d.keys, tuple), len(ks), isinstance(d.vals, tuple), len(vs))
+    return ks + vs + [d.count], aux
+
+
+def _unflatten_wdict(aux, leaves):
+    kt, nk, vt, nv = aux
+    keys = tuple(leaves[:nk]) if kt else leaves[0]
+    vals = tuple(leaves[nk: nk + nv]) if vt else leaves[nk]
+    return WDict(keys, vals, leaves[nk + nv])
+
+
+jax.tree_util.register_pytree_node(WDict, _flatten_wdict, _unflatten_wdict)
+
+
+def _flatten_wgroup(g: WGroup):
+    ks = list(g.keys) if isinstance(g.keys, tuple) else [g.keys]
+    vs = list(g.values) if isinstance(g.values, tuple) else [g.values]
+    aux = (isinstance(g.keys, tuple), len(ks), isinstance(g.values, tuple), len(vs))
+    return ks + vs + [g.offsets, g.count], aux
+
+
+def _unflatten_wgroup(aux, leaves):
+    kt, nk, vt, nv = aux
+    keys = tuple(leaves[:nk]) if kt else leaves[0]
+    values = tuple(leaves[nk: nk + nv]) if vt else leaves[nk]
+    return WGroup(keys, values, leaves[nk + nv], leaves[nk + nv + 1])
+
+
+jax.tree_util.register_pytree_node(WGroup, _flatten_wgroup, _unflatten_wgroup)

@@ -1,0 +1,31 @@
+"""External function registry (paper: "Weld supports calling existing C
+functions for complex non-data-parallel code").
+
+Each registered name carries two implementations: a host (pure python /
+numpy) version used by the reference interpreter, and a jax version used by
+the backend.  This mirrors the paper's CUDF mechanism while staying inside
+the JAX world.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+_REGISTRY: Dict[str, Tuple[Callable, Callable]] = {}
+
+
+def register_cudf(name: str, host_fn: Callable, jax_fn: Callable) -> None:
+    if name in _REGISTRY:
+        raise ValueError(f"cudf {name!r} already registered")
+    _REGISTRY[name] = (host_fn, jax_fn)
+
+
+def lookup_cudf_host(name: str) -> Callable:
+    return _REGISTRY[name][0]
+
+
+def lookup_cudf_jax(name: str) -> Callable:
+    return _REGISTRY[name][1]
+
+
+def has_cudf(name: str) -> bool:
+    return name in _REGISTRY

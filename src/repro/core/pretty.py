@@ -1,0 +1,67 @@
+"""Pretty-printer for Weld IR (debugging / test goldens)."""
+from __future__ import annotations
+
+from . import ir
+
+
+def pretty(e: "ir.Expr", indent: int = 0) -> str:
+    pad = "  " * indent
+
+    def p(x):
+        return pretty(x, indent)
+
+    if isinstance(e, ir.Literal):
+        return f"{e.value}{'' if e.ty.kind in ('i64',) else ':' + e.ty.kind}"
+    if isinstance(e, ir.Ident):
+        return e.name
+    if isinstance(e, ir.Let):
+        return f"(let {e.name} = {p(e.value)};\n{pad} {pretty(e.body, indent)})"
+    if isinstance(e, ir.BinOp):
+        return f"({p(e.left)} {e.op} {p(e.right)})"
+    if isinstance(e, ir.UnaryOp):
+        return f"{e.op}({p(e.expr)})"
+    if isinstance(e, ir.Cast):
+        return f"{e.ty}({p(e.expr)})"
+    if isinstance(e, ir.If):
+        return f"if({p(e.cond)}, {p(e.on_true)}, {p(e.on_false)})"
+    if isinstance(e, ir.Select):
+        return f"select({p(e.cond)}, {p(e.on_true)}, {p(e.on_false)})"
+    if isinstance(e, ir.MakeStruct):
+        return "{" + ", ".join(p(i) for i in e.items) + "}"
+    if isinstance(e, ir.GetField):
+        return f"{p(e.expr)}.${e.index}"
+    if isinstance(e, ir.MakeVec):
+        return "[" + ", ".join(p(i) for i in e.items) + "]"
+    if isinstance(e, ir.Len):
+        return f"len({p(e.expr)})"
+    if isinstance(e, ir.Lookup):
+        return f"lookup({p(e.expr)}, {p(e.index)})"
+    if isinstance(e, ir.KeyExists):
+        return f"keyexists({p(e.expr)}, {p(e.key)})"
+    if isinstance(e, ir.CUDF):
+        return f"cudf[{e.name}](" + ", ".join(p(a) for a in e.args) + ")"
+    if isinstance(e, ir.Lambda):
+        params = ",".join(f"{q.name}:{q.ty}" for q in e.params)
+        return f"|{params}| {pretty(e.body, indent + 1)}"
+    if isinstance(e, ir.NewBuilder):
+        arg = f"({p(e.arg)})" if e.arg is not None else ""
+        hint = f"@size={p(e.size_hint)}" if e.size_hint is not None else ""
+        return f"{e.ty}{arg}{hint}"
+    if isinstance(e, ir.Merge):
+        return f"merge({p(e.builder)}, {p(e.value)})"
+    if isinstance(e, ir.Result):
+        return f"result({p(e.builder)})"
+    if isinstance(e, ir.Iter):
+        if e.is_plain:
+            return p(e.data)
+        parts = [p(e.data)]
+        for x in (e.start, e.end, e.stride):
+            parts.append(p(x) if x is not None else "_")
+        return f"iter({', '.join(parts)})"
+    if isinstance(e, ir.For):
+        its = ", ".join(p(i) for i in e.iters)
+        return (
+            f"for([{its}],\n{pad}    {pretty(e.builder, indent + 1)},"
+            f"\n{pad}    {pretty(e.func, indent + 1)})"
+        )
+    return f"<{type(e).__name__}>"

@@ -1,0 +1,2 @@
+"""Data substrate: deterministic, shard-aware, checkpointable pipeline."""
+from .pipeline import TokenPipeline  # noqa: F401

@@ -1,0 +1,2 @@
+"""Distribution layer: logical-axis sharding rules, elastic re-sharding,
+gradient compression, straggler monitoring."""

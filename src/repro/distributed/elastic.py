@@ -1,0 +1,24 @@
+"""Elastic scaling: restore a checkpoint onto a DIFFERENT mesh.
+
+Checkpoints store unsharded host arrays (checkpoint/ckpt.py), so elastic
+restart is: build the new mesh, derive shardings from the same logical
+rules, `Checkpointer.restore(..., shardings=new)`.  The data pipeline's
+shard-stable stream (data/pipeline.py) guarantees the global batch
+sequence is unchanged across the re-shard, so training is a pure
+continuation.  `remesh` covers the in-memory case (shrink/grow without
+going through disk) — used by the straggler-escalation path.
+"""
+from __future__ import annotations
+
+import jax
+
+from .sharding import tree_shardings
+
+
+def remesh(state_tree, spec_tree, new_mesh, rules=None):
+    """Re-place a live state tree onto a new mesh (gathers to host views
+    lazily via device_put; GSPMD moves only what must move)."""
+    shapes = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state_tree)
+    new_sh = tree_shardings(spec_tree, shapes, new_mesh, rules)
+    return jax.tree_util.tree_map(jax.device_put, state_tree, new_sh)

@@ -1,0 +1,131 @@
+"""Logical-axis sharding rules (DESIGN.md §5).
+
+Models annotate every parameter/input/cache leaf with *logical* axis
+names; this module maps them to mesh axes with a priority-rule table,
+respecting divisibility and never using a mesh axis twice in one spec.
+The Megatron column/row TP pattern, EP for experts, and hierarchical DP
+over (pod, data) all fall out of one rule table:
+
+    heads/kv_heads/mlp/vocab/experts -> model   (TP / EP)
+    head_dim -> model                           (fallback when the head
+                                                 count doesn't divide)
+    batch -> (pod, data)                        (hierarchical DP)
+
+ZeRO-1: optimizer-moment leaves additionally shard their first
+replicated-and-divisible dimension over 'data'.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisCandidates = Sequence[Union[str, Tuple[str, ...]]]
+
+#: priority-ordered mesh-axis candidates per logical axis
+DEFAULT_RULES: Dict[str, List] = {
+    "mlp": ["model"],
+    "heads": ["model"],
+    "kv_heads": ["model"],
+    "head_dim": ["model"],
+    "vocab": ["model"],
+    "experts": ["model"],
+    "embed": [],            # replicated (activations gather over it anyway)
+    "state": [],
+    "layers": [],
+    "batch": [("pod", "data"), "data"],
+    "seq": ["model"],       # sequence parallelism for long-context decode
+}
+
+
+def _size(mesh: Mesh, axis: Union[str, Tuple[str, ...]]) -> int:
+    if isinstance(axis, tuple):
+        return int(np.prod([_size(mesh, a) for a in axis]))
+    return mesh.shape.get(axis, 0)
+
+
+def spec_for_leaf(shape: Tuple[int, ...], axes: Sequence[Optional[str]],
+                  mesh: Mesh, rules: Optional[Dict] = None) -> P:
+    """Build a PartitionSpec for one leaf: walk dims left→right, take the
+    first unused, divisible candidate for each logical axis."""
+    rules = dict(DEFAULT_RULES, **(rules or {}))
+    used: set = set()
+    parts = []
+    assert len(axes) == len(shape), f"spec rank mismatch {axes} vs {shape}"
+    for dim, name in zip(shape, axes):
+        chosen = None
+        if name is not None:
+            for cand in rules.get(name, []):
+                flat = cand if isinstance(cand, tuple) else (cand,)
+                if any(a in used for a in flat):
+                    continue
+                if any(a not in mesh.shape for a in flat):
+                    continue
+                sz = _size(mesh, cand)
+                if sz and dim % sz == 0:
+                    chosen = cand
+                    used.update(flat)
+                    break
+        parts.append(chosen)
+    # trailing Nones can be dropped but keep explicit for readability
+    return P(*parts)
+
+
+def tree_shardings(spec_tree, shape_tree, mesh: Mesh,
+                   rules: Optional[Dict] = None):
+    """Map a tree of logical-axes tuples + a matching tree of
+    shapes/ShapeDtypeStructs to NamedShardings."""
+
+    def is_spec(x):
+        return isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x
+        )
+
+    flat_specs = jax.tree_util.tree_flatten(
+        spec_tree, is_leaf=lambda x: is_spec(x) or x == ())[0]
+    flat_shapes, treedef = jax.tree_util.tree_flatten(shape_tree)
+    assert len(flat_specs) == len(flat_shapes), (
+        f"spec/shape tree mismatch: {len(flat_specs)} vs {len(flat_shapes)}"
+    )
+    out = []
+    for spec, leaf in zip(flat_specs, flat_shapes):
+        shape = leaf.shape if hasattr(leaf, "shape") else tuple(leaf)
+        out.append(NamedSharding(
+            mesh, spec_for_leaf(tuple(shape), spec, mesh, rules)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def zero1_moment_shardings(param_spec_tree, shape_tree, mesh: Mesh,
+                           rules: Optional[Dict] = None):
+    """ZeRO-1: like the param sharding but with the first replicated,
+    divisible dim additionally sharded over 'data'."""
+
+    def is_spec(x):
+        return isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x
+        )
+
+    flat_specs = jax.tree_util.tree_flatten(
+        param_spec_tree, is_leaf=lambda x: is_spec(x) or x == ())[0]
+    flat_shapes, treedef = jax.tree_util.tree_flatten(shape_tree)
+    dsz = mesh.shape.get("data", 1)
+    out = []
+    for spec, leaf in zip(flat_specs, flat_shapes):
+        shape = tuple(leaf.shape if hasattr(leaf, "shape") else leaf)
+        base = spec_for_leaf(shape, spec, mesh, rules)
+        parts = list(base) + [None] * (len(shape) - len(base))
+        used = {a for p in parts if p is not None
+                for a in (p if isinstance(p, tuple) else (p,))}
+        if "data" in mesh.shape and dsz > 1 and "data" not in used:
+            for i, (dim, cur) in enumerate(zip(shape, parts)):
+                if cur is None and dim % dsz == 0 and dim >= dsz:
+                    parts[i] = "data"
+                    break
+        out.append(NamedSharding(mesh, P(*parts)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,103 @@
+"""Predicated filter+reduce kernel — the fused form of Listing 10.
+
+    result(for(v, merger[+,0], (b,i,x) => if(p(x)) merge(b,x) else b))
+
+TPU adaptation: the branch becomes a VPU select (predication is mandatory
+on SPMD hardware), and the reduction happens block-wise in VMEM with a
+running scalar accumulator across grid steps.  The predicate is supplied
+as precomputed comparison bounds so one kernel serves Q6-style multi-column
+conjunctions: keep = all(lo_k <= col_k < hi_k).
+
+Block size: 8×1024 f32 = 32 KiB per column tile — several columns fit VMEM
+(~16 MiB) with room for double buffering; the lane dim (1024) is a multiple
+of the 128-wide VPU registers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 8 * 1024
+
+
+def _kernel(x_ref, pred_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    keep = pred_ref[...]
+    contrib = jnp.sum(jnp.where(keep, x, jnp.zeros_like(x)))
+    o_ref[...] += contrib[None, None]
+
+
+def filter_reduce_sum(x: jax.Array, pred: jax.Array, *,
+                      block: int = BLOCK, interpret: bool = True) -> jax.Array:
+    """sum(x[pred]) in one pass.  x: (n,) float; pred: (n,) bool.
+    n is padded to a block multiple with pred=False."""
+    n = x.shape[0]
+    npad = (block - n % block) % block
+    if npad:
+        x = jnp.pad(x, (0, npad))
+        pred = jnp.pad(pred, (0, npad))
+    grid = (x.shape[0] // block,)
+    out = pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((1, 1), x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        interpret=interpret,
+    )(x, pred)
+    return out[0, 0]
+
+
+def _kernel_fused_pred(cols_ref, lo_ref, hi_ref, val_ref, o_ref):
+    """Q6 shape: keep = AND_k(lo_k <= col_k < hi_k); sum val where keep."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    cols = cols_ref[...]          # (K, B)
+    lo = lo_ref[...]              # (K, 1)
+    hi = hi_ref[...]              # (K, 1)
+    keep = jnp.all((cols >= lo) & (cols < hi), axis=0)   # (B,)
+    v = val_ref[...]
+    o_ref[...] += jnp.sum(jnp.where(keep, v, jnp.zeros_like(v)))[None, None]
+
+
+def filter_reduce_q6(cols: jax.Array, lo: jax.Array, hi: jax.Array,
+                     val: jax.Array, *, block: int = BLOCK,
+                     interpret: bool = True) -> jax.Array:
+    """cols: (K, n) predicate columns; lo/hi: (K,) bounds; val: (n,).
+    Computes sum(val[all(lo<=cols<hi)]) in a single fused pass."""
+    k, n = cols.shape
+    npad = (block - n % block) % block
+    if npad:
+        cols = jnp.pad(cols, ((0, 0), (0, npad)), constant_values=jnp.inf)
+        val = jnp.pad(val, (0, npad))
+    grid = (cols.shape[1] // block,)
+    out = pl.pallas_call(
+        _kernel_fused_pred,
+        out_shape=jax.ShapeDtypeStruct((1, 1), val.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k, block), lambda i: (0, i)),
+            pl.BlockSpec((k, 1), lambda i: (0, 0)),
+            pl.BlockSpec((k, 1), lambda i: (0, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        interpret=interpret,
+    )(cols, lo.reshape(k, 1), hi.reshape(k, 1), val)
+    return out[0, 0]

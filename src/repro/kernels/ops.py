@@ -1,0 +1,152 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``impl`` selects the execution path:
+  * "pallas"    — the Pallas kernel compiled for the accelerator
+  * "interpret" — the Pallas kernel body interpreted on CPU (validation)
+  * "ref"       — the pure-jnp oracle (CPU benchmarks, dry-run lowering)
+Default on this CPU container is "ref"; on TPU the launcher flips the
+default to "pallas".  Resolution happens OUTSIDE jit so flipping the
+default always takes effect (impl is a static argument of the inner jit).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal, Optional
+
+import jax
+
+from . import filter_reduce as _fr
+from . import flash_attention as _fa
+from . import fused_adamw as _aw
+from . import ref as _ref
+from . import segment_reduce as _sr
+from . import tiled_matmul as _tm
+
+Impl = Literal["pallas", "interpret", "ref"]
+
+DEFAULT_IMPL: Impl = "ref"
+
+
+def set_default_impl(impl: Impl) -> None:
+    global DEFAULT_IMPL
+    DEFAULT_IMPL = impl
+
+
+def _resolve(impl: Optional[str]) -> str:
+    return DEFAULT_IMPL if impl is None else impl
+
+
+# -- filter+reduce -------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def _frs(x, pred, impl):
+    if impl == "ref":
+        return _ref.filter_reduce_sum(x, pred)
+    return _fr.filter_reduce_sum(x, pred, interpret=(impl == "interpret"))
+
+
+def filter_reduce_sum(x, pred, impl: Optional[Impl] = None):
+    return _frs(x, pred, impl=_resolve(impl))
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def _frq6(cols, lo, hi, val, impl):
+    if impl == "ref":
+        return _ref.filter_reduce_q6(cols, lo, hi, val)
+    return _fr.filter_reduce_q6(cols, lo, hi, val,
+                                interpret=(impl == "interpret"))
+
+
+def filter_reduce_q6(cols, lo, hi, val, impl: Optional[Impl] = None):
+    return _frq6(cols, lo, hi, val, impl=_resolve(impl))
+
+
+# -- segment reduce -------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "impl"))
+def _ss(seg_ids, vals, num_segments, impl):
+    if impl == "ref":
+        return _ref.segment_sum(seg_ids, vals, num_segments)
+    return _sr.segment_sum(seg_ids, vals, num_segments,
+                           interpret=(impl == "interpret"))
+
+
+def segment_sum(seg_ids, vals, num_segments: int,
+                impl: Optional[Impl] = None):
+    impl = _resolve(impl)
+    if num_segments > _sr.MAX_K:
+        impl = "ref"
+    return _ss(seg_ids, vals, num_segments=num_segments, impl=impl)
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "impl"))
+def _ssv(seg_ids, vals, num_segments, impl):
+    if impl == "ref":
+        return _ref.segment_sum_vectors(seg_ids, vals, num_segments)
+    return _sr.segment_sum_vectors(seg_ids, vals, num_segments,
+                                   interpret=(impl == "interpret"))
+
+
+def segment_sum_vectors(seg_ids, vals, num_segments: int,
+                        impl: Optional[Impl] = None):
+    impl = _resolve(impl)
+    if num_segments > _sr.MAX_K:
+        impl = "ref"
+    return _ssv(seg_ids, vals, num_segments=num_segments, impl=impl)
+
+
+# -- fused adamw ----------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("b1", "b2", "eps", "wd", "impl"))
+def _adamw(p, g, m, v, lr, step, b1, b2, eps, wd, impl):
+    kw = dict(b1=b1, b2=b2, eps=eps, wd=wd)
+    if impl == "ref":
+        return _ref.adamw_update(p, g, m, v, lr, step, **kw)
+    return _aw.adamw_update(p, g, m, v, lr, step,
+                            interpret=(impl == "interpret"), **kw)
+
+
+def adamw_update(p, g, m, v, lr, step, b1=0.9, b2=0.999, eps=1e-8, wd=0.01,
+                 impl: Optional[Impl] = None):
+    return _adamw(p, g, m, v, lr, step, b1=b1, b2=b2, eps=eps, wd=wd,
+                  impl=_resolve(impl))
+
+
+# -- tiled matmul -----------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def _mm(a, b, impl):
+    if impl == "ref":
+        return _ref.tiled_matmul(a, b)
+    return _tm.tiled_matmul(a, b, interpret=(impl == "interpret"))
+
+
+def matmul(a, b, impl: Optional[Impl] = None):
+    return _mm(a, b, impl=_resolve(impl))
+
+
+# -- attention --------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "group", "scale", "impl", "chunk", "unroll"),
+)
+def _attn(q, k, v, causal, group, scale, chunk, unroll, impl):
+    if impl == "ref":
+        return _ref.chunked_attention(q, k, v, causal=causal, group=group,
+                                      scale=scale, chunk=chunk,
+                                      unroll=unroll)
+    return _fa.flash_attention(q, k, v, causal=causal, group=group,
+                               scale=scale, interpret=(impl == "interpret"))
+
+
+def attention(q, k, v, causal: bool = True, group: int = 1, scale=None,
+              chunk: int = 1024, unroll: bool = False,
+              impl: Optional[Impl] = None):
+    return _attn(q, k, v, causal=causal, group=group, scale=scale,
+                 chunk=chunk, unroll=unroll, impl=_resolve(impl))

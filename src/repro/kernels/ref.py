@@ -1,0 +1,112 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the reference semantics kernels are validated against
+(interpret=True allclose sweeps in tests/test_kernels.py), AND the
+execution path used on CPU (benchmarks) and in the dry-run lowering
+(kernels are the TPU target; HLO cost analysis uses these — conservative,
+since the Pallas forms strictly reduce HBM traffic)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def filter_reduce_sum(x, pred):
+    return jnp.sum(jnp.where(pred, x, jnp.zeros_like(x)))
+
+
+def filter_reduce_q6(cols, lo, hi, val):
+    keep = jnp.all((cols >= lo[:, None]) & (cols < hi[:, None]), axis=0)
+    return jnp.sum(jnp.where(keep, val, jnp.zeros_like(val)))
+
+
+def segment_sum(seg_ids, vals, num_segments):
+    return jax.ops.segment_sum(vals, seg_ids, num_segments=num_segments)
+
+
+def segment_sum_vectors(seg_ids, vals, num_segments):
+    return jax.ops.segment_sum(vals, seg_ids, num_segments=num_segments)
+
+
+def adamw_update(p, g, m, v, lr, step, *, b1=0.9, b2=0.999, eps=1e-8,
+                 wd=0.01):
+    lr = jnp.asarray(lr, p.dtype)
+    t = jnp.asarray(step, p.dtype)
+    m_new = b1 * m + (1.0 - b1) * g
+    v_new = b2 * v + (1.0 - b2) * g * g
+    m_hat = m_new / (1.0 - jnp.power(jnp.asarray(b1, p.dtype), t))
+    v_hat = v_new / (1.0 - jnp.power(jnp.asarray(b2, p.dtype), t))
+    p_new = p - lr * (m_hat / (jnp.sqrt(v_hat) + eps) + wd * p)
+    return p_new, m_new, v_new
+
+
+def tiled_matmul(a, b):
+    return jnp.dot(a, b, preferred_element_type=a.dtype)
+
+
+def attention(q, k, v, *, causal=True, group=1, scale=None):
+    """q: (H, Sq, D); k/v: (H//group, Skv, D) — dense reference."""
+    h, sq, d = q.shape
+    scale = float(scale if scale is not None else d ** -0.5)
+    if group > 1:
+        k = jnp.repeat(k, group, axis=0)
+        v = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    skv = k.shape[1]
+    if causal:
+        offset = skv - sq
+        qi = jnp.arange(sq)[:, None] + offset
+        kj = jnp.arange(skv)[None, :]
+        s = jnp.where(kj <= qi, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal=True, group=1, scale=None,
+                      chunk=1024, unroll=False):
+    """Memory-bounded jnp attention (lax.scan over kv chunks with online
+    softmax) — the production ref path for long sequences; equals
+    `attention` but with O(Sq*chunk) live score memory."""
+    h, sq, d = q.shape
+    hk, skv, _ = k.shape
+    scale = float(scale if scale is not None else d ** -0.5)
+    pad = (-skv) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+    nck = k.shape[1] // chunk
+    kc = k.reshape(hk, nck, chunk, d).transpose(1, 0, 2, 3)
+    vc = v.reshape(hk, nck, chunk, d).transpose(1, 0, 2, 3)
+    offset = skv - sq
+    qf = q.astype(jnp.float32)
+
+    def step(carry, inp):
+        m_prev, l_prev, acc = carry
+        jc, kb, vb = inp
+        if group > 1:
+            kb = jnp.repeat(kb, group, axis=0)
+            vb = jnp.repeat(vb, group, axis=0)
+        s = jnp.einsum("hqd,hkd->hqk", qf, kb.astype(jnp.float32)) * scale
+        kj = jc * chunk + jnp.arange(chunk)[None, :]
+        s = jnp.where(kj[None] < skv, s, -1e30)
+        if causal:
+            qi = jnp.arange(sq)[:, None] + offset
+            s = jnp.where(kj[None] <= qi[None], s, -1e30)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "hqk,hkd->hqd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    init = (
+        jnp.full((h, sq), -1e30, jnp.float32),
+        jnp.zeros((h, sq), jnp.float32),
+        jnp.zeros((h, sq, d), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(
+        step, init, (jnp.arange(nck), kc, vc), unroll=bool(unroll)
+    )
+    return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)

@@ -1,0 +1,455 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import: jax locks the device count on first
+#   init.  setdefault so test harnesses (8 fake devices) keep their own.
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape) cell, lower + compile the real
+step function (`train_step` for train_4k, `prefill` for prefill_32k,
+`decode_step` for decode_32k/long_500k) against ShapeDtypeStruct inputs
+(no allocation) on the production mesh — 16×16 single pod and 2×16×16
+multi-pod — then record memory analysis, cost analysis and the HLO
+collective schedule for the roofline report.
+
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --arch all --shapes all --mesh both --out benchmarks/dryrun_results.json
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import SHAPES, get_config, list_configs
+from ..configs.base import ShapeConfig
+from ..distributed.sharding import (
+    replicated, tree_shardings, zero1_moment_shardings,
+)
+from ..models import build_model
+from ..optim import adamw_init, adamw_update_tree, clip_by_global_norm
+from ..roofline.analysis import (
+    HW_V5E, collective_bytes_from_hlo, extract_cost, roofline_terms,
+)
+from .mesh import make_production_mesh
+
+
+def _shard_bytes(shapes, shardings) -> int:
+    """Exact per-device bytes for a tree of ShapeDtypeStructs under the
+    given shardings (analytic memory-fit check, DESIGN.md §6)."""
+    total = 0
+    for leaf, sh in zip(jax.tree_util.tree_leaves(shapes),
+                        jax.tree_util.tree_leaves(
+                            shardings, is_leaf=lambda x: hasattr(x, "spec"))):
+        local = sh.shard_shape(tuple(leaf.shape))
+        total += int(np.prod(local)) * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Cost extrapolation (exact roofline despite scanned layers)
+#
+# XLA's cost analysis counts while-loop bodies ONCE, so the compact
+# (scanned) lowering under-reports flops/bytes/collectives by ~n_layers×.
+# Layers within a stack are homogeneous by construction, so we lower
+# reduced-depth UNROLLED variants (1 unit and 2 units per layer stack) and
+# extrapolate:  cost(L) = cost(1u) + (L-1) · (cost(2u) - cost(1u)).
+# The compact lowering still provides the compile-success proof and the
+# memory analysis (its while loops reuse buffers, like the real run).
+# ---------------------------------------------------------------------------
+
+
+def _cost_stacks(cfg):
+    """[(stack_name, full_units, cfg_builder(units_dict))] per family."""
+    fam = cfg.family
+
+    def with_layers(**kw):
+        return dataclasses.replace(cfg, **kw)
+
+    if fam == "dense":
+        return ([("layers", cfg.n_layers)],
+                lambda u: with_layers(n_layers=u["layers"]))
+    if fam == "moe":
+        fk = cfg.first_k_dense
+        return ([("moe", cfg.n_layers - fk)],
+                lambda u: with_layers(n_layers=fk + u["moe"]))
+    if fam == "vlm":
+        k = cfg.cross_attn_every
+        return ([("super", cfg.n_layers // k)],
+                lambda u: with_layers(n_layers=k * u["super"]))
+    if fam == "encdec":
+        return ([("enc", cfg.n_enc_layers), ("dec", cfg.n_layers)],
+                lambda u: with_layers(n_enc_layers=u["enc"],
+                                      n_layers=u["dec"]))
+    if fam == "hybrid":
+        k = cfg.attn_every
+        return ([("group", cfg.n_layers / k)],
+                lambda u: with_layers(n_layers=k * u["group"]))
+    if fam == "ssm":
+        k = cfg.slstm_every
+        return ([("unit", cfg.n_layers / k)],
+                lambda u: with_layers(n_layers=k * u["unit"]))
+    raise ValueError(fam)
+
+
+def _lower_cost_variant(cfg, shape, mesh, rules, seq_shard_inputs=False):
+    """Lower + compile one reduced-depth unrolled variant; return
+    (flops, bytes, coll_total) per device."""
+    model = build_model(cfg)
+    pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    psh = tree_shardings(model.param_specs(), pshapes, mesh, rules)
+    in_specs = model.input_specs(shape, shape.kind)
+    in_axes = model.input_axes(shape.kind)
+    if seq_shard_inputs and shape.kind in ("train", "prefill"):
+        in_axes = dict(in_axes)
+        for k in ("tokens", "labels"):
+            if k in in_axes:
+                in_axes[k] = ("batch", "seq")
+
+    if shape.kind == "train":
+        oshapes = jax.eval_shape(adamw_init, pshapes)
+        osh = {
+            "m": zero1_moment_shardings(model.param_specs(), pshapes, mesh,
+                                        rules),
+            "v": zero1_moment_shardings(model.param_specs(), pshapes, mesh,
+                                        rules),
+            "step": replicated(mesh),
+        }
+        bsh = tree_shardings(in_axes, in_specs, mesh, rules)
+
+        def train_step(params, opt, batch):
+            loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+            grads, gnorm = clip_by_global_norm(grads, 1.0)
+            params, opt = adamw_update_tree(params, grads, opt, 3e-4)
+            return params, opt, loss
+
+        with mesh:  # binds P-spec sharding constraints (e.g. MoE EP pins)
+            lowered = jax.jit(train_step, in_shardings=(psh, osh, bsh),
+                              out_shardings=(psh, osh, None),
+                              donate_argnums=(0, 1)).lower(
+                pshapes, oshapes, in_specs)
+    elif shape.kind == "prefill":
+        bsh = tree_shardings(in_axes, in_specs, mesh, rules)
+        with mesh:
+            lowered = jax.jit(model.prefill, in_shardings=(psh, bsh)).lower(
+                pshapes, in_specs)
+    else:
+        cache_spec = in_specs["cache"]
+        csh = tree_shardings(in_axes["cache"], cache_spec, mesh, rules)
+        tsh = tree_shardings(in_axes["tokens"], in_specs["tokens"], mesh,
+                             rules)
+        with mesh:
+            lowered = jax.jit(
+                model.decode_step,
+                in_shardings=(psh, csh, tsh, replicated(mesh)),
+                donate_argnums=(1,),
+            ).lower(pshapes, cache_spec, in_specs["tokens"], in_specs["pos"])
+
+    compiled = lowered.compile()
+    c = extract_cost(compiled.cost_analysis())
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    return {"flops": c["flops"], "bytes": c["bytes"],
+            "coll": dict(coll)}
+
+
+def extrapolated_cost(cfg, shape, mesh, rules, *, attn_chunk=None,
+                      seq_shard_inputs=False) -> Dict:
+    """Exact-per-layer roofline inputs via 1-unit/2-unit unrolled variants."""
+    stacks, builder = _cost_stacks(cfg)
+    unroll_cfg = dict(
+        scan_unroll=True,
+        attn_chunk=(attn_chunk if attn_chunk is not None
+                    else max(1024, min(2048, shape.seq_len))),
+        ssm_chunk=max(cfg.ssm_chunk,
+                      min(1024, max(shape.seq_len // 32, 128))),
+        remat=False,  # reduced variants measure algorithmic cost; the
+        # remat multiplier is applied analytically below for train cells
+    )
+    # MoE needs >=2 units in the base: GSPMD sharding decisions differ
+    # between 1-expert-layer and multi-layer modules, which would corrupt
+    # the per-layer delta (observed as negative extrapolated flops)
+    u0 = 2 if cfg.family == "moe" else 1
+    base_units = {name: u0 for name, _ in stacks}
+    base_cfg = dataclasses.replace(builder(base_units), **unroll_cfg)
+    base = _lower_cost_variant(base_cfg, shape, mesh, rules,
+                               seq_shard_inputs)
+
+    flops = base["flops"]
+    nbytes = base["bytes"]
+    coll = dict(base["coll"])
+    variants = 1
+    for name, full in stacks:
+        u2 = dict(base_units)
+        u2[name] = u0 + 1
+        v_cfg = dataclasses.replace(builder(u2), **unroll_cfg)
+        v = _lower_cost_variant(v_cfg, shape, mesh, rules,
+                                seq_shard_inputs)
+        variants += 1
+        scale = full - u0
+        d_flops = max(v["flops"] - base["flops"], 0.0)
+        d_bytes = max(v["bytes"] - base["bytes"], 0.0)
+        flops += scale * d_flops
+        nbytes += scale * d_bytes
+        for k in coll:
+            coll[k] += scale * max(v["coll"][k] - base["coll"][k], 0)
+    # remat recompute: one extra forward pass through the blocks (~1/3 of
+    # the fwd+bwd flops) when training with full activation checkpointing
+    remat_mult = 4.0 / 3.0 if (shape.kind == "train" and cfg.remat) else 1.0
+    return {
+        "flops_per_dev": flops * remat_mult,
+        "bytes_per_dev": nbytes * remat_mult,
+        "coll_per_dev": {k: int(v) for k, v in coll.items()},
+        "remat_multiplier": remat_mult,
+        "n_cost_lowerings": variants,
+    }
+
+
+def dryrun_cell(arch: str, shape_name: str, mesh, *, smoke: bool = False,
+                batch_override: Optional[int] = None,
+                seq_override: Optional[int] = None,
+                sharding_overrides: Optional[dict] = None,
+                cfg_overrides: Optional[dict] = None,
+                seq_shard_inputs: bool = False,
+                with_cost: bool = True,
+                keep_hlo: bool = False) -> Dict:
+    """Lower+compile one cell; returns a JSON-safe record.
+
+    Hillclimb knobs: `sharding_overrides` replaces logical-axis rules;
+    `cfg_overrides` patches ModelConfig fields (attn_chunk, remat, ...);
+    `seq_shard_inputs` shards the token sequence axis over 'model'
+    (sequence parallelism at the data boundary)."""
+    t_start = time.perf_counter()
+    cfg = get_config(arch, smoke=smoke)
+    if not smoke and cfg.family in ("hybrid", "ssm"):
+        # TPU-native SSD/mLSTM chunking: larger chunks feed the MXU
+        # 512-wide and keep the recurrent while-nest shallow (the CPU
+        # SPMD compiler also chokes on deeply nested tiny loops)
+        cfg = dataclasses.replace(
+            cfg, ssm_chunk=max(cfg.ssm_chunk, 512))
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    if batch_override or seq_override:
+        shape = ShapeConfig(
+            shape.name,
+            seq_override or shape.seq_len,
+            batch_override or shape.global_batch,
+            shape.kind,
+        )
+    rec: Dict = {
+        "arch": arch, "shape": shape_name, "kind": shape.kind,
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "mesh": dict(mesh.shape), "ok": False,
+    }
+    supported, why = cfg.shape_supported(shape)
+    if not supported:
+        rec.update(ok=True, skipped=why)
+        return rec
+
+    try:
+        model = build_model(cfg)
+        rules = sharding_overrides
+        pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        pspecs = model.param_specs()
+        psh = tree_shardings(pspecs, pshapes, mesh, rules)
+        n_params = sum(int(np.prod(l.shape))
+                       for l in jax.tree_util.tree_leaves(pshapes))
+        rec["n_params"] = n_params
+        rec["param_bytes_per_dev"] = _shard_bytes(pshapes, psh)
+
+        in_specs = model.input_specs(shape, shape.kind)
+        in_axes = model.input_axes(shape.kind)
+        if seq_shard_inputs and shape.kind in ("train", "prefill"):
+            in_axes = dict(in_axes)
+            for k in ("tokens", "labels"):
+                if k in in_axes:
+                    in_axes[k] = ("batch", "seq")
+
+        if shape.kind == "train":
+            oshapes = jax.eval_shape(adamw_init, pshapes)
+            osh = {
+                "m": zero1_moment_shardings(pspecs, pshapes, mesh, rules),
+                "v": zero1_moment_shardings(pspecs, pshapes, mesh, rules),
+                "step": replicated(mesh),
+            }
+            rec["opt_bytes_per_dev"] = _shard_bytes(
+                oshapes["m"], osh["m"]) + _shard_bytes(oshapes["v"], osh["v"])
+            bsh = tree_shardings(in_axes, in_specs, mesh, rules)
+
+            def train_step(params, opt, batch):
+                loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+                grads, gnorm = clip_by_global_norm(grads, 1.0)
+                params, opt = adamw_update_tree(params, grads, opt, 3e-4)
+                return params, opt, {"loss": loss, "gnorm": gnorm}
+
+            with mesh:
+                lowered = jax.jit(
+                    train_step,
+                    in_shardings=(psh, osh, bsh),
+                    out_shardings=(psh, osh, None),
+                    donate_argnums=(0, 1),
+                ).lower(pshapes, oshapes, in_specs)
+            tokens = shape.global_batch * shape.seq_len
+
+        elif shape.kind == "prefill":
+            bsh = tree_shardings(in_axes, in_specs, mesh, rules)
+            with mesh:
+                lowered = jax.jit(
+                    model.prefill,
+                    in_shardings=(psh, bsh),
+                ).lower(pshapes, in_specs)
+            tokens = shape.global_batch * shape.seq_len
+
+        else:  # decode: serve_step = one new token over a seq_len cache
+            cache_spec = in_specs["cache"]
+            csh = tree_shardings(in_axes["cache"], cache_spec, mesh, rules)
+            tsh = tree_shardings(
+                in_axes["tokens"], in_specs["tokens"], mesh, rules)
+            rec["cache_bytes_per_dev"] = _shard_bytes(cache_spec, csh)
+
+            def serve_step(params, cache, tokens, pos):
+                return model.decode_step(params, cache, tokens, pos)
+
+            with mesh:
+                lowered = jax.jit(
+                    serve_step,
+                    in_shardings=(psh, csh, tsh, replicated(mesh)),
+                    donate_argnums=(1,),
+                ).lower(pshapes, cache_spec, in_specs["tokens"],
+                        in_specs["pos"])
+            tokens = shape.global_batch  # one token per sequence
+
+        t_lower = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter()
+
+        mem = compiled.memory_analysis()
+        rec["memory_analysis"] = _mem_to_dict(mem)
+        # the compact (scanned) module's own analysis — body counted once;
+        # kept for reference, superseded by the extrapolated cost below
+        rec["cost_compact"] = extract_cost(compiled.cost_analysis())
+
+        hlo = compiled.as_text()
+        rec["collectives_compact"] = collective_bytes_from_hlo(hlo)
+        rec["hlo_bytes_len"] = len(hlo)
+        if keep_hlo:
+            rec["hlo"] = hlo
+
+        n_chips = int(np.prod(list(mesh.shape.values())))
+        rec["n_chips"] = n_chips
+        rec["lower_s"] = t_lower - t_start
+        rec["compile_s"] = t_compile - t_lower
+
+        if with_cost and not smoke:
+            xc = extrapolated_cost(
+                cfg, shape, mesh, rules,
+                attn_chunk=(cfg_overrides or {}).get("attn_chunk"),
+                seq_shard_inputs=seq_shard_inputs)
+            rec["cost"] = {"flops": xc["flops_per_dev"],
+                           "bytes": xc["bytes_per_dev"]}
+            rec["collectives"] = xc["coll_per_dev"]
+            rec["remat_multiplier"] = xc["remat_multiplier"]
+            rl = roofline_terms(rec["cost"], xc["coll_per_dev"]["total"])
+        else:
+            rec["cost"] = rec["cost_compact"]
+            rec["collectives"] = rec["collectives_compact"]
+            rl = roofline_terms(rec["cost"], rec["collectives"]["total"])
+        rec["roofline"] = rl
+
+        # MODEL_FLOPS: useful-math floor (6·N_active·D train, 2·N·D fwd)
+        n_active = model.active_param_count() if hasattr(
+            model, "active_param_count") else n_params
+        mult = 6.0 if shape.kind == "train" else 2.0
+        rec["model_flops_global"] = mult * n_active * tokens
+        hlo_flops_global = rl["hlo_flops_per_dev"] * n_chips
+        rec["useful_flops_ratio"] = (
+            rec["model_flops_global"] / hlo_flops_global
+            if hlo_flops_global else None
+        )
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 - report, don't crash the sweep
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def _mem_to_dict(mem) -> Dict:
+    if mem is None:
+        return {}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shapes", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="benchmarks/dryrun_results.json")
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+
+    archs = ([a for a in list_configs() if a != "weld-bench"]
+             if args.arch == "all" else args.arch.split(","))
+    shapes = list(SHAPES) if args.shapes == "all" else args.shapes.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    # resume-able sweep: merge into existing results
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        mesh_name = "2x16x16" if multi else "16x16"
+        for arch in archs:
+            for shape in shapes:
+                key = f"{arch}|{shape}|{mesh_name}"
+                if results.get(key, {}).get("ok"):
+                    print(f"[dryrun] skip cached {key}")
+                    continue
+                print(f"[dryrun] {key} ...", flush=True)
+                # roofline table is single-pod; multi-pod pass proves the
+                # 'pod' axis shards (compile success + memory analysis)
+                rec = dryrun_cell(arch, shape, mesh, smoke=args.smoke,
+                                  with_cost=not multi)
+                rec["mesh_name"] = mesh_name
+                results[key] = rec
+                status = ("SKIP: " + rec["skipped"] if "skipped" in rec
+                          else "OK" if rec["ok"]
+                          else "FAIL: " + rec.get("error", "?"))
+                if rec.get("ok") and "roofline" in rec:
+                    rl = rec["roofline"]
+                    status += (
+                        f"  [{rl['bottleneck']}-bound; "
+                        f"c={rl['t_compute_s']*1e3:.2f}ms "
+                        f"m={rl['t_memory_s']*1e3:.2f}ms "
+                        f"x={rl['t_collective_s']*1e3:.2f}ms; "
+                        f"compile {rec['compile_s']:.1f}s]"
+                    )
+                print(f"[dryrun] {key} -> {status}", flush=True)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+                if rec.get("memory_analysis"):
+                    print("   memory:", rec["memory_analysis"], flush=True)
+
+    n_ok = sum(1 for r in results.values() if r.get("ok"))
+    print(f"[dryrun] {n_ok}/{len(results)} cells ok -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

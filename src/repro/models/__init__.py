@@ -1,0 +1,8 @@
+"""Model zoo: the assigned architectures as composable JAX modules.
+
+Every module is a pair of pure functions (init/apply) over dict pytrees,
+with a parallel `specs` tree of *logical axis names* per parameter leaf —
+the distribution layer maps logical axes onto the device mesh
+(DESIGN.md §5), so architectures declare sharding without mentioning it.
+"""
+from .api import build_model  # noqa: F401

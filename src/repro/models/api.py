@@ -1,0 +1,146 @@
+"""Uniform model interface used by the launcher, dry-run and tests.
+
+    model = build_model(cfg)
+    params = model.init(key)
+    loss   = model.loss_fn(params, batch)
+    logits, cache = model.prefill(params, batch)
+    logits, cache = model.decode_step(params, cache, tokens, pos)
+
+`input_specs(shape, kind)` returns ShapeDtypeStruct stand-ins for every
+input (no allocation) — the dry-run lowers against these.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from .encdec import EncDecLM
+from .ssm import Zamba2LM
+from .transformer import DenseLM
+from .vlm import VisionLM
+from .xlstm import XLSTMLM
+
+
+def build_model(cfg: ModelConfig):
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        return Model(cfg, DenseLM(cfg))
+    if fam == "hybrid":
+        return Model(cfg, Zamba2LM(cfg))
+    if fam == "ssm":
+        return Model(cfg, XLSTMLM(cfg))
+    if fam == "encdec":
+        return Model(cfg, EncDecLM(cfg))
+    if fam == "vlm":
+        return Model(cfg, VisionLM(cfg))
+    raise ValueError(f"unknown family {fam}")
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, impl):
+        self.cfg = cfg
+        self.impl = impl
+
+    # -- delegation -------------------------------------------------------------
+
+    def init(self, key):
+        return self.impl.init(key)
+
+    def param_specs(self):
+        return self.impl.param_specs()
+
+    def loss_fn(self, params, batch):
+        return self.impl.loss_fn(params, batch)
+
+    def prefill(self, params, batch):
+        return self.impl.prefill(params, batch)
+
+    def decode_step(self, params, cache, tokens, pos):
+        return self.impl.decode_step(params, cache, tokens, pos)
+
+    def cache_spec(self, batch: int, max_seq: int):
+        return self.impl.cache_spec(batch, max_seq)
+
+    def cache_init(self, batch: int, max_seq: int):
+        return self.impl.cache_init(batch, max_seq)
+
+    def cache_axes(self):
+        return self.impl.cache_axes()
+
+    # -- shape stand-ins -----------------------------------------------------------
+
+    def input_specs(self, shape: ShapeConfig, kind: str = None) -> Dict:
+        """ShapeDtypeStructs for the batch dict of `kind`
+        ("train" | "prefill" | "decode")."""
+        cfg = self.cfg
+        kind = kind or shape.kind
+        b, t = shape.global_batch, shape.seq_len
+        tok = jnp.int32
+
+        if kind in ("train", "prefill"):
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((b, t), tok),
+            }
+            if kind == "train":
+                specs["labels"] = jax.ShapeDtypeStruct((b, t), tok)
+            if cfg.family == "encdec":
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (b, cfg.n_frames, cfg.d_model), cfg.act_dtype)
+            if cfg.family == "vlm":
+                specs["images"] = jax.ShapeDtypeStruct(
+                    (b, cfg.n_image_tokens, cfg.d_vision), cfg.act_dtype)
+            return specs
+
+        if kind == "decode":
+            return {
+                "tokens": jax.ShapeDtypeStruct((b, 1), tok),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32),
+                "cache": self.cache_spec(b, t),
+            }
+        raise ValueError(kind)
+
+    def input_axes(self, kind: str) -> Dict:
+        """Logical axes for each input (batch axis sharded over data)."""
+        cfg = self.cfg
+        if kind in ("train", "prefill"):
+            axes = {"tokens": ("batch", None)}
+            if kind == "train":
+                axes["labels"] = ("batch", None)
+            if cfg.family == "encdec":
+                axes["frames"] = ("batch", None, None)
+            if cfg.family == "vlm":
+                axes["images"] = ("batch", None, None)
+            return axes
+        if kind == "decode":
+            return {
+                "tokens": ("batch", None),
+                "pos": (),
+                "cache": self.cache_axes(),
+            }
+        raise ValueError(kind)
+
+    def param_count(self, params=None) -> int:
+        import math
+
+        if params is None:
+            shapes = jax.eval_shape(self.init, jax.random.PRNGKey(0))
+            return sum(
+                math.prod(l.shape)
+                for l in jax.tree_util.tree_leaves(shapes)
+            )
+        return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+    def active_param_count(self) -> int:
+        """For MoE: params touched per token (6·N_active·D roofline)."""
+        cfg = self.cfg
+        total = self.param_count()
+        if cfg.family != "moe":
+            return total
+        # subtract the inactive routed-expert fraction
+        per_expert = 3 * cfg.d_model * cfg.expert_d_ff
+        n_moe_layers = cfg.n_layers - cfg.first_k_dense
+        inactive = n_moe_layers * (cfg.n_experts - cfg.top_k) * per_expert
+        return total - inactive

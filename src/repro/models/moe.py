@@ -1,0 +1,146 @@
+"""Mixture-of-Experts layer (deepseek-moe / dbrx) with capacity-bounded
+sort-based dispatch.
+
+The dispatch/combine pattern is exactly Weld's groupbuilder/vecmerger
+(DESIGN.md §3): group tokens by expert id, scatter-add weighted expert
+outputs back to token slots.  `examples/moe_weld_routing.py` shows the
+same routing written in Weld IR; here it is implemented directly with the
+static-shape lowering the Weld backend uses (sort + segment ops), so the
+same algorithm serves both the paper demo and the production layer.
+
+EP sharding: expert-stacked weights carry the EXPERTS logical axis, which
+the mesh rules map to the `model` axis.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+
+def _expert_ffn_init(key, cfg, n: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    shape_i = (n, cfg.d_model, d_ff)
+    shape_o = (n, d_ff, cfg.d_model)
+    return {
+        "wi": L.he_init(k1, shape_i, cfg.param_dtype, fan_in=cfg.d_model),
+        "wg": L.he_init(k2, shape_i, cfg.param_dtype, fan_in=cfg.d_model),
+        "wo": L.he_init(k3, shape_o, cfg.param_dtype, fan_in=d_ff),
+    }
+
+
+def _expert_ffn_specs():
+    return {
+        "wi": (L.EXPERTS, L.EMBED, L.MLP),
+        "wg": (L.EXPERTS, L.EMBED, L.MLP),
+        "wo": (L.EXPERTS, L.MLP, L.EMBED),
+    }
+
+
+def moe_init(key, cfg):
+    kr, ke, ks = jax.random.split(key, 3)
+    p = {
+        "router": L.he_init(kr, (cfg.d_model, cfg.n_experts), jnp.float32),
+        "experts": _expert_ffn_init(ke, cfg, cfg.n_experts, cfg.expert_d_ff),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = _expert_ffn_init(
+            ks, cfg, cfg.n_shared_experts, cfg.expert_d_ff)
+    return p
+
+
+def moe_specs(cfg):
+    s = {
+        "router": (L.EMBED, L.EXPERTS),
+        "experts": _expert_ffn_specs(),
+    }
+    if cfg.n_shared_experts:
+        s["shared"] = _expert_ffn_specs()
+    return s
+
+
+def _maybe_constrain(x, *spec):
+    """Pin intermediate sharding when a mesh context is active (the
+    dry-run / production path); no-op in mesh-less unit tests.  Pinning
+    the expert axis stops GSPMD from replicating expert compute."""
+    try:
+        from jax.sharding import PartitionSpec as P
+
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x
+
+
+def _ffn_batched(w, x, cfg):
+    """x: (E, C, d) bucketed tokens; SwiGLU expert FFN."""
+    h = jnp.einsum("ecd,edf->ecf", x, w["wi"].astype(x.dtype))
+    g = jnp.einsum("ecd,edf->ecf", x, w["wg"].astype(x.dtype))
+    h = jax.nn.silu(g) * h
+    return jnp.einsum("ecf,efd->ecd", h, w["wo"].astype(x.dtype))
+
+
+def moe_apply(p, x, cfg) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, T, d).  Returns (out, load_balance_aux_loss)."""
+    b, t, d = x.shape
+    n_tok = b * t
+    e, k = cfg.n_experts, cfg.top_k
+    cap = int(cfg.capacity_factor * n_tok * k / e + 0.5)
+    cap = max(cap, 4)
+
+    xt = x.reshape(n_tok, d)
+    logits = jnp.einsum("nd,de->ne", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, k)                   # (N, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # -- load-balance aux (switch-style) --
+    me = probs.mean(axis=0)                                # (E,)
+    onehot_top1 = jax.nn.one_hot(ids[:, 0], e, dtype=jnp.float32)
+    ce = onehot_top1.mean(axis=0)
+    aux = e * jnp.sum(me * ce)
+
+    # -- dispatch: sort token-slots by expert, bounded by capacity --
+    flat_ids = ids.reshape(-1)                             # (N*k,) int32
+    order = jnp.argsort(flat_ids, stable=True)             # token slots by expert
+    sorted_ids = flat_ids[order]
+    # rank within expert bucket
+    seg_starts = jnp.searchsorted(sorted_ids, jnp.arange(e), side="left")
+    rank = jnp.arange(n_tok * k) - seg_starts[sorted_ids]
+    keep = rank < cap
+    bucket_idx = sorted_ids * cap + jnp.where(keep, rank, 0)
+
+    tok_idx = order // k                                   # source token per slot
+    gathered = xt[tok_idx]                                 # (N*k, d)
+    buckets = jnp.zeros((e * cap, d), x.dtype)
+    buckets = buckets.at[bucket_idx].add(
+        jnp.where(keep[:, None], gathered, 0).astype(x.dtype)
+    )
+    buckets = buckets.reshape(e, cap, d)
+    if e % 8 == 0:  # EP: experts over the 'model' axis (all-to-all here)
+        buckets = _maybe_constrain(buckets, "model", None, None)
+
+    # -- expert compute (EP-sharded einsum over the experts axis) --
+    outs = _ffn_batched(p["experts"], buckets, cfg)
+    if e % 8 == 0:
+        outs = _maybe_constrain(outs, "model", None, None)
+    outs = outs.reshape(e * cap, d)
+
+    # -- combine: weighted scatter-add back to tokens (vecmerger) --
+    slot_gate = gates.reshape(-1)[order]                   # (N*k,)
+    contrib = outs[bucket_idx] * jnp.where(keep, slot_gate, 0.0)[
+        :, None].astype(x.dtype)
+    combined = jnp.zeros((n_tok, d), x.dtype).at[tok_idx].add(contrib)
+
+    out = combined.reshape(b, t, d)
+    if cfg.n_shared_experts:
+        sh = _ffn_batched(
+            p["shared"],
+            jnp.broadcast_to(xt, (cfg.n_shared_experts,) + xt.shape),
+            cfg,
+        ).sum(0)
+        out = out + sh.reshape(b, t, d)
+    return out, aux

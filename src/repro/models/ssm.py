@@ -1,0 +1,362 @@
+"""Mamba2 (SSD) blocks and the zamba2 hybrid model.
+
+TPU adaptation (DESIGN.md §8.5): the SSD recurrence is computed in the
+*chunked* form — intra-chunk terms are dense matmuls on the MXU, the
+inter-chunk state is a `lax.scan` carry — the TPU-native split between
+parallel and sequential work.  Chunks are scanned (not materialized all
+at once) so live memory is O(B · c² · H) per step, not O(B · T · c · H).
+
+Decode is the O(1) recurrent step on the carried (H, N, P) state — this
+is what makes the hybrid/ssm archs eligible for the long_500k cell.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .transformer import norm_fns, stacked_init, stacked_specs, xent_loss
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def _dims(cfg):
+    d_inner = 2 * cfg.d_model
+    nheads = d_inner // cfg.ssm_head_dim
+    return d_inner, nheads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def mamba_init(key, cfg):
+    d_inner, nh, p_, n = _dims(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    proj_out = 2 * d_inner + 2 * n + nh
+    return {
+        "norm": {"scale": jnp.ones((cfg.d_model,), cfg.param_dtype)},
+        "in_proj": L.he_init(k1, (cfg.d_model, proj_out), cfg.param_dtype),
+        "conv": L.he_init(k2, (4, d_inner + 2 * n), cfg.param_dtype,
+                          fan_in=4),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "out_proj": L.he_init(k3, (d_inner, cfg.d_model), cfg.param_dtype,
+                              fan_in=d_inner),
+    }
+
+
+def mamba_specs(cfg):
+    return {
+        "norm": {"scale": (L.EMBED,)},
+        "in_proj": (L.EMBED, L.MLP),
+        "conv": (None, L.MLP),
+        "A_log": (None,),
+        "dt_bias": (None,),
+        "D": (None,),
+        "out_proj": (L.MLP, L.EMBED),
+    }
+
+
+def _split_proj(proj, cfg):
+    d_inner, nh, p_, n = _dims(cfg)
+    z, xs, bmat, cmat, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n],
+        axis=-1,
+    )
+    return z, xs, bmat, cmat, dt
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv, width 4.  x: (B,T,C); w: (4,C)."""
+    pad = jnp.pad(x, ((0, 0), (3, 0), (0, 0)))
+    out = sum(pad[:, i: i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(4))
+    return out
+
+
+def _gates(dt_raw, p):
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    da = -jnp.exp(p["A_log"]) * dt          # log decay (negative)
+    return dt, da
+
+
+def mamba_apply(p, x, cfg, return_cache: bool = False):
+    """Full-sequence chunked SSD.  x: (B,T,d) -> (B,T,d)
+    (or (out, cache) with the final recurrent state when return_cache)."""
+    b, t, _ = x.shape
+    d_inner, nh, hp, n = _dims(cfg)
+    xn = L.rmsnorm(p["norm"], x)
+    proj = jnp.einsum("btd,de->bte", xn, p["in_proj"].astype(xn.dtype))
+    z, xs, bmat, cmat, dt_raw = _split_proj(proj, cfg)
+    conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv"].astype(xn.dtype)))
+    xs, bmat, cmat = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+    dt, da = _gates(dt_raw, p)               # (B,T,H)
+
+    c = min(cfg.ssm_chunk, t)
+    assert t % c == 0, "seq_len must be a multiple of ssm_chunk"
+    nc = t // c
+    xh = xs.reshape(b, nc, c, nh, hp).astype(jnp.float32)
+    bh = bmat.reshape(b, nc, c, n).astype(jnp.float32)
+    ch = cmat.reshape(b, nc, c, n).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, c, nh)
+    dac = da.reshape(b, nc, c, nh)
+
+    def chunk_step(state, inp):
+        xb, bb, cb, dtb, dab = inp            # (b,c,...) one chunk
+        cum = jnp.cumsum(dab, axis=1)         # (b,c,H) inclusive
+        total = cum[:, -1:, :]                # (b,1,H)
+        # intra-chunk: W[i,j,h] = exp(cum_i - cum_j) [j<=i]
+        wij = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])
+        mask = jnp.tril(jnp.ones((c, c), bool))
+        wij = jnp.where(mask[None, :, :, None], wij, 0.0)
+        cbij = jnp.einsum("bin,bjn->bij", cb, bb)
+        dtx = xb * dtb[..., None]             # (b,c,H,P)
+        y_intra = jnp.einsum("bij,bijh,bjhp->bihp", cbij, wij, dtx)
+        # inter-chunk: y_inter[i] = exp(cum_i) * C_i . S_prev
+        y_inter = jnp.einsum("bin,bnhp,bih->bihp",
+                             cb, state, jnp.exp(cum))
+        # new chunk state: S += sum_j exp(total - cum_j) dt_j B_j (x) x_j
+        wlast = jnp.exp(total - cum)          # (b,c,H)
+        s_new = jnp.einsum("bjn,bjh,bjhp->bnhp", bb, wlast, dtx)
+        state = jnp.exp(total[:, 0])[:, None, :, None] * state + s_new
+        return state, y_intra + y_inter
+
+    init = jnp.zeros((b, n, nh, hp), jnp.float32)
+    xs_t = jax.tree_util.tree_map(
+        lambda a: jnp.moveaxis(a, 1, 0), (xh, bh, ch, dtc, dac))
+    final_state, ys = jax.lax.scan(chunk_step, init, xs_t,
+                                   unroll=bool(cfg.scan_unroll))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, t, nh, hp)
+    y = y + p["D"][None, None, :, None] * xh.reshape(b, t, nh, hp)
+    y = y.reshape(b, t, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"].astype(x.dtype))
+    if return_cache:
+        cache = {"state": final_state,
+                 "conv": conv_in[:, -3:, :].astype(x.dtype)}
+        return x + out, cache
+    return x + out
+
+
+def mamba_decode(p, x, cfg, cache, pos):
+    """Single-token recurrent step.  cache: {"state": (B,N,H,P),
+    "conv": (B,3,C)} rolling conv window."""
+    b = x.shape[0]
+    d_inner, nh, hp, n = _dims(cfg)
+    xn = L.rmsnorm(p["norm"], x)
+    proj = jnp.einsum("btd,de->bte", xn, p["in_proj"].astype(xn.dtype))
+    z, xs, bmat, cmat, dt_raw = _split_proj(proj, cfg)
+    conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)[:, 0]   # (B,C)
+    window = jnp.concatenate([cache["conv"], conv_in[:, None]], axis=1)
+    w = p["conv"].astype(xn.dtype)
+    conv_out = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, w))
+    xs1, b1, c1 = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+    dt, da = _gates(dt_raw[:, 0], p)          # (B,H)
+
+    xhp = xs1.reshape(b, nh, hp).astype(jnp.float32)
+    state = cache["state"]
+    decay = jnp.exp(da)[:, None, :, None]     # (B,1,H,1)
+    upd = jnp.einsum("bn,bhp->bnhp", b1.astype(jnp.float32),
+                     xhp * dt[..., None])
+    state = decay * state + upd
+    y = jnp.einsum("bn,bnhp->bhp", c1.astype(jnp.float32), state)
+    y = y + p["D"][None, :, None] * xhp
+    y = y.reshape(b, 1, d_inner).astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"].astype(x.dtype))
+    new_cache = {"state": state, "conv": window[:, 1:]}
+    return x + out, new_cache
+
+
+def mamba_cache_spec(cfg, batch, dtype):
+    d_inner, nh, hp, n = _dims(cfg)
+    return {
+        "state": jax.ShapeDtypeStruct((batch, n, nh, hp), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, 3, d_inner + 2 * n), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# zamba2 hybrid: mamba backbone + one SHARED attention block every k layers
+# ---------------------------------------------------------------------------
+
+
+class Zamba2LM:
+    """`attn_every` mamba blocks per group, one shared-parameter attention
+    block applied between groups (zamba2's parameter-efficient design: the
+    attention weights are reused at every invocation; we omit the
+    per-invocation LoRA deltas — noted in the config docstring)."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        assert cfg.attn_every > 0
+        self.n_groups = (cfg.n_layers + cfg.attn_every - 1) // cfg.attn_every
+
+    def init(self, key):
+        cfg = self.cfg
+        km, ka, ke, kn = jax.random.split(key, 4)
+        return {
+            "embed": L.embedding_init(ke, cfg),
+            "mamba_layers": stacked_init(
+                lambda k: mamba_init(k, cfg), km, cfg.n_layers),
+            "shared_attn": {
+                "norm": {"scale": jnp.ones((cfg.d_model,), cfg.param_dtype)},
+                "attn": L.attention_init(ka, cfg),
+                "mlp_norm": {"scale": jnp.ones((cfg.d_model,),
+                                               cfg.param_dtype)},
+                "mlp": L.mlp_init(kn, cfg),
+            },
+            "final_norm": {"scale": jnp.ones((cfg.d_model,), cfg.param_dtype)},
+        }
+
+    def param_specs(self):
+        cfg = self.cfg
+        return {
+            "embed": L.embedding_specs(),
+            "mamba_layers": stacked_specs(mamba_specs(cfg)),
+            "shared_attn": {
+                "norm": {"scale": (L.EMBED,)},
+                "attn": L.attention_specs(cfg),
+                "mlp_norm": {"scale": (L.EMBED,)},
+                "mlp": L.mlp_specs(cfg),
+            },
+            "final_norm": {"scale": (L.EMBED,)},
+        }
+
+    def _groups(self):
+        cfg = self.cfg
+        sizes = []
+        left = cfg.n_layers
+        while left > 0:
+            sizes.append(min(cfg.attn_every, left))
+            left -= cfg.attn_every
+        return sizes
+
+    def _take(self, stacked, lo, hi):
+        return jax.tree_util.tree_map(lambda a: a[lo:hi], stacked)
+
+    def loss_fn(self, p, batch):
+        cfg = self.cfg
+        x = L.embed(p["embed"], batch["tokens"]).astype(cfg.act_dtype)
+        lo = 0
+        for size in self._groups():
+            grp = self._take(p["mamba_layers"], lo, lo + size)
+            lo += size
+
+            def body(h, lp):
+                return mamba_apply(lp, h, cfg), None
+
+            body_fn = jax.checkpoint(body) if cfg.remat else body
+            x, _ = jax.lax.scan(body_fn, x, grp,
+                                unroll=bool(cfg.scan_unroll))
+            sa = p["shared_attn"]
+            h, _ = L.attention_apply(
+                sa["attn"], L.rmsnorm(sa["norm"], x), cfg, causal=True,
+                rope=True)
+            x = x + h
+            x = x + L.mlp_apply(sa["mlp"], L.rmsnorm(sa["mlp_norm"], x), cfg)
+        x = L.rmsnorm(p["final_norm"], x)
+        logits = L.unembed(p["embed"], x)
+        return xent_loss(logits, batch["labels"])
+
+    def prefill(self, p, batch):
+        cfg = self.cfg
+        x = L.embed(p["embed"], batch["tokens"]).astype(cfg.act_dtype)
+        ssm_caches, attn_caches = [], []
+        lo = 0
+        for size in self._groups():
+            grp = self._take(p["mamba_layers"], lo, lo + size)
+            lo += size
+
+            # harvest final recurrent state per layer for decode handoff
+            def body(h, lp):
+                out, c = mamba_apply(lp, h, cfg, return_cache=True)
+                return out, c
+
+            x, states = jax.lax.scan(body, x, grp,
+                                     unroll=bool(cfg.scan_unroll))
+            ssm_caches.append(states)
+            sa = p["shared_attn"]
+            h, kv = L.attention_apply(
+                sa["attn"], L.rmsnorm(sa["norm"], x), cfg, causal=True,
+                rope=True)
+            x = x + h
+            x = x + L.mlp_apply(sa["mlp"], L.rmsnorm(sa["mlp_norm"], x), cfg)
+            attn_caches.append({"k": kv[0].astype(cfg.act_dtype),
+                                "v": kv[1].astype(cfg.act_dtype)})
+        x = L.rmsnorm(p["final_norm"], x)
+        logits = L.unembed(p["embed"], x[:, -1:, :])
+        cache = {
+            "ssm": jax.tree_util.tree_map(
+                lambda *xs: jnp.concatenate(xs), *ssm_caches),
+            "attn": jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *attn_caches),
+        }
+        return logits, cache
+
+    def decode_step(self, p, cache, tokens, pos):
+        cfg = self.cfg
+        x = L.embed(p["embed"], tokens).astype(cfg.act_dtype)
+        new_ssm, new_attn = [], []
+        lo = 0
+        gi = 0
+        for size in self._groups():
+            grp = self._take(p["mamba_layers"], lo, lo + size)
+            grp_cache = jax.tree_util.tree_map(
+                lambda a: a[lo: lo + size], cache["ssm"])
+            lo += size
+
+            def body(h, lp_c):
+                lp, c = lp_c
+                out, nc = mamba_decode(lp, h, cfg, c, pos)
+                return out, nc
+
+            x, nc = jax.lax.scan(body, x, (grp, grp_cache),
+                                 unroll=bool(cfg.scan_unroll))
+            new_ssm.append(nc)
+            sa = p["shared_attn"]
+            a_cache = jax.tree_util.tree_map(lambda a: a[gi], cache["attn"])
+            h, na = L.attention_decode(
+                sa["attn"], L.rmsnorm(sa["norm"], x), cfg, a_cache, pos,
+                rope=True)
+            x = x + h
+            x = x + L.mlp_apply(sa["mlp"], L.rmsnorm(sa["mlp_norm"], x), cfg)
+            new_attn.append(na)
+            gi += 1
+        x = L.rmsnorm(p["final_norm"], x)
+        logits = L.unembed(p["embed"], x)
+        new_cache = {
+            "ssm": jax.tree_util.tree_map(
+                lambda *xs: jnp.concatenate(xs), *new_ssm),
+            "attn": jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *new_attn),
+        }
+        return logits, new_cache
+
+    def cache_spec(self, batch, max_seq):
+        cfg = self.cfg
+        one = mamba_cache_spec(cfg, batch, cfg.act_dtype)
+        ssm = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((cfg.n_layers,) + s.shape, s.dtype),
+            one)
+        attn_one = L.attention_cache_spec(cfg, batch, max_seq, cfg.act_dtype)
+        attn = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((self.n_groups,) + s.shape, s.dtype),
+            attn_one)
+        return {"ssm": ssm, "attn": attn}
+
+    def cache_init(self, batch, max_seq):
+        return jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            self.cache_spec(batch, max_seq))
+
+    def cache_axes(self):
+        return {
+            "ssm": {"state": (None, "batch", None, None, None),
+                    "conv": (None, "batch", None, L.MLP)},
+            "attn": {"k": (None, "batch", None, L.KV_HEADS, L.HEAD_DIM),
+                     "v": (None, "batch", None, L.KV_HEADS, L.HEAD_DIM)},
+        }

@@ -1,0 +1,268 @@
+"""Dense decoder-only LM (starcoder2 / nemotron / llama / qwen families)
+with scan-over-layers (O(1) HLO in depth), remat, GQA + RoPE, and the
+three entry points the launcher lowers: loss, prefill, decode_step.
+
+Also hosts the shared scan/stack utilities used by every family.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .moe import moe_apply, moe_init, moe_specs
+
+
+# ---------------------------------------------------------------------------
+# Shared utilities
+# ---------------------------------------------------------------------------
+
+
+def stacked_init(init_fn: Callable, key, n: int):
+    """Stack per-layer params on a leading axis via vmap'd init."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def stacked_specs(spec_tree, n_prefix=(None,)):
+    """Prepend the layer-stack axis (replicated) to every leaf spec."""
+    return jax.tree_util.tree_map(
+        lambda s: tuple(n_prefix) + tuple(s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def xent_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token cross-entropy.  logits (B,T,V) f32; labels (B,T)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - ll)
+
+
+def norm_fns(cfg):
+    if cfg.norm == "layernorm":
+        return L.layernorm_init, L.layernorm_specs, L.layernorm
+    return L.rmsnorm_init, L.rmsnorm_specs, L.rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# Dense / MoE decoder block
+# ---------------------------------------------------------------------------
+
+
+def block_init(key, cfg, moe: bool = False):
+    kn1, ka, kn2, km = jax.random.split(key, 4)
+    ninit, _, _ = norm_fns(cfg)
+    return {
+        "attn_norm": ninit(cfg),
+        "attn": L.attention_init(ka, cfg),
+        "mlp_norm": ninit(cfg),
+        "mlp": moe_init(km, cfg) if moe else L.mlp_init(km, cfg),
+    }
+
+
+def block_specs(cfg, moe: bool = False):
+    _, nspecs, _ = norm_fns(cfg)
+    return {
+        "attn_norm": nspecs(),
+        "attn": L.attention_specs(cfg),
+        "mlp_norm": nspecs(),
+        "mlp": moe_specs(cfg) if moe else L.mlp_specs(cfg),
+    }
+
+
+def block_apply(p, x, cfg, moe: bool = False, positions=None):
+    _, _, norm = norm_fns(cfg)
+    h, _ = L.attention_apply(p["attn"], norm(p["attn_norm"], x), cfg,
+                             positions=positions, causal=True,
+                             rope=cfg.rope_theta > 0)
+    x = x + h
+    z = norm(p["mlp_norm"], x)
+    if moe:
+        h2, aux = moe_apply(p["mlp"], z, cfg)
+    else:
+        h2, aux = L.mlp_apply(p["mlp"], z, cfg), 0.0
+    return x + h2, aux
+
+
+def block_prefill(p, x, cfg, moe: bool = False):
+    _, _, norm = norm_fns(cfg)
+    h, kv = L.attention_apply(p["attn"], norm(p["attn_norm"], x), cfg,
+                              causal=True, rope=cfg.rope_theta > 0)
+    x = x + h
+    z = norm(p["mlp_norm"], x)
+    h2 = moe_apply(p["mlp"], z, cfg)[0] if moe else L.mlp_apply(z_params := p["mlp"], z, cfg)
+    return x + h2, kv
+
+
+def block_decode(p, x, cfg, cache, pos, moe: bool = False):
+    _, _, norm = norm_fns(cfg)
+    h, new_cache = L.attention_decode(p["attn"], norm(p["attn_norm"], x),
+                                      cfg, cache, pos,
+                                      rope=cfg.rope_theta > 0)
+    x = x + h
+    z = norm(p["mlp_norm"], x)
+    h2 = moe_apply(p["mlp"], z, cfg)[0] if moe else L.mlp_apply(p["mlp"], z, cfg)
+    return x + h2, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+
+class DenseLM:
+    """Also serves MoE LMs (family == "moe"): the first `first_k_dense`
+    layers are dense, the rest MoE."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.is_moe = cfg.family == "moe"
+        self.n_dense = cfg.first_k_dense if self.is_moe else cfg.n_layers
+        self.n_moe = cfg.n_layers - self.n_dense
+
+    # -- params ---------------------------------------------------------------
+
+    def init(self, key):
+        cfg = self.cfg
+        ke, kd, km, kf = jax.random.split(key, 4)
+        ninit, _, _ = norm_fns(cfg)
+        p = {"embed": L.embedding_init(ke, cfg), "final_norm": ninit(cfg)}
+        if self.n_dense:
+            p["dense_layers"] = stacked_init(
+                lambda k: block_init(k, cfg, moe=False), kd, self.n_dense)
+        if self.n_moe:
+            p["moe_layers"] = stacked_init(
+                lambda k: block_init(k, cfg, moe=True), km, self.n_moe)
+        return p
+
+    def param_specs(self):
+        cfg = self.cfg
+        _, nspecs, _ = norm_fns(cfg)
+        s = {"embed": L.embedding_specs(), "final_norm": nspecs()}
+        if self.n_dense:
+            s["dense_layers"] = stacked_specs(block_specs(cfg, moe=False))
+        if self.n_moe:
+            s["moe_layers"] = stacked_specs(block_specs(cfg, moe=True))
+        return s
+
+    # -- scan helpers -----------------------------------------------------------
+
+    def _scan_blocks(self, params_key, p, x, moe: bool):
+        cfg = self.cfg
+
+        def body(carry, lp):
+            h, aux = carry
+            out, a = block_apply(lp, h, cfg, moe=moe)
+            return (out, aux + a), None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        (x, aux), _ = jax.lax.scan(body_fn, (x, 0.0), p[params_key],
+                                   unroll=bool(cfg.scan_unroll))
+        return x, aux
+
+    # -- entry points -------------------------------------------------------------
+
+    def loss_fn(self, p, batch):
+        cfg = self.cfg
+        x = L.embed(p["embed"], batch["tokens"]).astype(cfg.act_dtype)
+        aux = 0.0
+        if self.n_dense:
+            x, a = self._scan_blocks("dense_layers", p, x, moe=False)
+            aux += a
+        if self.n_moe:
+            x, a = self._scan_blocks("moe_layers", p, x, moe=True)
+            aux += a
+        _, _, norm = norm_fns(cfg)
+        x = norm(p["final_norm"], x)
+        logits = L.unembed(p["embed"], x)
+        loss = xent_loss(logits, batch["labels"])
+        if self.is_moe:
+            loss = loss + 0.01 * aux / cfg.n_layers
+        return loss
+
+    def prefill(self, p, batch):
+        cfg = self.cfg
+        x = L.embed(p["embed"], batch["tokens"]).astype(cfg.act_dtype)
+        caches = {}
+
+        def mk_body(moe):
+            def body(h, lp):
+                out, kv = block_prefill(lp, h, cfg, moe=moe)
+                return out, {"k": kv[0].astype(cfg.act_dtype),
+                             "v": kv[1].astype(cfg.act_dtype)}
+            return jax.checkpoint(body) if cfg.remat else body
+
+        u = bool(cfg.scan_unroll)
+        if self.n_dense:
+            x, caches["dense"] = jax.lax.scan(
+                mk_body(False), x, p["dense_layers"], unroll=u)
+        if self.n_moe:
+            x, caches["moe"] = jax.lax.scan(mk_body(True), x,
+                                            p["moe_layers"], unroll=u)
+        _, _, norm = norm_fns(cfg)
+        x = norm(p["final_norm"], x)
+        logits = L.unembed(p["embed"], x[:, -1:, :])
+        return logits, caches
+
+    def decode_step(self, p, cache, tokens, pos):
+        """tokens: (B, 1) current token; pos: scalar position index."""
+        cfg = self.cfg
+        x = L.embed(p["embed"], tokens).astype(cfg.act_dtype)
+
+        def mk_body(moe):
+            def body(h, lp_and_cache):
+                lp, c = lp_and_cache
+                out, nc = block_decode(lp, h, cfg, c, pos, moe=moe)
+                return out, nc
+            return body
+
+        new_cache = {}
+        u = bool(cfg.scan_unroll)
+        if self.n_dense:
+            x, new_cache["dense"] = jax.lax.scan(
+                mk_body(False), x, (p["dense_layers"], cache["dense"]),
+                unroll=u)
+        if self.n_moe:
+            x, new_cache["moe"] = jax.lax.scan(
+                mk_body(True), x, (p["moe_layers"], cache["moe"]), unroll=u)
+        _, _, norm = norm_fns(cfg)
+        x = norm(p["final_norm"], x)
+        logits = L.unembed(p["embed"], x)
+        return logits, new_cache
+
+    # -- spec helpers ------------------------------------------------------------
+
+    def cache_spec(self, batch: int, max_seq: int):
+        cfg = self.cfg
+        one = L.attention_cache_spec(cfg, batch, max_seq, cfg.act_dtype)
+
+        def stack(spec, n):
+            return jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), spec)
+
+        out = {}
+        if self.n_dense:
+            out["dense"] = stack(one, self.n_dense)
+        if self.n_moe:
+            out["moe"] = stack(one, self.n_moe)
+        return out
+
+    def cache_init(self, batch: int, max_seq: int):
+        return jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            self.cache_spec(batch, max_seq))
+
+    def cache_axes(self):
+        """Logical axes for cache leaves: (layers, batch, seq, kv_heads, hd)."""
+        spec = (None, "batch", None, L.KV_HEADS, L.HEAD_DIM)
+        out = {}
+        if self.n_dense:
+            out["dense"] = {"k": spec, "v": spec}
+        if self.n_moe:
+            out["moe"] = {"k": spec, "v": spec}
+        return out

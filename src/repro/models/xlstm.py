@@ -1,0 +1,396 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunk-parallelizable) and sLSTM
+(scalar memory with hidden-to-hidden recurrence — inherently sequential,
+lowered to `lax.scan`; DESIGN.md §8.5).
+
+Simplification (documented): we use sigmoid input/forget gates for mLSTM
+instead of the paper's exponential-gate + max-stabilizer, which keeps the
+chunked form identical to SSD with per-head decays; the normalizer state
+is folded in as an extra value column (v' = [v, 1]), so h = num/den comes
+out of one matrix recurrence.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .transformer import norm_fns, stacked_init, stacked_specs, xent_loss
+
+
+def _dims(cfg):
+    nh = cfg.n_heads
+    hd = cfg.d_model // nh  # qk and v head dim
+    return nh, hd
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg):
+    nh, hd = _dims(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d = cfg.d_model
+    return {
+        "norm": {"scale": jnp.ones((d,), cfg.param_dtype)},
+        "wqkv": L.he_init(k1, (d, 3 * d), cfg.param_dtype),
+        "wif": L.he_init(k2, (d, 2 * nh), cfg.param_dtype),
+        "if_bias": jnp.concatenate(
+            [jnp.zeros((nh,), jnp.float32),
+             jnp.full((nh,), 2.0, jnp.float32)]),  # forget bias -> remember
+        "wo_gate": L.he_init(k3, (d, d), cfg.param_dtype),
+        "out_proj": L.he_init(k4, (d, d), cfg.param_dtype),
+    }
+
+
+def mlstm_specs(cfg):
+    return {
+        "norm": {"scale": (L.EMBED,)},
+        "wqkv": (L.EMBED, L.MLP),
+        "wif": (L.EMBED, None),
+        "if_bias": (None,),
+        "wo_gate": (L.EMBED, L.MLP),
+        "out_proj": (L.MLP, L.EMBED),
+    }
+
+
+def _mlstm_gates(p, xn, nh):
+    raw = jnp.einsum("btd,dg->btg", xn, p["wif"].astype(xn.dtype)) \
+        .astype(jnp.float32) + p["if_bias"]
+    i_g = jax.nn.sigmoid(raw[..., :nh])       # (B,T,H)
+    f_g = jax.nn.sigmoid(raw[..., nh:])
+    return i_g, f_g
+
+
+def mlstm_apply(p, x, cfg, return_cache: bool = False):
+    b, t, d = x.shape
+    nh, hd = _dims(cfg)
+    xn = L.rmsnorm(p["norm"], x)
+    qkv = jnp.einsum("btd,de->bte", xn, p["wqkv"].astype(xn.dtype))
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, t, nh, hd)
+    k = k.reshape(b, t, nh, hd) / (hd ** 0.5)
+    v = v.reshape(b, t, nh, hd)
+    i_g, f_g = _mlstm_gates(p, xn, nh)
+    # fold normalizer: v' = [v, 1]
+    v1 = jnp.concatenate(
+        [v, jnp.ones(v.shape[:-1] + (1,), v.dtype)], axis=-1)
+
+    c = min(cfg.ssm_chunk, t)
+    assert t % c == 0
+    nc = t // c
+    qf = q.reshape(b, nc, c, nh, hd).astype(jnp.float32)
+    kf = k.reshape(b, nc, c, nh, hd).astype(jnp.float32)
+    vf = v1.reshape(b, nc, c, nh, hd + 1).astype(jnp.float32)
+    dac = jnp.log(f_g + 1e-8).reshape(b, nc, c, nh)
+    dtc = i_g.reshape(b, nc, c, nh)
+
+    def chunk_step(state, inp):
+        qb, kb, vb, dtb, dab = inp
+        cum = jnp.cumsum(dab, axis=1)
+        total = cum[:, -1:, :]
+        wij = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])
+        mask = jnp.tril(jnp.ones((c, c), bool))
+        wij = jnp.where(mask[None, :, :, None], wij, 0.0)
+        qk = jnp.einsum("bihn,bjhn->bijh", qb, kb)
+        dtv = vb * dtb[..., None]
+        y_intra = jnp.einsum("bijh,bijh,bjhp->bihp", qk, wij, dtv)
+        y_inter = jnp.einsum("bihn,bnhp,bih->bihp", qb, state, jnp.exp(cum))
+        wlast = jnp.exp(total - cum)
+        s_new = jnp.einsum("bjhn,bjh,bjhp->bnhp", kb, wlast, dtv)
+        state = jnp.exp(total[:, 0])[:, None, :, None] * state + s_new
+        return state, y_intra + y_inter
+
+    init = jnp.zeros((b, hd, nh, hd + 1), jnp.float32)
+    xs_t = jax.tree_util.tree_map(
+        lambda a: jnp.moveaxis(a, 1, 0), (qf, kf, vf, dtc, dac))
+    final_state, ys = jax.lax.scan(chunk_step, init, xs_t,
+                                   unroll=bool(cfg.scan_unroll))
+    yv = jnp.moveaxis(ys, 0, 1).reshape(b, t, nh, hd + 1)
+    num, den = yv[..., :hd], yv[..., hd:]
+    h = num / jnp.maximum(jnp.abs(den), 1.0)
+    h = h.reshape(b, t, d).astype(x.dtype)
+    og = jax.nn.sigmoid(
+        jnp.einsum("btd,de->bte", xn, p["wo_gate"].astype(xn.dtype)))
+    out = jnp.einsum("bte,ed->btd", h * og, p["out_proj"].astype(x.dtype))
+    if return_cache:
+        return x + out, {"state": final_state}
+    return x + out
+
+
+def mlstm_decode(p, x, cfg, cache, pos):
+    b, _, d = x.shape
+    nh, hd = _dims(cfg)
+    xn = L.rmsnorm(p["norm"], x)
+    qkv = jnp.einsum("btd,de->bte", xn, p["wqkv"].astype(xn.dtype))[:, 0]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, nh, hd).astype(jnp.float32)
+    k = (k.reshape(b, nh, hd) / (hd ** 0.5)).astype(jnp.float32)
+    v = v.reshape(b, nh, hd).astype(jnp.float32)
+    v1 = jnp.concatenate([v, jnp.ones((b, nh, 1), jnp.float32)], axis=-1)
+    i_g, f_g = _mlstm_gates(p, xn, nh)
+    i1, f1 = i_g[:, 0], f_g[:, 0]             # (B,H)
+    state = cache["state"]                    # (B, hd, H, hd+1)
+    state = f1[:, None, :, None] * state + jnp.einsum(
+        "bhn,bhp->bnhp", k, v1 * i1[..., None])
+    yv = jnp.einsum("bhn,bnhp->bhp", q, state)
+    num, den = yv[..., :hd], yv[..., hd:]
+    h = (num / jnp.maximum(jnp.abs(den), 1.0)).reshape(b, 1, d).astype(x.dtype)
+    og = jax.nn.sigmoid(
+        jnp.einsum("btd,de->bte", xn, p["wo_gate"].astype(xn.dtype)))
+    out = jnp.einsum("bte,ed->btd", h * og, p["out_proj"].astype(x.dtype))
+    return x + out, {"state": state}
+
+
+def mlstm_cache_spec(cfg, batch):
+    nh, hd = _dims(cfg)
+    return {"state": jax.ShapeDtypeStruct((batch, hd, nh, hd + 1),
+                                          jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (sequential scan)
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg):
+    nh, hd = _dims(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {
+        "norm": {"scale": jnp.ones((d,), cfg.param_dtype)},
+        "wx": L.he_init(k1, (d, 4 * d), cfg.param_dtype),       # z i f o
+        "rh": L.he_init(k2, (nh, hd, 4 * hd), cfg.param_dtype,
+                        fan_in=hd),                              # block-diag
+        "bias": jnp.zeros((4 * d,), jnp.float32),
+        "out_proj": L.he_init(k3, (d, d), cfg.param_dtype),
+    }
+
+
+def slstm_specs(cfg):
+    return {
+        "norm": {"scale": (L.EMBED,)},
+        "wx": (L.EMBED, L.MLP),
+        "rh": (L.HEADS, None, None),
+        "bias": (None,),
+        "out_proj": (L.MLP, L.EMBED),
+    }
+
+
+def _slstm_cell(p, xt, state, cfg):
+    """One sLSTM step.  xt: (B, 4d) precomputed Wx; state: (c,n,h)."""
+    nh, hd = _dims(cfg)
+    c_prev, n_prev, h_prev = state
+    b = xt.shape[0]
+    hh = h_prev.reshape(b, nh, hd)
+    rec = jnp.einsum("bhk,hkg->bhg", hh, p["rh"].astype(h_prev.dtype))
+    rec = rec.reshape(b, 4 * nh * hd)
+    pre = (xt + rec).astype(jnp.float32) + p["bias"]
+    z, i, f, o = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z)
+    i = jax.nn.sigmoid(i)
+    f = jax.nn.sigmoid(f)
+    o = jax.nn.sigmoid(o)
+    c_new = f * c_prev + i * z
+    n_new = f * n_prev + i
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new.astype(h_prev.dtype))
+
+
+def slstm_apply(p, x, cfg, return_cache: bool = False):
+    b, t, d = x.shape
+    xn = L.rmsnorm(p["norm"], x)
+    wx = jnp.einsum("btd,dg->btg", xn, p["wx"].astype(xn.dtype))
+
+    def step(state, xt):
+        new = _slstm_cell(p, xt, state, cfg)
+        return new, new[2]
+
+    init = (jnp.zeros((b, d), jnp.float32), jnp.zeros((b, d), jnp.float32),
+            jnp.zeros((b, d), x.dtype))
+    state, hs = jax.lax.scan(step, init, jnp.moveaxis(wx, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    out = jnp.einsum("btd,de->bte", h, p["out_proj"].astype(x.dtype))
+    if return_cache:
+        return x + out, {"c": state[0], "n": state[1], "h": state[2]}
+    return x + out
+
+
+def slstm_decode(p, x, cfg, cache, pos):
+    xn = L.rmsnorm(p["norm"], x)
+    wx = jnp.einsum("btd,dg->btg", xn, p["wx"].astype(xn.dtype))[:, 0]
+    state = (cache["c"], cache["n"], cache["h"])
+    c, n, h = _slstm_cell(p, wx, state, cfg)
+    out = jnp.einsum("bd,de->be", h.astype(x.dtype),
+                     p["out_proj"].astype(x.dtype))[:, None, :]
+    return x + out, {"c": c, "n": n, "h": h}
+
+
+def slstm_cache_spec(cfg, batch):
+    d = cfg.d_model
+    return {"c": jax.ShapeDtypeStruct((batch, d), jnp.float32),
+            "n": jax.ShapeDtypeStruct((batch, d), jnp.float32),
+            "h": jax.ShapeDtypeStruct((batch, d), jnp.dtype(cfg.dtype))}
+
+
+# ---------------------------------------------------------------------------
+# Full model: mLSTM stack with sLSTM every `slstm_every` positions
+# ---------------------------------------------------------------------------
+
+
+class XLSTMLM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        k = cfg.slstm_every
+        self.slstm_idx = [i for i in range(cfg.n_layers)
+                          if k and (i % k == k - 1)]
+        self.mlstm_idx = [i for i in range(cfg.n_layers)
+                          if i not in self.slstm_idx]
+
+    def init(self, key):
+        cfg = self.cfg
+        km, ks, ke = jax.random.split(key, 3)
+        return {
+            "embed": L.embedding_init(ke, cfg),
+            "mlstm_layers": stacked_init(
+                lambda k: mlstm_init(k, cfg), km, len(self.mlstm_idx)),
+            "slstm_layers": stacked_init(
+                lambda k: slstm_init(k, cfg), ks, max(len(self.slstm_idx), 1)),
+            "final_norm": {"scale": jnp.ones((cfg.d_model,), cfg.param_dtype)},
+        }
+
+    def param_specs(self):
+        cfg = self.cfg
+        return {
+            "embed": L.embedding_specs(),
+            "mlstm_layers": stacked_specs(mlstm_specs(cfg)),
+            "slstm_layers": stacked_specs(slstm_specs(cfg)),
+            "final_norm": {"scale": (L.EMBED,)},
+        }
+
+    def _forward(self, p, x, collect=False):
+        """Python-unrolled interleave of the two scans: contiguous mLSTM
+        runs are scanned; sLSTM layers interleave between runs."""
+        cfg = self.cfg
+        caches_m, caches_s = [], []
+        mi = si = 0
+        i = 0
+        while i < cfg.n_layers:
+            run = 0
+            while (i + run) < cfg.n_layers and (i + run) in self.mlstm_idx:
+                run += 1
+            if run:
+                grp = jax.tree_util.tree_map(
+                    lambda a: a[mi: mi + run], p["mlstm_layers"])
+
+                def body(h, lp):
+                    out, c = mlstm_apply(lp, h, cfg, return_cache=True)
+                    return out, c
+
+                body_fn = jax.checkpoint(body) if cfg.remat else body
+                x, cs = jax.lax.scan(body_fn, x, grp,
+                                     unroll=bool(cfg.scan_unroll))
+                caches_m.append(cs)
+                mi += run
+                i += run
+            if i < cfg.n_layers:  # an sLSTM layer
+                lp = jax.tree_util.tree_map(
+                    lambda a: a[si], p["slstm_layers"])
+                x, c = slstm_apply(lp, x, cfg, return_cache=True)
+                caches_s.append(c)
+                si += 1
+                i += 1
+        cm = jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs), *caches_m) if caches_m else None
+        csc = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *caches_s) if caches_s else None
+        return x, cm, csc
+
+    def loss_fn(self, p, batch):
+        cfg = self.cfg
+        x = L.embed(p["embed"], batch["tokens"]).astype(cfg.act_dtype)
+        x, _, _ = self._forward(p, x)
+        x = L.rmsnorm(p["final_norm"], x)
+        return xent_loss(L.unembed(p["embed"], x), batch["labels"])
+
+    def prefill(self, p, batch):
+        cfg = self.cfg
+        x = L.embed(p["embed"], batch["tokens"]).astype(cfg.act_dtype)
+        x, cm, cs = self._forward(p, x)
+        x = L.rmsnorm(p["final_norm"], x)
+        logits = L.unembed(p["embed"], x[:, -1:, :])
+        cache = {"mlstm": cm}
+        if cs is not None:
+            cache["slstm"] = cs
+        return logits, cache
+
+    def decode_step(self, p, cache, tokens, pos):
+        cfg = self.cfg
+        x = L.embed(p["embed"], tokens).astype(cfg.act_dtype)
+        new_m, new_s = [], []
+        mi = si = 0
+        i = 0
+        while i < cfg.n_layers:
+            run = 0
+            while (i + run) < cfg.n_layers and (i + run) in self.mlstm_idx:
+                run += 1
+            if run:
+                grp = jax.tree_util.tree_map(
+                    lambda a: a[mi: mi + run], p["mlstm_layers"])
+                gc = jax.tree_util.tree_map(
+                    lambda a: a[mi: mi + run], cache["mlstm"])
+
+                def body(h, lp_c):
+                    lp, c = lp_c
+                    out, nc = mlstm_decode(lp, h, cfg, c, pos)
+                    return out, nc
+
+                x, nc = jax.lax.scan(body, x, (grp, gc),
+                                     unroll=bool(cfg.scan_unroll))
+                new_m.append(nc)
+                mi += run
+                i += run
+            if i < cfg.n_layers:
+                lp = jax.tree_util.tree_map(lambda a: a[si], p["slstm_layers"])
+                sc = jax.tree_util.tree_map(lambda a: a[si], cache["slstm"])
+                x, nc = slstm_decode(lp, x, cfg, sc, pos)
+                new_s.append(nc)
+                si += 1
+                i += 1
+        x = L.rmsnorm(p["final_norm"], x)
+        logits = L.unembed(p["embed"], x)
+        new_cache = {"mlstm": jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs), *new_m)}
+        if new_s:
+            new_cache["slstm"] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *new_s)
+        return logits, new_cache
+
+    def cache_spec(self, batch, max_seq):
+        cfg = self.cfg
+        m_one = mlstm_cache_spec(cfg, batch)
+        out = {"mlstm": jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(
+                (len(self.mlstm_idx),) + s.shape, s.dtype), m_one)}
+        if self.slstm_idx:
+            s_one = slstm_cache_spec(cfg, batch)
+            out["slstm"] = jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct(
+                    (len(self.slstm_idx),) + s.shape, s.dtype), s_one)
+        return out
+
+    def cache_init(self, batch, max_seq):
+        return jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            self.cache_spec(batch, max_seq))
+
+    def cache_axes(self):
+        out = {"mlstm": {"state": (None, "batch", None, L.HEADS, None)}}
+        if self.slstm_idx:
+            out["slstm"] = {"c": (None, "batch", L.EMBED),
+                            "n": (None, "batch", L.EMBED),
+                            "h": (None, "batch", L.EMBED)}
+        return out

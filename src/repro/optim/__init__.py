@@ -1,0 +1,4 @@
+"""Optimizer substrate: AdamW (plain / weld-fused / pallas), schedules,
+gradient clipping + accumulation, int8 error-feedback compression."""
+from .adamw import adamw_init, adamw_update_tree, clip_by_global_norm  # noqa: F401
+from .schedule import cosine_warmup  # noqa: F401

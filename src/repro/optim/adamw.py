@@ -1,0 +1,156 @@
+"""AdamW over parameter pytrees.
+
+Three implementations of the same update (see benchmarks/bench_fused_adamw):
+  * "jax"    — jnp elementwise chain (inside the jitted train step XLA
+               fuses it; this is the production path)
+  * "pallas" — the explicit fused VMEM kernel (kernels/fused_adamw.py)
+  * "weld"   — the update chain expressed as Weld IR and fused by the
+               paper's optimizer; demonstrates the paper's "within one
+               library" speedup when the optimizer runs as a separate
+               eager library (benchmarks only).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops as kops
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree_util.tree_leaves(grads)
+    ))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads
+    ), gn
+
+
+def _leaf_update_jax(p, g, m, v, lr, t, b1, b2, eps, wd):
+    gf = g.astype(jnp.float32)
+    pf = p.astype(jnp.float32)
+    m_new = b1 * m + (1 - b1) * gf
+    v_new = b2 * v + (1 - b2) * gf * gf
+    c1 = 1 - b1 ** t
+    c2 = 1 - b2 ** t
+    upd = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps) + wd * pf
+    return (pf - lr * upd).astype(p.dtype), m_new, v_new
+
+
+def _leaf_update_pallas(p, g, m, v, lr, t, b1, b2, eps, wd):
+    shp, dt = p.shape, p.dtype
+    flat = lambda a: a.reshape(-1).astype(jnp.float32)
+    pn, mn, vn = kops.adamw_update(
+        flat(p), flat(g), flat(m), flat(v), lr, t,
+        b1=b1, b2=b2, eps=eps, wd=wd, impl="interpret",
+    )
+    return pn.reshape(shp).astype(dt), mn.reshape(shp), vn.reshape(shp)
+
+
+def adamw_update_tree(params, grads, state, lr, *, b1=0.9, b2=0.999,
+                      eps=1e-8, wd=0.01, impl: str = "jax"):
+    """Returns (new_params, new_state)."""
+    t = (state["step"] + 1).astype(jnp.float32)
+    leaf = _leaf_update_pallas if impl == "pallas" else _leaf_update_jax
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state["m"])
+    flat_v = jax.tree_util.tree_leaves(state["v"])
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        pn, mn, vn = leaf(p, g, m, v, lr, t, b1, b2, eps, wd)
+        new_p.append(pn)
+        new_m.append(mn)
+        new_v.append(vn)
+    unf = functools.partial(jax.tree_util.tree_unflatten, treedef)
+    return unf(new_p), {
+        "m": unf(new_m), "v": unf(new_v), "step": state["step"] + 1,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Weld-expressed AdamW (the paper-native form; benchmarks only)
+# ---------------------------------------------------------------------------
+
+
+def adamw_update_weld(p, g, m, v, lr: float, t: float, b1=0.9, b2=0.999,
+                      eps=1e-8, wd=0.01):
+    """One flat-leaf AdamW step as a single fused Weld program.
+
+    Eight logical elementwise passes fuse to ONE loop producing three
+    outputs through a struct of builders (Listing 3's pattern at
+    production scale)."""
+    import numpy as np
+
+    from ..core import ir, macros as M, wtypes as wt
+    from ..core.lazy import Evaluate, NewWeldObject
+
+    po = NewWeldObject(np.asarray(p, np.float64), None)
+    go = NewWeldObject(np.asarray(g, np.float64), None)
+    mo = NewWeldObject(np.asarray(m, np.float64), None)
+    vo = NewWeldObject(np.asarray(v, np.float64), None)
+    ids = {o.obj_id: ir.Ident(o.obj_id, o.weld_type())
+           for o in (po, go, mo, vo)}
+    pi, gi, mi, vi = ids.values()
+
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+    f = lambda x: ir.Literal(float(x), wt.F64)
+
+    def body(pp, gg, mm, vv):
+        m_new = ir.BinOp("+", ir.BinOp("*", f(b1), mm),
+                         ir.BinOp("*", f(1 - b1), gg))
+        v_new = ir.BinOp("+", ir.BinOp("*", f(b2), vv),
+                         ir.BinOp("*", f(1 - b2), ir.BinOp("*", gg, gg)))
+        mlet = ir.Ident(ir.fresh("mn"), wt.F64)
+        vlet = ir.Ident(ir.fresh("vn"), wt.F64)
+        upd = ir.BinOp(
+            "+",
+            ir.BinOp("/", ir.BinOp("/", mlet, f(c1)),
+                     ir.BinOp("+", ir.UnaryOp(
+                         "sqrt", ir.BinOp("/", vlet, f(c2))), f(eps))),
+            ir.BinOp("*", f(wd), pp),
+        )
+        p_new = ir.BinOp("-", pp, ir.BinOp("*", f(lr), upd))
+        return ir.Let(mlet.name, m_new, ir.Let(
+            vlet.name, v_new,
+            ir.MakeStruct((p_new, mlet, vlet))))
+
+    st = wt.Struct((wt.F64, wt.F64, wt.F64, wt.F64))
+    bt = wt.StructBuilder((
+        wt.VecBuilder(wt.F64), wt.VecBuilder(wt.F64), wt.VecBuilder(wt.F64)))
+    b = ir.Ident(ir.fresh("b"), bt)
+    i = ir.Ident(ir.fresh("i"), wt.I64)
+    x = ir.Ident(ir.fresh("x"), st)
+    res = body(*[ir.GetField(x, k) for k in range(4)])
+    out = ir.Ident(ir.fresh("o"), wt.Struct((wt.F64, wt.F64, wt.F64)))
+    lam_body = ir.Let(
+        out.name, res,
+        ir.MakeStruct((
+            ir.Merge(ir.GetField(b, 0), ir.GetField(out, 0)),
+            ir.Merge(ir.GetField(b, 1), ir.GetField(out, 1)),
+            ir.Merge(ir.GetField(b, 2), ir.GetField(out, 2)),
+        )),
+    )
+    loop = ir.Result(ir.For(
+        (ir.Iter(pi), ir.Iter(gi), ir.Iter(mi), ir.Iter(vi)),
+        ir.MakeStruct((ir.NewBuilder(wt.VecBuilder(wt.F64)),) * 3),
+        ir.Lambda((b, i, x), lam_body),
+    ))
+    obj = NewWeldObject([po, go, mo, vo], loop)
+    out_p, out_m, out_v = Evaluate(obj).value
+    return out_p, out_m, out_v

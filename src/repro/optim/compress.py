@@ -1,0 +1,69 @@
+"""Int8 error-feedback gradient compression for the cross-pod hop.
+
+At 512+ chips the pod-interconnect (DCI) all-reduce is the scarcest
+bandwidth; 4× compression with error feedback keeps convergence while
+quartering the cross-pod bytes (DESIGN.md §5).  The within-pod reduction
+stays full precision.
+
+Usage (inside shard_map over the 'pod' axis):
+
+    g_sync, err = compressed_psum(g_local, err, axis_name="pod")
+
+`err` is carried in the optimizer state; the quantization residual is
+re-added next step, so the compression bias telescopes instead of
+accumulating.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(g: jax.Array, err: jax.Array, axis_name: str):
+    """Error-feedback int8 all-reduce over `axis_name`.
+    Returns (mean-reduced gradient, new error buffer)."""
+    corrected = g.astype(jnp.float32) + err
+    q, scale = quantize_int8(corrected)
+    sent = dequantize_int8(q, scale)
+    new_err = corrected - sent
+    # int8 payload on the wire (the all-gather moves int8, 4x fewer
+    # bytes); each shard is dequantized with ITS OWN scale, so the
+    # reduction is exact up to per-shard quantization error
+    qs = jax.lax.all_gather(q, axis_name)                # (P, ...) int8
+    scales = jax.lax.all_gather(scale, axis_name)        # (P,)
+    n = qs.shape[0]
+    bshape = (n,) + (1,) * (qs.ndim - 1)
+    mean = jnp.sum(
+        qs.astype(jnp.float32) * scales.reshape(bshape), axis=0
+    ) / n
+    return mean, new_err
+
+
+def tree_compressed_psum(grads, errs, axis_name: str):
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(errs)
+    out_g, out_e = [], []
+    for g, e in zip(flat_g, flat_e):
+        m, ne = compressed_psum(g, e, axis_name)
+        out_g.append(m.astype(g.dtype))
+        out_e.append(ne)
+    return (jax.tree_util.tree_unflatten(treedef, out_g),
+            jax.tree_util.tree_unflatten(treedef, out_e))
+
+
+def init_error_buffers(grads):
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads)

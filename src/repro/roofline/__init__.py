@@ -1,0 +1,2 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+from .analysis import HW_V5E, collective_bytes_from_hlo, roofline_terms  # noqa: F401

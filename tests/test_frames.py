@@ -1,0 +1,276 @@
+"""Library-integration tests (paper §6): weldnp / welddf / weldrel /
+weldflow agree with native NumPy on every ported operator and compose
+across libraries into fused programs."""
+import numpy as np
+import pytest
+
+from repro.core import runtime
+from repro.frames import welddf, weldflow, weldnp, weldrel
+
+rng = np.random.RandomState(42)
+
+
+# ---------------------------------------------------------------------------
+# weldnp
+# ---------------------------------------------------------------------------
+
+
+class TestWeldNP:
+    def test_elementwise_chain(self):
+        a = rng.rand(1000)
+        b = rng.rand(1000)
+        wa, wb = weldnp.array(a), weldnp.array(b)
+        out = (wa * 2.0 + wb / 3.0 - 1.0).to_numpy()
+        np.testing.assert_allclose(out, a * 2.0 + b / 3.0 - 1.0, rtol=1e-12)
+
+    def test_fusion_collapses_chain(self):
+        runtime.clear_cache()
+        a = weldnp.array(rng.rand(100))
+        stats = {}
+        out = ((a + 1.0) * 2.0 - 0.5)
+        res = out.obj.evaluate()
+        st = {}
+        from repro.core.lazy import Evaluate
+        Evaluate(((a + 1.0) * 2.0 - 0.5).obj, collect_stats=st)
+        assert st["loops.after"] == 1
+
+    def test_unary_math(self):
+        a = rng.rand(500) + 0.5
+        wa = weldnp.array(a)
+        np.testing.assert_allclose(weldnp.exp(wa).to_numpy(), np.exp(a), rtol=1e-12)
+        np.testing.assert_allclose(weldnp.log(wa).to_numpy(), np.log(a), rtol=1e-12)
+        np.testing.assert_allclose(weldnp.sqrt(wa).to_numpy(), np.sqrt(a), rtol=1e-12)
+        import math
+        np.testing.assert_allclose(
+            weldnp.erf(wa).to_numpy(), np.vectorize(math.erf)(a), rtol=1e-10
+        )
+
+    def test_reductions(self):
+        a = rng.rand(256)
+        wa = weldnp.array(a)
+        assert abs(wa.sum().item() - a.sum()) < 1e-9
+        assert abs(wa.min().item() - a.min()) < 1e-12
+        assert abs(wa.max().item() - a.max()) < 1e-12
+
+    def test_scalar_broadcast_and_reverse_ops(self):
+        a = rng.rand(64)
+        wa = weldnp.array(a)
+        np.testing.assert_allclose((2.0 - wa).to_numpy(), 2.0 - a)
+        np.testing.assert_allclose((1.0 / (wa + 1.0)).to_numpy(), 1.0 / (a + 1.0))
+
+    def test_dot_1d(self):
+        a, b = rng.rand(128), rng.rand(128)
+        got = weldnp.dot(weldnp.array(a), weldnp.array(b)).item()
+        assert abs(got - np.dot(a, b)) < 1e-9
+
+    def test_matvec(self):
+        m, v = rng.rand(32, 16), rng.rand(16)
+        got = weldnp.array(m).dot(weldnp.array(v)).to_numpy()
+        np.testing.assert_allclose(got, m @ v, rtol=1e-12)
+
+    def test_matmul(self):
+        a, b = rng.rand(8, 4), rng.rand(4, 6)
+        got = weldnp.array(a).dot(weldnp.array(b)).to_numpy()
+        np.testing.assert_allclose(got, a @ b, rtol=1e-12)
+
+    def test_where(self):
+        c = rng.rand(100)
+        wa = weldnp.array(c)
+        got = weldnp.where(wa > 0.5, wa * 2.0, -1.0).to_numpy()
+        np.testing.assert_allclose(got, np.where(c > 0.5, c * 2.0, -1.0))
+
+    def test_astype(self):
+        a = rng.rand(32) * 10
+        got = weldnp.array(a).astype(np.int64).to_numpy()
+        np.testing.assert_array_equal(got, a.astype(np.int64))
+
+    def test_int_comparison_dtype(self):
+        a = np.arange(10, dtype=np.int64)
+        mask = (weldnp.array(a) > 4).to_numpy()
+        assert mask.dtype == np.bool_
+        np.testing.assert_array_equal(mask, a > 4)
+
+    def test_eager_mode_matches(self):
+        a = rng.rand(100)
+        lazy = (weldnp.array(a) * 3.0 + 1.0).sum().item()
+        eager = (weldnp.array(a, eager=True) * 3.0 + 1.0).sum()._eager.item()
+        assert abs(lazy - eager) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# welddf
+# ---------------------------------------------------------------------------
+
+
+class TestWeldDF:
+    def _df(self, eager=False):
+        pop = rng.randint(0, 1_000_000, 20_000).astype(np.int64)
+        crime = rng.rand(20_000)
+        return welddf.DataFrame(
+            {"population": pop, "crime": crime}, eager=eager
+        ), pop, crime
+
+    def test_listing7_filter_sum(self):
+        df, pop, _ = self._df()
+        got = df[df["population"] > 500_000].agg_sum("population").item()
+        assert got == pop[pop > 500_000].sum()
+
+    def test_filtered_column_materialization(self):
+        df, pop, _ = self._df()
+        got = df[df["population"] > 900_000]["population"].to_numpy()
+        np.testing.assert_array_equal(np.sort(got), np.sort(pop[pop > 900_000]))
+
+    def test_count(self):
+        df, pop, _ = self._df()
+        assert df[df["population"] > 500_000].count().item() == \
+            int((pop > 500_000).sum())
+        assert df.count().item() == len(pop)
+
+    def test_cross_library_crime_index(self):
+        """The paper's crime-index workload: welddf filter + weldnp math."""
+        df, pop, crime = self._df()
+        big = df[df["population"] > 500_000]
+        idx = big["population"] * 0.1 + big["crime"] * 2.0
+        got = idx.sum().item()
+        m = pop > 500_000
+        want = (pop[m] * 0.1 + crime[m] * 2.0).sum()
+        assert abs(got - want) < 1e-6 * abs(want)
+
+    def test_groupby_sum(self):
+        keys = rng.randint(0, 5, 5000).astype(np.int64)
+        vals = rng.rand(5000)
+        df = welddf.DataFrame({"k": keys, "v": vals})
+        got = df.groupby_sum("k", "v", capacity=16)
+        for k in range(5):
+            assert abs(got[k] - vals[keys == k].sum()) < 1e-8
+
+    def test_groupby_sum_filtered(self):
+        keys = rng.randint(0, 4, 4000).astype(np.int64)
+        vals = rng.rand(4000)
+        df = welddf.DataFrame({"k": keys, "v": vals})
+        fdf = df[df["v"] > 0.5]
+        got = fdf.groupby_sum("k", "v", capacity=16)
+        for k in range(4):
+            m = (keys == k) & (vals > 0.5)
+            assert abs(got[k] - vals[m].sum()) < 1e-8
+
+    def test_unique(self):
+        keys = rng.randint(0, 7, 1000).astype(np.int64)
+        df = welddf.DataFrame({"k": keys})
+        np.testing.assert_array_equal(df.unique("k", capacity=32), np.unique(keys))
+
+    def test_slice_code(self):
+        zips = np.array([9_411_023, 94_110, 612, 12_345_678], dtype=np.int64)
+        df = welddf.DataFrame({"zip": zips})
+        got = df.slice_code("zip", 5).to_numpy()
+        np.testing.assert_array_equal(got, np.array([94110, 94110, 612, 12345]))
+
+    def test_eager_paths_match(self):
+        df, pop, crime = self._df()
+        dfe = welddf.DataFrame({"population": pop.copy(), "crime": crime.copy()},
+                               eager=True)
+        lazy = df[df["population"] > 500_000].agg_sum("population").item()
+        eager = dfe[dfe["population"] > 500_000].agg_sum("population")._eager.item()
+        assert lazy == eager
+
+
+# ---------------------------------------------------------------------------
+# weldrel (TPC-H shapes)
+# ---------------------------------------------------------------------------
+
+
+class TestWeldRel:
+    def _lineitem(self, n=20_000):
+        return {
+            "ship": rng.randint(0, 2557, n).astype(np.int64),
+            "disc": rng.uniform(0, 0.1, n),
+            "qty": rng.uniform(1, 50, n),
+            "price": rng.uniform(100, 10_000, n),
+            "tax": rng.uniform(0, 0.08, n),
+            "rf": rng.randint(0, 3, n).astype(np.int64),
+            "ls": rng.randint(0, 2, n).astype(np.int64),
+        }
+
+    def test_q6(self):
+        cols = self._lineitem()
+        t = weldrel.Table(cols)
+        q = weldrel.Query(t).filter(
+            (t.col("ship") >= 365) & (t.col("ship") < 730)
+            & (t.col("disc") >= 0.05) & (t.col("disc") <= 0.07)
+            & (t.col("qty") < 24.0)
+        )
+        got = q.agg({"rev": (t.col("price") * t.col("disc"), "+")})["rev"]
+        m = (
+            (cols["ship"] >= 365) & (cols["ship"] < 730)
+            & (cols["disc"] >= 0.05) & (cols["disc"] <= 0.07)
+            & (cols["qty"] < 24.0)
+        )
+        want = (cols["price"] * cols["disc"])[m].sum()
+        assert abs(got - want) < 1e-6 * max(abs(want), 1)
+
+    def test_q1_grouped(self):
+        cols = self._lineitem()
+        t = weldrel.Table(cols)
+        disc_price = t.col("price") * (1.0 - t.col("disc"))
+        charge = disc_price * (1.0 + t.col("tax"))
+        q = weldrel.Query(t).filter(t.col("ship") <= 2000)
+        out = q.group_agg(
+            [t.col("rf"), t.col("ls")],
+            {
+                "sum_qty": (t.col("qty"), "+"),
+                "sum_base": (t.col("price"), "+"),
+                "sum_disc_price": (disc_price, "+"),
+                "sum_charge": (charge, "+"),
+            },
+            capacity=64,
+        )
+        m = cols["ship"] <= 2000
+        for rf in range(3):
+            for ls in range(2):
+                g = m & (cols["rf"] == rf) & (cols["ls"] == ls)
+                if not g.any():
+                    continue
+                sq, sb, sdp, sc, cnt = out[(rf, ls)]
+                assert abs(sq - cols["qty"][g].sum()) < 1e-6 * sq
+                assert abs(sb - cols["price"][g].sum()) < 1e-6 * sb
+                dp = (cols["price"] * (1 - cols["disc"]))[g].sum()
+                assert abs(sdp - dp) < 1e-6 * dp
+                assert cnt == int(g.sum())
+
+    def test_eager_agg_matches(self):
+        cols = self._lineitem(2000)
+        t = weldrel.Table(cols, eager=True)
+        tl = weldrel.Table(cols)
+        qe = weldrel.Query(t).filter(t.col("qty") < 24.0)
+        got_e = qe.agg({"rev": (t.col("price") * t.col("disc"), "+")})["rev"]
+        ql = weldrel.Query(tl).filter(tl.col("qty") < 24.0)
+        got_l = ql.agg({"rev": (tl.col("price") * tl.col("disc"), "+")})["rev"]
+        assert abs(got_e - got_l) < 1e-6 * abs(got_e)
+
+
+# ---------------------------------------------------------------------------
+# weldflow
+# ---------------------------------------------------------------------------
+
+
+class TestWeldFlow:
+    def _graph(self):
+        m = rng.rand(500, 20)
+        w = rng.rand(20)
+        x = weldflow.placeholder()
+        logits = weldflow.matvec(x, weldflow.constant(w)) + 0.25
+        probs = weldflow.sigmoid(logits)
+        loss = weldflow.reduce_mean(weldflow.log(probs))
+        return loss, {x: m}, m, w
+
+    def test_three_modes_agree(self):
+        loss, feed, m, w = self._graph()
+        want = np.mean(np.log(1 / (1 + np.exp(-(m @ w + 0.25)))))
+        for mode in ("native", "xla", "weld"):
+            got = weldflow.Session(mode).run(loss, feed)
+            assert abs(float(got) - want) < 1e-9, mode
+
+    def test_transformer_merges_whole_graph(self):
+        loss, feed, _, _ = self._graph()
+        obj, merged = weldflow.transform_graph(loss, feed)
+        assert merged >= 5  # matvec, add, sigmoid, log, mean

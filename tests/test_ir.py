@@ -1,0 +1,143 @@
+"""Weld IR unit tests: types, typecheck, linearity, canonical keys."""
+import numpy as np
+import pytest
+
+from repro.core import ir, macros as M, wtypes as wt
+from repro.core.interp import interpret
+
+
+def test_scalar_types():
+    assert str(wt.Vec(wt.I64)) == "vec[i64]"
+    assert str(wt.DictType(wt.I64, wt.F64)) == "dict[i64,f64]"
+    assert wt.Merger(wt.F64, "+").result_type() == wt.F64
+    assert wt.VecBuilder(wt.I32).result_type() == wt.Vec(wt.I32)
+    assert wt.DictMerger(wt.I64, wt.F64).result_type() == wt.DictType(wt.I64, wt.F64)
+    assert wt.GroupBuilder(wt.I64, wt.F64).result_type() == \
+        wt.DictType(wt.I64, wt.Vec(wt.F64))
+
+
+def test_merge_identity():
+    assert wt.merge_identity("+", wt.F64) == 0.0
+    assert wt.merge_identity("*", wt.I64) == 1
+    assert wt.merge_identity("min", wt.I32) == np.iinfo(np.int32).max
+    assert wt.merge_identity("max", wt.F32) < -1e38
+
+
+def test_typeof_listing1():
+    b1 = ir.NewBuilder(wt.VecBuilder(wt.I64))
+    b2 = ir.Merge(b1, ir.Literal(5, wt.I64))
+    assert ir.typeof(b2) == wt.VecBuilder(wt.I64)
+    assert ir.typeof(ir.Result(b2)) == wt.Vec(wt.I64)
+
+
+def test_typeof_struct_of_builders():
+    s = ir.MakeStruct((
+        ir.NewBuilder(wt.VecBuilder(wt.I64)),
+        ir.NewBuilder(wt.Merger(wt.I64, "+")),
+    ))
+    t = ir.typeof(s)
+    assert isinstance(t, wt.StructBuilder)
+    assert ir.typeof(ir.Result(s)) == wt.Struct((wt.Vec(wt.I64), wt.I64))
+
+
+def test_typeof_rejects_mismatch():
+    with pytest.raises(wt.WeldTypeError):
+        ir.typeof(ir.BinOp("+", ir.Literal(1, wt.I64), ir.Literal(1.0, wt.F64)))
+    with pytest.raises(wt.WeldTypeError):
+        ir.typeof(ir.Merge(ir.NewBuilder(wt.Merger(wt.I64, "+")),
+                           ir.Literal(1.0, wt.F64)))
+
+
+def test_for_typecheck():
+    v = ir.MakeVec((ir.Literal(1, wt.I64), ir.Literal(2, wt.I64)), wt.I64)
+    loop = M.map_(v, lambda x: ir.BinOp("+", x, ir.Literal(1, wt.I64)))
+    assert ir.typeof(loop) == wt.Vec(wt.I64)
+    assert interpret(loop) == [2, 3]
+
+
+def test_linearity_ok():
+    v = ir.MakeVec((ir.Literal(1, wt.I64),), wt.I64)
+    e = M.reduce_(v, "+")
+    ir.check_linearity(e)  # should not raise
+
+
+def test_linearity_violation():
+    bt = wt.Merger(wt.I64, "+")
+    b = ir.Ident("b0", bt)
+    # consume b twice on one path: merge(b, ...) and merge(b, ...) combined
+    bad = ir.Let(
+        "b0", ir.NewBuilder(bt),
+        ir.MakeStruct((ir.Merge(b, ir.Literal(1, wt.I64)),
+                       ir.Merge(b, ir.Literal(2, wt.I64)))),
+    )
+    with pytest.raises(wt.WeldTypeError):
+        ir.check_linearity(bad)
+
+
+def test_linearity_if_paths_ok():
+    """Each control path consumes the builder once (paper's rule)."""
+    bt = wt.Merger(wt.I64, "+")
+    b = ir.Ident("b1", bt)
+    e = ir.Let(
+        "b1", ir.NewBuilder(bt),
+        ir.If(ir.Literal(True, wt.Bool),
+              ir.Merge(b, ir.Literal(1, wt.I64)), b),
+    )
+    ir.check_linearity(e)
+
+
+def test_canon_key_alpha_invariant():
+    v = ir.MakeVec((ir.Literal(1, wt.I64),), wt.I64)
+    a = M.map_(v, lambda x: ir.BinOp("*", x, ir.Literal(3, wt.I64)))
+    b = M.map_(v, lambda x: ir.BinOp("*", x, ir.Literal(3, wt.I64)))
+    assert a is not b
+    assert ir.canon_key(a) == ir.canon_key(b)
+    c = M.map_(v, lambda x: ir.BinOp("*", x, ir.Literal(4, wt.I64)))
+    assert ir.canon_key(a) != ir.canon_key(c)
+
+
+def test_canon_key_iter_fields_disambiguated():
+    v = ir.Ident("v", wt.Vec(wt.I64))
+    lit = ir.Literal(2, wt.I64)
+    i1 = ir.Iter(v, start=lit)
+    i2 = ir.Iter(v, end=lit)
+    assert ir.canon_key(i1) != ir.canon_key(i2)
+
+
+def test_substitute_and_free_vars():
+    x = ir.Ident("x", wt.I64)
+    e = ir.BinOp("+", x, ir.Literal(1, wt.I64))
+    assert set(ir.free_vars(e)) == {"x"}
+    e2 = ir.substitute(e, {"x": ir.Literal(41, wt.I64)})
+    assert interpret(e2) == 42
+    # binder shadowing
+    e3 = ir.Let("x", ir.Literal(5, wt.I64), x)
+    e4 = ir.substitute(e3, {"x": ir.Literal(9, wt.I64)})
+    assert interpret(e4) == 5
+
+
+def test_rename_binders_preserves_semantics():
+    v = ir.MakeVec((ir.Literal(2, wt.I64), ir.Literal(3, wt.I64)), wt.I64)
+    e = M.reduce_(v, "+", fn=lambda x: ir.BinOp("*", x, x))
+    r = ir.rename_binders(e)
+    assert interpret(e) == interpret(r) == 13
+    assert ir.canon_key(e) == ir.canon_key(r)
+
+
+def test_pretty_roundtrip_smoke():
+    v = ir.MakeVec((ir.Literal(1, wt.I64),), wt.I64)
+    e = M.filter_(v, lambda x: ir.BinOp(">", x, ir.Literal(0, wt.I64)))
+    s = str(e)
+    assert "for(" in s and "vecbuilder" in s
+
+
+def test_interp_strided_iter():
+    data = list(range(10))
+    v = ir.Ident("v", wt.Vec(wt.I64))
+    loop = ir.Result(ir.For(
+        (ir.Iter(v, start=ir.Literal(1, wt.I64), end=ir.Literal(9, wt.I64),
+                 stride=ir.Literal(2, wt.I64)),),
+        ir.NewBuilder(wt.VecBuilder(wt.I64)),
+        M._lam3(wt.VecBuilder(wt.I64), wt.I64, lambda b, i, x: ir.Merge(b, x)),
+    ))
+    assert interpret(loop, {"v": data}) == [1, 3, 5, 7]

@@ -1,0 +1,204 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle over
+shape/dtype sweeps, plus hypothesis sweeps for the reductions."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels import filter_reduce, flash_attention, fused_adamw
+from repro.kernels import segment_reduce, tiled_matmul
+
+rng = np.random.RandomState(7)
+
+
+# ---------------------------------------------------------------------------
+# filter_reduce
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 100, 8 * 1024, 8 * 1024 + 3, 40_000])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_filter_reduce_sum_sweep(n, dtype):
+    x = rng.rand(n).astype(dtype)
+    pred = rng.rand(n) > 0.5
+    got = filter_reduce.filter_reduce_sum(
+        jnp.asarray(x), jnp.asarray(pred), interpret=True
+    )
+    want = ref.filter_reduce_sum(jnp.asarray(x), jnp.asarray(pred))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5 if dtype == np.float32 else 1e-12)
+
+
+@pytest.mark.parametrize("k", [1, 3])
+@pytest.mark.parametrize("n", [1000, 9000])
+def test_filter_reduce_q6_sweep(k, n):
+    cols = rng.rand(k, n).astype(np.float32)
+    lo = np.quantile(cols, 0.2, axis=1).astype(np.float32)
+    hi = np.quantile(cols, 0.8, axis=1).astype(np.float32)
+    val = rng.rand(n).astype(np.float32)
+    got = filter_reduce.filter_reduce_q6(
+        jnp.asarray(cols), jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(val),
+        interpret=True,
+    )
+    want = ref.filter_reduce_q6(jnp.asarray(cols), jnp.asarray(lo),
+                                jnp.asarray(hi), jnp.asarray(val))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 3000), seed=st.integers(0, 1 << 30))
+def test_filter_reduce_property(n, seed):
+    r = np.random.RandomState(seed)
+    x = r.randn(n).astype(np.float32)
+    pred = r.rand(n) > r.rand()
+    got = filter_reduce.filter_reduce_sum(jnp.asarray(x), jnp.asarray(pred),
+                                          interpret=True, block=256)
+    np.testing.assert_allclose(np.asarray(got), x[pred].sum(), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# segment_reduce
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,k", [(100, 4), (512, 64), (2048, 128), (700, 13)])
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_segment_sum_sweep(n, k, dtype):
+    seg = rng.randint(0, k, n).astype(np.int32)
+    vals = rng.rand(n).astype(dtype)
+    got = segment_reduce.segment_sum(jnp.asarray(seg), jnp.asarray(vals), k,
+                                     interpret=True)
+    want = ref.segment_sum(jnp.asarray(seg), jnp.asarray(vals), k)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4)
+
+
+@pytest.mark.parametrize("n,k,d", [(64, 4, 8), (300, 16, 32), (512, 8, 128)])
+def test_segment_sum_vectors_sweep(n, k, d):
+    seg = rng.randint(0, k, n).astype(np.int32)
+    vals = rng.rand(n, d).astype(np.float32)
+    got = segment_reduce.segment_sum_vectors(
+        jnp.asarray(seg), jnp.asarray(vals), k, interpret=True, block=128
+    )
+    want = ref.segment_sum_vectors(jnp.asarray(seg), jnp.asarray(vals), k)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused_adamw
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [10, 16 * 1024, 16 * 1024 + 7, 50_000])
+def test_fused_adamw_sweep(n):
+    p = rng.randn(n).astype(np.float32)
+    g = rng.randn(n).astype(np.float32) * 0.1
+    m = rng.randn(n).astype(np.float32) * 0.01
+    v = np.abs(rng.randn(n)).astype(np.float32) * 0.001
+    got = fused_adamw.adamw_update(
+        jnp.asarray(p), jnp.asarray(g), jnp.asarray(m), jnp.asarray(v),
+        3e-4, 5.0, interpret=True,
+    )
+    want = ref.adamw_update(jnp.asarray(p), jnp.asarray(g), jnp.asarray(m),
+                            jnp.asarray(v), 3e-4, 5.0)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5,
+                                   atol=1e-7)
+
+
+def test_fused_adamw_steps_match_sequence():
+    """Multiple consecutive kernel steps track the oracle trajectory."""
+    n = 1000
+    p = rng.randn(n).astype(np.float32)
+    g0 = rng.randn(n).astype(np.float32)
+    m = np.zeros(n, np.float32)
+    v = np.zeros(n, np.float32)
+    pk, mk, vk = jnp.asarray(p), jnp.asarray(m), jnp.asarray(v)
+    pr, mr, vr = jnp.asarray(p), jnp.asarray(m), jnp.asarray(v)
+    for t in range(1, 4):
+        g = jnp.asarray(g0 * t)
+        pk, mk, vk = fused_adamw.adamw_update(pk, g, mk, vk, 1e-3, float(t),
+                                              interpret=True)
+        pr, mr, vr = ref.adamw_update(pr, g, mr, vr, 1e-3, float(t))
+    np.testing.assert_allclose(np.asarray(pk), np.asarray(pr), rtol=1e-5,
+                               atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# tiled_matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (8, 8, 8), (256, 512, 256), (100, 300, 50), (257, 513, 129),
+])
+def test_tiled_matmul_sweep(m, k, n):
+    a = rng.randn(m, k).astype(np.float32)
+    b = rng.randn(k, n).astype(np.float32)
+    got = tiled_matmul.tiled_matmul(jnp.asarray(a), jnp.asarray(b),
+                                    bm=64, bn=64, bk=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), a @ b, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("h,sq,skv,d,group,causal", [
+    (2, 64, 64, 32, 1, True),
+    (4, 128, 128, 64, 2, True),
+    (2, 64, 256, 32, 1, True),    # decode-ish: q shorter than kv
+    (2, 100, 100, 32, 1, False),  # non-causal + padding path
+    (8, 96, 96, 16, 4, True),     # GQA group=4
+])
+def test_flash_attention_sweep(h, sq, skv, d, group, causal):
+    q = rng.randn(h, sq, d).astype(np.float32) * 0.3
+    k = rng.randn(h // group, skv, d).astype(np.float32) * 0.3
+    v = rng.randn(h // group, skv, d).astype(np.float32)
+    got = flash_attention.flash_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+        causal=causal, group=group, bq=32, bk=32, interpret=True,
+    )
+    want = ref.attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                         causal=causal, group=group)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_chunked_attention_matches_dense():
+    q = rng.randn(4, 200, 32).astype(np.float32) * 0.5
+    k = rng.randn(2, 200, 32).astype(np.float32) * 0.5
+    v = rng.randn(2, 200, 32).astype(np.float32)
+    got = ref.chunked_attention(jnp.asarray(q), jnp.asarray(k),
+                                jnp.asarray(v), causal=True, group=2,
+                                chunk=64)
+    want = ref.attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                         causal=True, group=2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# ops dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_ops_impl_dispatch():
+    x = jnp.asarray(rng.rand(1000).astype(np.float32))
+    pred = jnp.asarray(rng.rand(1000) > 0.5)
+    a = ops.filter_reduce_sum(x, pred, impl="ref")
+    b = ops.filter_reduce_sum(x, pred, impl="interpret")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+
+
+def test_ops_default_impl_flip():
+    x = jnp.asarray(rng.rand(128).astype(np.float32))
+    pred = jnp.asarray(np.ones(128, bool))
+    ops.set_default_impl("ref")
+    a = ops.filter_reduce_sum(x, pred)
+    ops.set_default_impl("interpret")
+    b = ops.filter_reduce_sum(x, pred)
+    ops.set_default_impl("ref")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)

@@ -1,0 +1,310 @@
+"""Optimizer pass tests: every pass preserves semantics (checked against
+the pure-Python reference interpreter) and performs its structural job."""
+import numpy as np
+import pytest
+
+from repro.core import ir, macros as M, wtypes as wt
+from repro.core.interp import interpret
+from repro.core.passes import loop_count, optimize
+from repro.core.passes.predication import predicate
+from repro.core.passes.size import size_analysis
+
+
+def _vec_ident(name="v"):
+    return ir.Ident(name, wt.Vec(wt.I64))
+
+
+def _check_equiv(expr, env):
+    """optimizer output must agree with the unoptimized interpreter."""
+    before = interpret(expr, env)
+    after = interpret(optimize(expr), env)
+    assert before == after
+    return optimize(expr)
+
+
+def test_vertical_fusion_map_map():
+    v = _vec_ident()
+    inner = M.map_(v, lambda x: ir.BinOp("+", x, M.lit(1)))
+    outer = M.map_(inner, lambda x: ir.BinOp("*", x, M.lit(2)))
+    assert loop_count(outer) == 2
+    opt = _check_equiv(outer, {"v": [1, 2, 3]})
+    assert loop_count(opt) == 1
+
+
+def test_vertical_fusion_filter_reduce():
+    """Listing 9 -> Listing 10."""
+    v = _vec_ident()
+    f = M.filter_(v, lambda x: ir.BinOp(">", x, M.lit(500000)))
+    s = M.reduce_(f, "+")
+    opt = _check_equiv(s, {"v": [1, 600000, 700000, 3]})
+    assert loop_count(opt) == 1
+    assert interpret(opt, {"v": [1, 600000, 700000, 3]}) == 1300000
+
+
+def test_vertical_fusion_preserves_index_maps():
+    """Consumer uses its index: only legal over map-like producers."""
+    v = _vec_ident()
+    inner = M.map_(v, lambda x: ir.BinOp("*", x, M.lit(3)))
+    # consumer multiplies by index
+    et = wt.I64
+    bt = wt.VecBuilder(et)
+    b, i, x = (ir.Ident(ir.fresh(n), t) for n, t in
+               (("b", bt), ("i", wt.I64), ("x", et)))
+    outer = ir.Result(ir.For(
+        (ir.Iter(inner),), ir.NewBuilder(bt),
+        ir.Lambda((b, i, x), ir.Merge(b, ir.BinOp("*", x, i))),
+    ))
+    opt = _check_equiv(outer, {"v": [5, 6, 7]})
+    assert loop_count(opt) == 1  # map-like producer: fusion legal
+
+
+def test_no_fusion_filter_then_indexed_consumer():
+    """Filter producer + index-using consumer must NOT fuse."""
+    v = _vec_ident()
+    f = M.filter_(v, lambda x: ir.BinOp(">", x, M.lit(2)))
+    bt = wt.VecBuilder(wt.I64)
+    b, i, x = (ir.Ident(ir.fresh(n), t) for n, t in
+               (("b", bt), ("i", wt.I64), ("x", wt.I64)))
+    outer = ir.Result(ir.For(
+        (ir.Iter(f),), ir.NewBuilder(bt),
+        ir.Lambda((b, i, x), ir.Merge(b, ir.BinOp("+", x, i))),
+    ))
+    env = {"v": [1, 5, 2, 7]}
+    opt = optimize(outer)
+    assert interpret(opt, env) == interpret(outer, env) == [5, 8]
+    assert loop_count(opt) == 2  # fusion correctly refused
+
+
+def test_horizontal_fusion_listing2_to_3():
+    v = _vec_ident()
+    prog = ir.Let(
+        "r1", M.map_(v, lambda x: ir.BinOp("+", x, M.lit(1))),
+        ir.Let(
+            "r2", M.reduce_(v, "+"),
+            ir.MakeStruct((ir.Ident("r1", wt.Vec(wt.I64)),
+                           ir.Ident("r2", wt.I64))),
+        ),
+    )
+    opt = _check_equiv(prog, {"v": [1, 2, 3]})
+    assert loop_count(opt) == 1
+    assert interpret(opt, {"v": [1, 2, 3]}) == ([2, 3, 4], 6)
+
+
+def test_horizontal_fusion_three_loops():
+    v = _vec_ident()
+    prog = ir.Let(
+        "a", M.reduce_(v, "+"),
+        ir.Let(
+            "b", M.reduce_(v, "max"),
+            ir.Let(
+                "c", M.map_(v, lambda x: ir.BinOp("*", x, M.lit(2))),
+                ir.MakeStruct((
+                    ir.Ident("a", wt.I64), ir.Ident("b", wt.I64),
+                    ir.Ident("c", wt.Vec(wt.I64)),
+                )),
+            ),
+        ),
+    )
+    opt = _check_equiv(prog, {"v": [4, 1, 7]})
+    assert loop_count(opt) == 1
+
+
+def test_horizontal_fusion_respects_dependencies():
+    """Second loop consumes the first's result: vertical (not horizontal)
+    fusion applies and the chain still collapses to one loop."""
+    v = _vec_ident()
+    prog = ir.Let(
+        "a", M.map_(v, lambda x: ir.BinOp("+", x, M.lit(1))),
+        ir.Let(
+            "b", M.reduce_(ir.Ident("a", wt.Vec(wt.I64)), "+"),
+            ir.Ident("b", wt.I64),
+        ),
+    )
+    opt = _check_equiv(prog, {"v": [1, 2, 3]})
+    assert loop_count(opt) == 1
+    assert interpret(opt, {"v": [1, 2, 3]}) == 9
+
+
+def test_predication_rewrites_if_merge():
+    v = _vec_ident()
+    e = M.filter_reduce(v, lambda x: ir.BinOp(">", x, M.lit(0)), "+")
+    stats = {}
+    out = predicate(e, stats)
+    assert stats.get("predication") == 1
+    assert interpret(out, {"v": [-1, 2, -3, 4]}) == \
+        interpret(e, {"v": [-1, 2, -3, 4]}) == 6
+    # the If is gone from the loop body
+    assert not any(isinstance(n, ir.If) for n in ir.walk(out))
+
+
+def test_predication_min_identity():
+    v = _vec_ident()
+    e = M.filter_reduce(v, lambda x: ir.BinOp(">", x, M.lit(0)), "min")
+    out = predicate(e, {})
+    env = {"v": [5, -2, 3]}
+    assert interpret(out, env) == interpret(e, env) == 3
+
+
+def test_predication_skips_dictmerger():
+    keys = ir.Ident("k", wt.Vec(wt.I64))
+    vals = ir.Ident("w", wt.Vec(wt.I64))
+    bt = wt.DictMerger(wt.I64, wt.I64, "+")
+    b, i, x = (ir.Ident(ir.fresh(n), t) for n, t in
+               (("b", bt), ("i", wt.I64), ("x", wt.Struct((wt.I64, wt.I64)))))
+    e = ir.Result(ir.For(
+        (ir.Iter(keys), ir.Iter(vals)),
+        ir.NewBuilder(bt, arg=ir.Literal(16, wt.I64)),
+        ir.Lambda((b, i, x), ir.If(
+            ir.BinOp(">", ir.GetField(x, 1), M.lit(0)), ir.Merge(b, x), b)),
+    ))
+    stats = {}
+    out = predicate(e, stats)
+    assert "predication" not in stats  # sentinel keys would corrupt a dict
+
+
+def test_size_analysis_annotates_map():
+    v = _vec_ident()
+    e = M.map_(v, lambda x: x)
+    stats = {}
+    out = size_analysis(e, stats)
+    assert stats.get("size.hints") == 1
+    nb = [n for n in ir.walk(out) if isinstance(n, ir.NewBuilder)][0]
+    assert nb.size_hint is not None
+
+
+def test_size_analysis_skips_filter():
+    v = _vec_ident()
+    e = M.filter_(v, lambda x: ir.BinOp(">", x, M.lit(0)))
+    stats = {}
+    size_analysis(e, stats)
+    assert "size.hints" not in stats
+
+
+def test_tiling_raises_dot_and_matvec():
+    mat = ir.Ident("m", wt.Vec(wt.Vec(wt.F64)))
+    w = ir.Ident("w", wt.Vec(wt.F64))
+    e = M.map_(mat, lambda row: M.dot(row, w), out_ty=wt.F64)
+    stats = {}
+    opt = optimize(e, stats=stats)
+    assert stats.get("tiling.matvec", 0) >= 1
+    assert any(isinstance(n, ir.CUDF) and n.name == "linalg.matvec"
+               for n in ir.walk(opt))
+
+
+def test_cse_dedupes_identical_chains():
+    v = _vec_ident()
+    mk = lambda: M.map_(v, lambda x: ir.BinOp("*", x, M.lit(7)))
+    prog = ir.Let(
+        "a", mk(),
+        ir.Let("b", mk(), ir.MakeStruct((
+            ir.Ident("a", wt.Vec(wt.I64)), ir.Ident("b", wt.Vec(wt.I64))))),
+    )
+    opt = _check_equiv(prog, {"v": [1, 2]})
+    assert loop_count(opt) == 1
+
+
+def test_pass_ablation_no_fusion():
+    """Disabling fusion must keep both loops (for Fig. 10 ablations)."""
+    v = _vec_ident()
+    f = M.filter_(v, lambda x: ir.BinOp(">", x, M.lit(0)))
+    s = M.reduce_(f, "+")
+    opt = optimize(s, passes=["inline", "size", "predication", "cse"])
+    assert loop_count(opt) == 2
+    opt_full = optimize(s)
+    assert loop_count(opt_full) == 1
+
+
+def test_optimizer_fixpoint_terminates():
+    v = _vec_ident()
+    e = M.map_(M.map_(M.map_(v, lambda x: x), lambda x: x), lambda x: x)
+    stats = {}
+    opt = optimize(e, stats=stats)
+    assert loop_count(opt) == 1
+    assert stats["iterations"] <= 6
+
+
+def test_zip_fusion_aligned_filters():
+    """The paper's single-pass dataframe traversal: a zip-consumer over
+    two identically-filtered columns fuses into ONE loop."""
+    a = ir.Ident("a", wt.Vec(wt.I64))
+    b = ir.Ident("b", wt.Vec(wt.I64))
+    mask = ir.Ident("m", wt.Vec(wt.I64))
+
+    def filt(col):
+        bt = wt.VecBuilder(wt.I64)
+        bb, ii, xx = (ir.Ident(ir.fresh(n), t) for n, t in
+                      (("b", bt), ("i", wt.I64),
+                       ("x", wt.Struct((wt.I64, wt.I64)))))
+        return ir.Result(ir.For(
+            (ir.Iter(col), ir.Iter(mask)), ir.NewBuilder(bt),
+            ir.Lambda((bb, ii, xx), ir.If(
+                ir.BinOp(">", ir.GetField(xx, 1), M.lit(0)),
+                ir.Merge(bb, ir.GetField(xx, 0)), bb)),
+        ))
+
+    bt = wt.Merger(wt.I64, "+")
+    bb, ii, xx = (ir.Ident(ir.fresh(n), t) for n, t in
+                  (("b", bt), ("i", wt.I64),
+                   ("x", wt.Struct((wt.I64, wt.I64)))))
+    consumer = ir.Result(ir.For(
+        (ir.Iter(filt(a)), ir.Iter(filt(b))), ir.NewBuilder(bt),
+        ir.Lambda((bb, ii, xx), ir.Merge(
+            bb, ir.BinOp("+", ir.GetField(xx, 0), ir.GetField(xx, 1)))),
+    ))
+    env = {"a": [1, 2, 3, 4], "b": [10, 20, 30, 40], "m": [1, 0, 1, 0]}
+    want = interpret(consumer, env)
+    shapes = {"a": (4,), "b": (4,), "m": (4,)}
+    stats = {}
+    opt = optimize(consumer, stats=stats, input_shapes=shapes)
+    assert interpret(opt, env) == want == (1 + 10) + (3 + 30)
+    assert loop_count(opt) == 1
+    assert stats.get("fusion.zip", 0) >= 1
+
+
+def test_zip_fusion_rejects_unknown_lengths():
+    """Without static lengths, union fusion must not fire (soundness)."""
+    a = ir.Ident("a", wt.Vec(wt.I64))
+    b = ir.Ident("b", wt.Vec(wt.I64))
+    ma = M.map_(a, lambda x: ir.BinOp("*", x, M.lit(2)))
+    mb = M.map_(b, lambda x: ir.BinOp("*", x, M.lit(3)))
+    bt = wt.Merger(wt.I64, "+")
+    bb, ii, xx = (ir.Ident(ir.fresh(n), t) for n, t in
+                  (("b", bt), ("i", wt.I64),
+                   ("x", wt.Struct((wt.I64, wt.I64)))))
+    consumer = ir.Result(ir.For(
+        (ir.Iter(ma), ir.Iter(mb)), ir.NewBuilder(bt),
+        ir.Lambda((bb, ii, xx), ir.Merge(
+            bb, ir.BinOp("+", ir.GetField(xx, 0), ir.GetField(xx, 1)))),
+    ))
+    # different lengths: min-semantics must be preserved
+    env = {"a": [1, 2, 3], "b": [10, 20]}
+    want = interpret(consumer, env)
+    opt_nolen = optimize(consumer)  # no shapes -> no fuse
+    assert interpret(opt_nolen, env) == want == (2 + 30) + (4 + 60)
+    # with equal static lengths it fuses
+    stats = {}
+    opt = optimize(consumer, stats=stats, input_shapes={"a": (3,), "b": (3,)})
+    env_eq = {"a": [1, 2, 3], "b": [10, 20, 30]}
+    assert interpret(opt, env_eq) == interpret(consumer, env_eq)
+    assert loop_count(opt) == 1
+
+
+def test_crime_index_fuses_to_single_pass():
+    """End-to-end: the flagship workload is ONE loop after optimization."""
+    import numpy as np
+
+    from repro.core.lazy import build_program
+    from repro.frames import welddf
+
+    rng = np.random.RandomState(0)
+    n = 64
+    df = welddf.DataFrame({
+        "population": rng.randint(0, 10**6, n).astype(np.float64),
+        "crime": rng.rand(n),
+    })
+    big = df[df["population"] > 500_000]
+    total = (big["population"] * 0.1 + big["crime"] * 2.0).sum()
+    prog = build_program(total.obj)
+    shapes = {k: (n,) for k in prog.inputs}
+    opt = optimize(prog.expr, input_shapes=shapes)
+    assert loop_count(opt) == 1

@@ -1,0 +1,176 @@
+"""Property-based tests (hypothesis) on the system's invariants:
+
+1. optimizer + JAX backend ≡ pure-Python reference interpreter on random
+   Weld programs composed from the macro vocabulary;
+2. builder merges are order-insensitive for commutative mergers;
+3. fusion never changes the number/type of results;
+4. predication preserves filter+reduce semantics for every MERGE_OP.
+"""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ir, macros as M, wtypes as wt
+from repro.core.interp import interpret
+from repro.core.lazy import Evaluate, NewWeldObject
+from repro.core.passes import loop_count, optimize
+
+ints = st.integers(min_value=-100, max_value=100)
+vec_data = st.lists(ints, min_size=1, max_size=30)
+
+
+def _obj(arr):
+    return NewWeldObject(np.asarray(arr, dtype=np.int64), None)
+
+
+def _id(o):
+    return ir.Ident(o.obj_id, o.weld_type())
+
+
+# -- random program generator -------------------------------------------------
+
+_unary_int_ops = ["neg", "abs"]
+
+
+@st.composite
+def pipelines(draw):
+    """A random chain of map/filter stages ending in a reduce or map."""
+    n_stages = draw(st.integers(1, 4))
+    stages = []
+    for _ in range(n_stages):
+        kind = draw(st.sampled_from(["map_add", "map_mul", "map_abs",
+                                     "filter_gt", "filter_even"]))
+        c = draw(st.integers(-20, 20))
+        stages.append((kind, c))
+    final = draw(st.sampled_from(["sum", "max", "min", "none"]))
+    return stages, final
+
+
+def _build(stages, final, src_expr):
+    e = src_expr
+    for kind, c in stages:
+        if kind == "map_add":
+            e = M.map_(e, lambda x, c=c: ir.BinOp("+", x, M.lit(c)))
+        elif kind == "map_mul":
+            # keep magnitudes bounded to avoid overflow differences
+            e = M.map_(e, lambda x, c=c: ir.BinOp("*", x, M.lit(c % 3)))
+        elif kind == "map_abs":
+            e = M.map_(e, lambda x: ir.UnaryOp("abs", x))
+        elif kind == "filter_gt":
+            e = M.filter_(e, lambda x, c=c: ir.BinOp(">", x, M.lit(c)))
+        elif kind == "filter_even":
+            e = M.filter_(
+                e, lambda x: ir.BinOp(
+                    "==", ir.BinOp("%", x, M.lit(2)), M.lit(0))
+            )
+    if final == "sum":
+        e = M.reduce_(e, "+")
+    elif final == "max":
+        e = M.reduce_(e, "max")
+    elif final == "min":
+        e = M.reduce_(e, "min")
+    return e
+
+
+@settings(max_examples=60, deadline=None)
+@given(data=vec_data, prog=pipelines())
+def test_optimizer_and_backend_match_interpreter(data, prog):
+    stages, final = prog
+    data = [abs(d) for d in data]  # avoid C-vs-python %-semantics on negatives
+    src = ir.Ident("v", wt.Vec(wt.I64))
+    expr = _build(stages, final, src)
+
+    expected = interpret(expr, {"v": list(data)})
+    # optimizer preserves interpreter semantics
+    got_opt = interpret(optimize(expr), {"v": list(data)})
+    assert got_opt == expected
+
+    # JAX backend (optimized) matches too
+    d = _obj(data)
+    expr2 = _build(stages, final, _id(d))
+    obj = NewWeldObject([d], expr2)
+    out = Evaluate(obj).value
+    if isinstance(expected, list):
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(expected))
+    else:
+        assert int(out) == expected
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.lists(ints, min_size=1, max_size=40),
+       op=st.sampled_from(["+", "min", "max"]),
+       seed=st.integers(0, 2**31 - 1))
+def test_merge_order_insensitive(data, op, seed):
+    """Builders are associative/commutative: any merge order gives the
+    same result (the property that makes them parallelizable)."""
+    rngl = np.random.RandomState(seed)
+    perm = rngl.permutation(len(data))
+    bt = wt.Merger(wt.I64, op)
+
+    def run(order):
+        b = ir.NewBuilder(bt)
+        e = b
+        for i in order:
+            e = ir.Merge(e, M.lit(int(data[i])))
+        return interpret(ir.Result(e))
+
+    assert run(range(len(data))) == run(perm)
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=vec_data, thresh=ints, op=st.sampled_from(["+", "min", "max", "*"]))
+def test_predication_equivalence_all_ops(data, thresh, op):
+    if op == "*":
+        data = [d % 3 for d in data]  # bound products
+    v = ir.Ident("v", wt.Vec(wt.I64))
+    e = M.filter_reduce(v, lambda x: ir.BinOp(">", x, M.lit(thresh)), op)
+    env = {"v": list(data)}
+    assert interpret(optimize(e), env) == interpret(e, env)
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=vec_data)
+def test_fusion_reduces_loop_count_monotonically(data):
+    v = ir.Ident("v", wt.Vec(wt.I64))
+    e = M.reduce_(M.map_(M.map_(v, lambda x: ir.BinOp("+", x, M.lit(1))),
+                         lambda x: ir.BinOp("*", x, M.lit(2))), "+")
+    opt = optimize(e)
+    assert loop_count(opt) <= loop_count(e)
+    assert loop_count(opt) == 1
+    env = {"v": list(data)}
+    assert interpret(opt, env) == interpret(e, env)
+
+
+@settings(max_examples=25, deadline=None)
+@given(keys=st.lists(st.integers(0, 9), min_size=1, max_size=30),
+       seed=st.integers(0, 2**31 - 1))
+def test_dictmerger_matches_python_dict(keys, seed):
+    rngl = np.random.RandomState(seed)
+    vals = rngl.randint(-50, 50, size=len(keys)).astype(np.int64)
+    k = NewWeldObject(np.asarray(keys, dtype=np.int64), None)
+    v = NewWeldObject(vals, None)
+    e = M.groupby_agg(_id(k), _id(v), "+", capacity=32)
+    out = Evaluate(NewWeldObject([k, v], e)).value
+    want: dict = {}
+    for kk, vv in zip(keys, vals):
+        want[kk] = want.get(kk, 0) + int(vv)
+    assert out == want
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 20), m=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_vecmerger_scatter_matches_numpy(n, m, seed):
+    rngl = np.random.RandomState(seed)
+    idx = rngl.randint(0, m, size=n)
+    vals = rngl.rand(n)
+    base = np.zeros(m)
+    b = NewWeldObject(base, None)
+    i = NewWeldObject(idx.astype(np.int64), None)
+    v = NewWeldObject(vals, None)
+    e = M.scatter_add(_id(b), _id(i), _id(v))
+    out = Evaluate(NewWeldObject([b, i, v], e)).value
+    want = base.copy()
+    np.add.at(want, idx, vals)
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-12)

@@ -1,0 +1,85 @@
+"""Python UDF translator tests (paper §4.4 / Fig 6d)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import ir, macros as M, wtypes as wt
+from repro.core.interp import interpret
+from repro.core.lazy import Evaluate, NewWeldObject
+from repro.frames.pyudf import WeldUDF, parse_signature, weld
+
+A0, A1 = 0.1, 2.0  # module-level closure constants
+
+
+@weld("(f64) => f64")
+def linear_model(x):
+    return x * A0 + A1
+
+
+@weld("(f64) => f64")
+def squash(x):
+    return math.exp(x) / (1.0 + math.exp(x))
+
+
+@weld("(f64) => f64")
+def piecewise(x):
+    return math.sqrt(x) * 2.0 + 1.0 if x > 0.5 else 0.0
+
+
+@weld("(i64) => bool")
+def is_even(x):
+    return x % 2 == 0
+
+
+def test_parse_signature():
+    params, ret = parse_signature("(f64, i64) => bool")
+    assert params == [wt.F64, wt.I64] and ret == wt.Bool
+
+
+def test_udf_still_callable_in_python():
+    assert linear_model(10.0) == 10.0 * A0 + A1
+
+
+def test_udf_to_ir_scalar():
+    e = linear_model.to_ir([ir.Literal(3.0, wt.F64)])
+    assert abs(interpret(e) - (3.0 * A0 + A1)) < 1e-12
+
+
+def test_udf_closure_constants():
+    e = piecewise.to_ir([ir.Literal(0.81, wt.F64)])
+    assert abs(interpret(e) - (math.sqrt(0.81) * 2 + 1)) < 1e-12
+    e2 = piecewise.to_ir([ir.Literal(0.25, wt.F64)])
+    assert interpret(e2) == 0.0
+
+
+def test_udf_bool():
+    assert interpret(is_even.to_ir([ir.Literal(4, wt.I64)])) is True
+    assert interpret(is_even.to_ir([ir.Literal(5, wt.I64)])) is False
+
+
+def test_udf_in_query_fused():
+    """Fig 6d: UDF mapped over rows, co-optimized with the reduction."""
+    rng = np.random.RandomState(0)
+    data = rng.rand(10_000)
+    d = NewWeldObject(data, None)
+    did = ir.Ident(d.obj_id, d.weld_type())
+    mapped = M.map_(did, lambda x: linear_model.to_ir([x]))
+    mean_expr = ir.BinOp(
+        "/",
+        M.reduce_(mapped, "+"),
+        ir.Cast(ir.Len(did), wt.F64),
+    )
+    stats = {}
+    out = Evaluate(NewWeldObject([d], mean_expr), collect_stats=stats).value
+    want = (data * A0 + A1).mean()
+    assert abs(out - want) < 1e-9
+    assert stats["loops.after"] == 1  # UDF fused into the aggregation pass
+
+
+def test_udf_rejects_statements():
+    with pytest.raises(ValueError):
+        @weld("(f64) => f64")
+        def two_statements(x):
+            y = x + 1
+            return y

@@ -1,0 +1,94 @@
+"""Roofline machinery tests: HLO collective parsing, cost normalization,
+term computation."""
+import numpy as np
+import pytest
+
+from repro.roofline.analysis import (
+    HW_V5E, collective_bytes_from_hlo, extract_cost, roofline_terms,
+)
+
+HLO_SAMPLE = """
+HloModule jit_f
+
+%add { ... }
+
+ENTRY %main (p0: f32[128,512]) -> f32[] {
+  %all-reduce = f32[128,512]{1,0} all-reduce(%x), channel_id=1, replica_groups=[2,4]<=[8], use_global_device_ids=true, to_apply=%add
+  %all-gather.5 = f32[2048,512]{1,0} all-gather(%y), channel_id=2, replica_groups=[2,4]<=[8], dimensions={0}, use_global_device_ids=true
+  %reduce-scatter.1 = bf16[16,64]{1,0} reduce-scatter(%z), channel_id=3, replica_groups=[1,8]<=[8], dimensions={0}, to_apply=%add
+  %cp = f32[256]{0} collective-permute(%w), channel_id=4, source_target_pairs={{0,1}}
+  %ag2 = f32[64]{0} all-gather-start(%q), channel_id=5, replica_groups=[2,4]<=[8], dimensions={0}
+  %ag2d = f32[64]{0} all-gather-done(%ag2)
+  %a2a = f32[32,8]{1,0} all-to-all(%r), channel_id=6, replica_groups=[2,4]<=[8], dimensions={0}
+}
+"""
+
+
+def test_collective_parser_kinds_and_bytes():
+    out = collective_bytes_from_hlo(HLO_SAMPLE)
+    # all-reduce: operand == result = 128*512*4
+    assert out["all-reduce"] == 128 * 512 * 4
+    # all-gather: operand = result / participants(4); two of them
+    assert out["all-gather"] == (2048 * 512 * 4) // 4 + (64 * 4) // 4
+    # reduce-scatter: operand = result * participants(8), bf16
+    assert out["reduce-scatter"] == 16 * 64 * 2 * 8
+    # collective-permute & all-to-all: operand == result
+    assert out["collective-permute"] == 256 * 4
+    assert out["all-to-all"] == 32 * 8 * 4
+    assert out["total"] == sum(
+        out[k] for k in ("all-gather", "all-reduce", "reduce-scatter",
+                         "all-to-all", "collective-permute"))
+
+
+def test_collective_parser_skips_done_ops():
+    out = collective_bytes_from_hlo(
+        "%x = f32[64]{0} all-gather-done(%ag2)\n")
+    assert out["total"] == 0
+
+
+def test_extract_cost_normalizes():
+    assert extract_cost({"flops": 10.0, "bytes accessed": 5.0}) == \
+        {"flops": 10.0, "bytes": 5.0}
+    # already-normalized dicts pass through (idempotent)
+    assert extract_cost({"flops": 10.0, "bytes": 5.0}) == \
+        {"flops": 10.0, "bytes": 5.0}
+    # per-operand byte keys summed when the aggregate key is missing
+    c = extract_cost({"flops": 1.0, "bytes accessed0{}": 3.0,
+                      "bytes accessed1{}": 4.0})
+    assert c["bytes"] == 7.0
+
+
+def test_roofline_terms_and_bottleneck():
+    cost = {"flops": HW_V5E["peak_flops_bf16"],          # 1 s of compute
+            "bytes": HW_V5E["hbm_bw"] / 2}               # 0.5 s of memory
+    out = roofline_terms(cost, int(HW_V5E["ici_bw"] / 4))  # 0.25 s of comms
+    assert out["bottleneck"] == "compute"
+    assert abs(out["t_compute_s"] - 1.0) < 1e-9
+    assert abs(out["t_memory_s"] - 0.5) < 1e-9
+    assert abs(out["t_collective_s"] - 0.25) < 1e-9
+    assert out["bound_s"] == out["t_compute_s"]
+
+
+def test_roofline_collective_bound():
+    cost = {"flops": 1.0, "bytes": 1.0}
+    out = roofline_terms(cost, int(HW_V5E["ici_bw"]))    # 1 s of comms
+    assert out["bottleneck"] == "collective"
+
+
+def test_cost_while_loop_motivation():
+    """Documents WHY the dry-run extrapolates: XLA counts while bodies
+    once (if this ever changes, the extrapolation should be revisited)."""
+    import jax
+    import jax.numpy as jnp
+
+    def mk(n_layers):
+        def f(x, w):
+            def body(h, wl):
+                return jnp.tanh(h @ wl), None
+            h, _ = jax.lax.scan(body, x, w)
+            return h.sum()
+        xs = jax.ShapeDtypeStruct((8, 16), jnp.float32)
+        ws = jax.ShapeDtypeStruct((n_layers, 16, 16), jnp.float32)
+        return jax.jit(f).lower(xs, ws).compile().cost_analysis()["flops"]
+
+    assert mk(2) == mk(8)
