@@ -1,0 +1,108 @@
+"""Backend ablation: generic jnp lowering vs. kernel-planned lowering.
+
+For each workload the SAME fused Weld program is compiled twice — once
+with the plain vector emitter (``kernelize=False``, the jnp-only
+backend) and once with the kernel planner routing matched loops onto the
+``repro.kernels.ops`` entries (``kernelize=True``).  Every kernelized
+result is validated against the jnp-only result before timing, and the
+planner's per-kernel match counts are asserted so a silent fallback
+can't masquerade as a win.
+
+On this CPU container the kernels resolve to their ref (pure-jnp) paths,
+so timings measure planner + dispatch overhead and XLA's view of the
+restructured program; the TPU target flips ``kops.DEFAULT_IMPL`` to
+"pallas" and the same plan drives the real kernels.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.lazy import NewWeldObject
+from repro.frames import welddf, weldrel
+
+from .bench_pagerank import make_graph, pagerank_native_iter, \
+    weld_pagerank_iter
+from .bench_tpch import make_lineitem, q6_native
+from .common import Suite, time_fn
+from .workloads import black_scholes_native, black_scholes_weld_expr, \
+    make_bs_data
+
+
+def _q6(c, kernelize, collect_stats=None):
+    t = weldrel.Table(c)
+    q = weldrel.Query(t).filter(
+        (t.col("ship") >= 365) & (t.col("ship") < 730)
+        & (t.col("disc") >= 0.05) & (t.col("disc") <= 0.07)
+        & (t.col("qty") < 24.0)
+    )
+    return q.agg({"rev": (t.col("price") * t.col("disc"), "+")},
+                 kernelize=kernelize, collect_stats=collect_stats)["rev"]
+
+
+def run(emit, n=1_000_000):
+    s = Suite(emit)
+
+    # -- TPC-H Q6: fused filter+reduce ------------------------------------
+    c = make_lineitem(n)
+    want = q6_native(c)
+    st: dict = {}
+    got = _q6(c, True, st)
+    assert st.get("kernelize.filter_reduce_sum", 0) >= 1, st
+    assert abs(got - want) < 1e-6 * max(abs(want), 1)
+    us = time_fn(lambda: _q6(c, False))
+    s.record("kernelplan/q6_jnp", us, baseline_of="kq6")
+    us = time_fn(lambda: _q6(c, True))
+    s.record("kernelplan/q6_kernelized", us, vs="kq6")
+
+    # -- PageRank: vecmerger scatter -> segment_sum ------------------------
+    src, dst, deg, nv = make_graph(n_vertices=max(n // 10, 1000),
+                                   n_edges=max(n // 2, 10_000))
+    rank0 = np.full(nv, 1.0 / nv)
+    src_o = NewWeldObject(src, None)
+    dst_o = NewWeldObject(dst, None)
+    invdeg_o = NewWeldObject(1.0 / deg, None)
+    want = pagerank_native_iter(rank0, src, dst, deg, nv)
+    st = {}
+    got = weld_pagerank_iter(rank0, src_o, dst_o, invdeg_o, nv,
+                             kernelize=True, collect_stats=st)
+    assert st.get("kernelize.vecmerger_segment_sum", 0) >= 1, st
+    np.testing.assert_allclose(got, want, rtol=1e-10)
+    us = time_fn(lambda: weld_pagerank_iter(rank0, src_o, dst_o, invdeg_o,
+                                            nv, kernelize=False))
+    s.record("kernelplan/pagerank_jnp", us, baseline_of="kpr")
+    us = time_fn(lambda: weld_pagerank_iter(rank0, src_o, dst_o, invdeg_o,
+                                            nv, kernelize=True))
+    s.record("kernelplan/pagerank_kernelized", us, vs="kpr")
+
+    # -- group-by: dictmerger -> dense segment_sum -------------------------
+    rng = np.random.RandomState(11)
+    state = rng.randint(0, 50, n).astype(np.int64)
+    crime = rng.rand(n)
+    df = welddf.DataFrame({"state": state, "crime": crime})
+    st = {}
+    d1 = df.groupby_sum("state", "crime", capacity=64, kernelize=True,
+                        collect_stats=st)
+    assert st.get("kernelize.dict_group_sum", 0) >= 1, st
+    d0 = df.groupby_sum("state", "crime", capacity=64, kernelize=False)
+    assert set(d1) == set(d0)
+    for k in d0:
+        assert abs(d1[k] - d0[k]) < 1e-6 * max(abs(d0[k]), 1)
+    us = time_fn(lambda: df.groupby_sum("state", "crime", capacity=64,
+                                        kernelize=False))
+    s.record("kernelplan/groupby_jnp", us, baseline_of="kgb")
+    us = time_fn(lambda: df.groupby_sum("state", "crime", capacity=64,
+                                        kernelize=True))
+    s.record("kernelplan/groupby_kernelized", us, vs="kgb")
+
+    # -- Black-Scholes: map chain + unfiltered reduce ----------------------
+    d = make_bs_data(n)
+    want = black_scholes_native(d)
+    expr = black_scholes_weld_expr(d)
+    st = {}
+    got = expr.evaluate(kernelize=True, collect_stats=st)
+    assert st.get("kernelize.filter_reduce_sum", 0) >= 1, st
+    assert abs(float(got) - want) < 1e-4 * abs(want)
+    us = time_fn(lambda: expr.evaluate(kernelize=False))
+    s.record("kernelplan/blackscholes_jnp", us, baseline_of="kbs")
+    us = time_fn(lambda: expr.evaluate(kernelize=True))
+    s.record("kernelplan/blackscholes_kernelized", us, vs="kbs")

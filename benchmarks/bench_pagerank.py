@@ -32,7 +32,8 @@ def pagerank_native_iter(rank, src, dst, deg, n):
     return (1 - DAMP) / n + DAMP * out
 
 
-def weld_pagerank_iter(rank_np, src_o, dst_o, invdeg_o, n):
+def weld_pagerank_iter(rank_np, src_o, dst_o, invdeg_o, n,
+                       kernelize=None, collect_stats=None):
     """One iteration as a single fused Weld program."""
     r = NewWeldObject(rank_np, None)
     rid = ir.Ident(r.obj_id, r.weld_type())
@@ -67,7 +68,8 @@ def weld_pagerank_iter(rank_np, src_o, dst_o, invdeg_o, n):
             ir.BinOp("*", ir.Literal(DAMP, wt.F64), v)),
     )
     obj = NewWeldObject([r, src_o, dst_o, invdeg_o, base], out)
-    return np.asarray(Evaluate(obj).value)
+    return np.asarray(Evaluate(obj, kernelize=kernelize,
+                               collect_stats=collect_stats).value)
 
 
 def run(emit, n_vertices=100_000, n_edges=500_000):

@@ -21,6 +21,7 @@ MODULES = [
     ("fig8_tpch", "benchmarks.bench_tpch"),
     ("fig8e_pagerank", "benchmarks.bench_pagerank"),
     ("fig10_ablations", "benchmarks.bench_ablations"),
+    ("kernelplan_ablation", "benchmarks.bench_kernelplan"),
     ("fig11_vecmerger", "benchmarks.bench_vecmerger"),
     ("compile_times", "benchmarks.bench_compile_times"),
     ("fused_adamw", "benchmarks.bench_fused_adamw"),

@@ -439,9 +439,11 @@ class _LoopCtx:
 
 class Emitter:
     def __init__(self, input_shapes: Dict[str, tuple],
-                 memory_limit: Optional[int] = None):
+                 memory_limit: Optional[int] = None,
+                 kernel_impl: Optional[str] = None):
         self.input_shapes = input_shapes
         self.memory_limit = memory_limit
+        self.kernel_impl = kernel_impl
         self.est_bytes = 0
 
     # -- entry ---------------------------------------------------------------
@@ -589,6 +591,31 @@ class Emitter:
         if isinstance(x.ret_ty, wt.Vec):
             return WVec(out)
         return out
+
+    def _ev_KernelCall(self, x: ir.KernelCall, env, ctx):
+        if ctx is not None and any(
+            self._depends_per_elem(a, ctx) for a in x.args
+        ):
+            raise _NeedsVmap()
+        from ..kernelplan import registry as kreg
+
+        spec = kreg.get(x.kernel)
+        args = [self.ev(a, env, ctx) for a in x.args]
+        fns = [self._stage_elem_fn(lam, env) for lam in x.fns]
+        return spec.execute(args, dict(x.params), fns, self.kernel_impl)
+
+    def _stage_elem_fn(self, lam: ir.Lambda, env):
+        """Per-element IR lambda -> jnp-traceable callable (whole-column
+        evaluation via this emitter, closing over the current env)."""
+        base_env = dict(env)
+
+        def fn(*vals):
+            env2 = dict(base_env)
+            for p, v in zip(lam.params, vals):
+                env2[p.name] = v
+            return self.ev(lam.body, env2, None)
+
+        return fn
 
     # -- builders -------------------------------------------------------------
 
@@ -889,7 +916,8 @@ def _wrap_rows(x_s, iters, emitter, env):
 def emit_program(expr: ir.Expr, input_names: List[str],
                  input_types: Dict[str, wt.WeldType],
                  input_shapes: Dict[str, tuple],
-                 memory_limit: Optional[int] = None):
+                 memory_limit: Optional[int] = None,
+                 kernel_impl: Optional[str] = None):
     """Returns fn(*arrays) evaluating the program; wrap in jax.jit."""
 
     def fn(*arrays):
@@ -897,7 +925,7 @@ def emit_program(expr: ir.Expr, input_names: List[str],
         for name, arr in zip(input_names, arrays):
             ty = input_types[name]
             env[name] = _wrap_input(arr, ty)
-        em = Emitter(input_shapes, memory_limit)
+        em = Emitter(input_shapes, memory_limit, kernel_impl=kernel_impl)
         return em.run(expr, env)
 
     return fn

@@ -57,6 +57,14 @@ class WDict:
 
     def to_numpy(self) -> dict:
         n = int(self.count)
+        if n < 0:
+            # kernel-planned group-by flags capacity violations by negating
+            # the count (see kernelplan.registry._exec_dict_group_sum)
+            raise RuntimeError(
+                "kernelized group-by observed keys outside [0, capacity) — "
+                "the dense-key kernel route cannot represent them; rerun "
+                "with kernelize=False or raise the builder capacity"
+            )
 
         def cols(x):
             return [np.asarray(a)[:n] for a in (x if isinstance(x, tuple) else (x,))]

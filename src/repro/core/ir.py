@@ -246,6 +246,30 @@ class For(Expr):
 
 
 # ---------------------------------------------------------------------------
+# Kernel calls (planner output)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class KernelCall(Expr):
+    """A matched IR subtree lowered onto a registered accelerator kernel.
+
+    Produced only by the kernel planner (``repro.core.kernelplan``) after
+    optimization; never built by frames.  ``args`` are ordinary IR
+    expressions evaluated by the backend before the kernel runs; ``fns``
+    are per-element lambdas (over the loop's ``(i, x)`` params) the
+    backend stages into jnp-traceable callables; ``params`` are static
+    kwargs baked into the call (hashable, part of the compile-cache key).
+    """
+
+    kernel: str
+    args: Tuple[Expr, ...]
+    ret_ty: WeldType
+    params: Tuple[Tuple[str, object], ...] = ()
+    fns: Tuple[Lambda, ...] = ()
+
+
+# ---------------------------------------------------------------------------
 # Traversal utilities
 # ---------------------------------------------------------------------------
 
@@ -527,6 +551,10 @@ def typeof(e: Expr, env: Optional[Dict[str, WeldType]] = None) -> WeldType:
             if not isinstance(dt, wt.Vec):
                 raise WeldTypeError(f"iter over non-vec {dt}")
             return dt
+        if isinstance(x, KernelCall):
+            for a in x.args:
+                rec(a, env)
+            return x.ret_ty
         if isinstance(x, For):
             bt = rec(x.builder, env)
             if not isinstance(bt, wt.BuilderType):

@@ -1,0 +1,69 @@
+"""Kernel planning: lower fused Weld IR loops onto the Pallas kernel library.
+
+The subsystem sits between the optimizer and the backend emitter:
+
+    frames -> lazy DAG -> optimize (fusion/predication/CSE)
+           -> **plan_kernels** (this package)
+           -> jaxgen emitter (KernelCall nodes dispatch to repro.kernels.ops,
+              everything else lowers through the generic vector emitter)
+
+``kernelize`` is opt-in per evaluation (``Evaluate(obj, kernelize=True)``)
+or globally via :func:`set_default_kernelize`; ``kernel_impl`` forwards
+the usual ref / interpret / pallas resolution to the kernel entries.
+
+This module stays import-light: the planner/registry (and the Pallas
+kernel library behind them) load lazily on first attribute access, so
+the default jnp-only evaluation path never pays their import cost.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+#: process-wide default for evaluations that don't pass ``kernelize=``.
+#: stays False until kernel/jnp parity is proven on a deployment target.
+DEFAULT_KERNELIZE: bool = False
+
+
+def set_default_kernelize(flag: bool) -> None:
+    global DEFAULT_KERNELIZE
+    DEFAULT_KERNELIZE = bool(flag)
+
+
+def resolve_kernelize(kernelize: Optional[bool]) -> bool:
+    return DEFAULT_KERNELIZE if kernelize is None else bool(kernelize)
+
+
+_PLANNER_ATTRS = {"plan_kernels"}
+_REGISTRY_ATTRS = {
+    "KernelPlanError", "KernelSpec", "all_specs", "available", "describe",
+    "fingerprint", "get", "register", "unregister",
+}
+
+
+def __getattr__(name: str):  # PEP 562 lazy re-exports
+    if name in _PLANNER_ATTRS:
+        from . import planner
+
+        return getattr(planner, name)
+    if name in _REGISTRY_ATTRS:
+        from . import registry
+
+        return getattr(registry, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+__all__ = [
+    "plan_kernels",
+    "KernelPlanError",
+    "KernelSpec",
+    "register",
+    "unregister",
+    "get",
+    "available",
+    "all_specs",
+    "describe",
+    "fingerprint",
+    "set_default_kernelize",
+    "resolve_kernelize",
+    "DEFAULT_KERNELIZE",
+]

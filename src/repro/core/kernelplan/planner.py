@@ -1,0 +1,430 @@
+"""Kernel planner: route optimized IR loops onto registered Pallas kernels.
+
+Runs AFTER the optimizer (fusion/predication/CSE have already collapsed
+library chains into single loops) and BEFORE the backend emitter.  It
+pattern-matches the fused loop shapes the optimizer produces —
+
+* ``result(for(V.., merger[+], .. merge(b, select(p, v, 0))))``  and the
+  struct-of-mergers form weldrel's ``agg`` emits        → filter_reduce
+* ``result(for(V.., vecmerger[+](base), merge(b, {i,v})))``
+  (PageRank's edge scan)                                → segment_sum
+* ``result(for([K,V], dictmerger[+](cap), merge(b,{k,v})))``
+  with dense int keys                                   → segment_sum
+* ``cudf[linalg.matmul] / cudf[linalg.matvec]``
+  (the tiling pass raises dot loops to these)           → tiled_matmul
+* ``result(for(V.., vecbuilder, merge(b, f(x))))`` with a nontrivial
+  elementwise body                                      → map_elementwise
+
+— and replaces each matched subtree with an ``ir.KernelCall`` node
+carrying the iter sources as args and the per-element bodies as staged
+lambdas.  Everything unmatched lowers exactly as before; a program with
+no matches is returned unchanged (the planner is a no-op identity then).
+
+Soundness rules (checked per match, conservative):
+
+* every iter source must be *statically dense* — a program input, a
+  let-bound map-like loop over dense sources, or a dense-producing
+  kernel call — so staged bodies see unpadded columns;
+* staged bodies must be elementwise-safe: no nested loops, builders,
+  CUDF calls, or lookups into per-element collections (gathers from
+  whole program inputs are fine);
+* the planner never rewrites inside a ``for`` body — kernel calls are
+  evaluation-point constructs, not loop-body ones.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Set, Tuple
+
+from .. import ir
+from .. import wtypes as wt
+from . import registry as reg
+
+#: minimum compute-node count for a map chain to be worth a kernel launch.
+MIN_MAP_OPS = 2
+
+
+# ---------------------------------------------------------------------------
+# small predicates
+# ---------------------------------------------------------------------------
+
+
+def _is_ident(e: ir.Expr, name: str) -> bool:
+    return isinstance(e, ir.Ident) and e.name == name
+
+
+def _dense_expr(e: ir.Expr, dense: Set[str]) -> bool:
+    if isinstance(e, ir.Ident):
+        return e.name in dense
+    if isinstance(e, ir.KernelCall):
+        return isinstance(e.ret_ty, wt.Vec)
+    return False
+
+
+def _iter_ok(it: ir.Iter, dense: Set[str]) -> bool:
+    return it.is_plain and _dense_expr(it.data, dense)
+
+
+def _value_dense(e: ir.Expr, dense: Set[str]) -> bool:
+    """Is a let-bound value a dense vector (no padding/count)?"""
+    if _dense_expr(e, dense):
+        return True
+    if isinstance(e, ir.CUDF):
+        return isinstance(e.ret_ty, wt.Vec)
+    if isinstance(e, ir.MakeVec):
+        return True
+    if isinstance(e, ir.Result) and isinstance(e.builder, ir.For):
+        loop = e.builder
+        nb = loop.builder
+        if isinstance(nb, ir.NewBuilder) and isinstance(nb.ty, wt.VecMerger):
+            return True
+        if isinstance(nb, ir.NewBuilder) and isinstance(nb.ty, wt.VecBuilder):
+            from ..passes.fusion import _merges_unconditionally_once
+
+            pb = loop.func.params[0]
+            return _merges_unconditionally_once(
+                loop.func.body, pb.name
+            ) and all(_iter_ok(it, dense) for it in loop.iters)
+    return False
+
+
+def _elementwise_ok(e: ir.Expr, banned: Set[str], per_elem: Set[str],
+                    allow_lookup: bool = True) -> bool:
+    """Can `e` be staged as a whole-column jnp evaluation of the element?"""
+
+    def rec(x: ir.Expr) -> bool:
+        if isinstance(x, (ir.For, ir.Lambda, ir.Merge, ir.NewBuilder,
+                          ir.Result, ir.Iter, ir.MakeVec, ir.CUDF,
+                          ir.KeyExists, ir.Len, ir.Let, ir.KernelCall)):
+            return False
+        if isinstance(x, ir.Ident):
+            return x.name not in banned
+        if isinstance(x, ir.Lookup):
+            if not allow_lookup:
+                return False
+            if not isinstance(x.expr, ir.Ident):
+                return False
+            if x.expr.name in per_elem or x.expr.name in banned:
+                return False
+            return rec(x.index)
+        return all(rec(c) for c in x.children())
+
+    return rec(e)
+
+
+def _scalar_kind_ok(ty: wt.WeldType, spec: reg.KernelSpec) -> bool:
+    return isinstance(ty, wt.Scalar) and ty.kind in spec.elem_kinds
+
+
+def _is_plus_identity(e: ir.Expr, elem: wt.Scalar) -> bool:
+    return (
+        isinstance(e, ir.Literal)
+        and e.ty == elem
+        and e.value == wt.merge_identity("+", elem)
+    )
+
+
+def _compute_ops(e: ir.Expr) -> int:
+    return ir.count_nodes(
+        e, lambda n: isinstance(n, (ir.BinOp, ir.UnaryOp, ir.Select, ir.Cast))
+    )
+
+
+def _destructure_pair(mval: ir.Expr) -> Tuple[ir.Expr, ir.Expr]:
+    """Split a struct-producing merge value into its two fields."""
+    if isinstance(mval, ir.MakeStruct) and len(mval.items) == 2:
+        return mval.items[0], mval.items[1]
+    return ir.GetField(mval, 0), ir.GetField(mval, 1)
+
+
+# ---------------------------------------------------------------------------
+# per-pattern matchers — each returns a KernelCall or None
+# ---------------------------------------------------------------------------
+
+
+def _match_filter_reduce(loop: ir.For, dense: Set[str]) -> Optional[ir.KernelCall]:
+    spec = reg.available("filter_reduce_sum")
+    if spec is None:
+        return None
+    b, i, x = loop.func.params
+    body = loop.func.body
+    nb = loop.builder
+
+    def merger_ok(nbx) -> bool:
+        return (
+            isinstance(nbx, ir.NewBuilder)
+            and isinstance(nbx.ty, wt.Merger)
+            and nbx.ty.op == "+"
+            and nbx.arg is None
+            and _scalar_kind_ok(nbx.ty.elem, spec)
+        )
+
+    vals: List[Tuple[wt.Scalar, ir.Expr]] = []
+    cond: Optional[ir.Expr] = None
+    struct = False
+
+    if merger_ok(nb):
+        elem = nb.ty.elem
+        if isinstance(body, ir.Merge) and _is_ident(body.builder, b.name):
+            v = body.value
+            if isinstance(v, ir.Select) and _is_plus_identity(v.on_false, elem):
+                cond, v = v.cond, v.on_true  # post-predication form
+            vals.append((elem, v))
+        elif (
+            isinstance(body, ir.If)
+            and isinstance(body.on_true, ir.Merge)
+            and _is_ident(body.on_true.builder, b.name)
+            and _is_ident(body.on_false, b.name)
+        ):
+            cond = body.cond  # pre-predication form
+            vals.append((elem, body.on_true.value))
+        else:
+            return None
+    elif isinstance(nb, ir.MakeStruct) and nb.items and all(
+        merger_ok(p) for p in nb.items
+    ):
+        struct = True
+        core = body
+        if isinstance(body, ir.If):
+            if not _is_ident(body.on_false, b.name):
+                return None
+            cond, core = body.cond, body.on_true
+        if not (isinstance(core, ir.MakeStruct)
+                and len(core.items) == len(nb.items)):
+            return None
+        for k, item in enumerate(core.items):
+            if not (
+                isinstance(item, ir.Merge)
+                and isinstance(item.builder, ir.GetField)
+                and item.builder.index == k
+                and _is_ident(item.builder.expr, b.name)
+            ):
+                return None
+            vals.append((nb.items[k].ty.elem, item.value))
+    else:
+        return None
+
+    per_elem = {i.name, x.name}
+    for _, v in vals:
+        if not _elementwise_ok(v, {b.name}, per_elem):
+            return None
+    if cond is not None and not _elementwise_ok(cond, {b.name}, per_elem):
+        return None
+
+    fns = [ir.Lambda((i, x), v) for _, v in vals]
+    if cond is not None:
+        fns.append(ir.Lambda((i, x), cond))
+    ret: wt.WeldType = (
+        wt.Struct(tuple(e for e, _ in vals)) if struct else vals[0][0]
+    )
+    return ir.KernelCall(
+        kernel=spec.name,
+        args=tuple(it.data for it in loop.iters),
+        ret_ty=ret,
+        params=(("n_aggs", len(vals)), ("has_pred", cond is not None),
+                ("struct", struct)),
+        fns=tuple(fns),
+    )
+
+
+def _match_vecmerger(loop: ir.For, dense: Set[str]) -> Optional[ir.KernelCall]:
+    spec = reg.available("vecmerger_segment_sum")
+    if spec is None:
+        return None
+    nb = loop.builder
+    if not (
+        isinstance(nb, ir.NewBuilder)
+        and isinstance(nb.ty, wt.VecMerger)
+        and nb.ty.op == "+"
+        and nb.arg is not None
+        and _scalar_kind_ok(nb.ty.elem, spec)
+        and _value_dense(nb.arg, dense)
+    ):
+        return None
+    b, i, x = loop.func.params
+    body = loop.func.body
+    if not (isinstance(body, ir.Merge) and _is_ident(body.builder, b.name)):
+        return None
+    idx_e, val_e = _destructure_pair(body.value)
+    per_elem = {i.name, x.name}
+    if not (_elementwise_ok(idx_e, {b.name}, per_elem)
+            and _elementwise_ok(val_e, {b.name}, per_elem)):
+        return None
+    return ir.KernelCall(
+        kernel=spec.name,
+        args=(nb.arg,) + tuple(it.data for it in loop.iters),
+        ret_ty=wt.Vec(nb.ty.elem),
+        fns=(ir.Lambda((i, x), idx_e), ir.Lambda((i, x), val_e)),
+    )
+
+
+def _match_dict_group(loop: ir.For, dense: Set[str]) -> Optional[ir.KernelCall]:
+    spec = reg.available("dict_group_sum")
+    if spec is None:
+        return None
+    nb = loop.builder
+    if not (
+        isinstance(nb, ir.NewBuilder)
+        and isinstance(nb.ty, wt.DictMerger)
+        and nb.ty.op == "+"
+    ):
+        return None
+    kt, vt = nb.ty.key, nb.ty.val
+    if not (isinstance(kt, wt.Scalar) and kt.is_int):
+        return None
+    if not _scalar_kind_ok(vt, spec):
+        return None
+    if not (isinstance(nb.arg, ir.Literal)):
+        return None  # capacity must be a static literal
+    cap = int(nb.arg.value)
+    if spec.max_segments is not None and cap > spec.max_segments:
+        return None
+    b, i, x = loop.func.params
+    body = loop.func.body
+    cond: Optional[ir.Expr] = None
+    if (
+        isinstance(body, ir.If)
+        and isinstance(body.on_true, ir.Merge)
+        and _is_ident(body.on_false, b.name)
+    ):
+        # filtered group-by: the predicate becomes the adapter's row mask
+        cond, body = body.cond, body.on_true
+    if not (isinstance(body, ir.Merge) and _is_ident(body.builder, b.name)):
+        return None
+    key_e, val_e = _destructure_pair(body.value)
+    per_elem = {i.name, x.name}
+    if not (_elementwise_ok(key_e, {b.name}, per_elem)
+            and _elementwise_ok(val_e, {b.name}, per_elem)):
+        return None
+    if cond is not None and not _elementwise_ok(cond, {b.name}, per_elem):
+        return None
+    fns = [ir.Lambda((i, x), key_e), ir.Lambda((i, x), val_e)]
+    if cond is not None:
+        fns.append(ir.Lambda((i, x), cond))
+    return ir.KernelCall(
+        kernel=spec.name,
+        args=tuple(it.data for it in loop.iters),
+        ret_ty=wt.DictType(kt, vt),
+        params=(("capacity", cap), ("key_np", str(kt.np_dtype.__name__)),
+                ("has_pred", cond is not None)),
+        fns=tuple(fns),
+    )
+
+
+def _match_map_chain(loop: ir.For, dense: Set[str]) -> Optional[ir.KernelCall]:
+    spec = reg.available("map_elementwise")
+    if spec is None:
+        return None
+    nb = loop.builder
+    if not (
+        isinstance(nb, ir.NewBuilder)
+        and isinstance(nb.ty, wt.VecBuilder)
+        and _scalar_kind_ok(nb.ty.elem, spec)
+    ):
+        return None
+    b, i, x = loop.func.params
+    body = loop.func.body
+    if not (isinstance(body, ir.Merge) and _is_ident(body.builder, b.name)):
+        return None
+    val = body.value
+    per_elem = {i.name, x.name}
+    # the staged body runs INSIDE the Pallas kernel: gathers into whole
+    # arrays (Lookup) and the loop index are unavailable there.
+    if not _elementwise_ok(val, {b.name}, per_elem, allow_lookup=False):
+        return None
+    if i.name in ir.free_vars(val):
+        return None
+    if _compute_ops(val) < MIN_MAP_OPS:
+        return None  # trivial map: XLA handles it; not worth a launch
+    return ir.KernelCall(
+        kernel=spec.name,
+        args=tuple(it.data for it in loop.iters),
+        ret_ty=wt.Vec(nb.ty.elem),
+        fns=(ir.Lambda((i, x), val),),
+    )
+
+
+def _match_loop(e: ir.Result, dense: Set[str]) -> Optional[ir.KernelCall]:
+    loop = e.builder
+    if not isinstance(loop, ir.For) or not loop.iters:
+        return None
+    if not all(_iter_ok(it, dense) for it in loop.iters):
+        return None
+    if len(loop.func.params) != 3:
+        return None
+    nb = loop.builder
+    if isinstance(nb, ir.NewBuilder):
+        if isinstance(nb.ty, wt.Merger):
+            return _match_filter_reduce(loop, dense)
+        if isinstance(nb.ty, wt.VecMerger):
+            return _match_vecmerger(loop, dense)
+        if isinstance(nb.ty, wt.DictMerger):
+            return _match_dict_group(loop, dense)
+        if isinstance(nb.ty, wt.VecBuilder):
+            return _match_map_chain(loop, dense)
+    if isinstance(nb, ir.MakeStruct):
+        return _match_filter_reduce(loop, dense)
+    return None
+
+
+def _match_cudf(e: ir.CUDF) -> Optional[ir.KernelCall]:
+    name = {"linalg.matmul": "matmul", "linalg.matvec": "matvec"}.get(e.name)
+    if name is None:
+        return None
+    spec = reg.available(name)
+    if spec is None:
+        return None
+    for a in e.args:
+        try:
+            ty = ir.typeof(a)
+        except Exception:
+            return None
+        base = ty
+        while isinstance(base, wt.Vec):
+            base = base.elem
+        if not _scalar_kind_ok(base, spec):
+            return None
+    return ir.KernelCall(kernel=name, args=e.args, ret_ty=e.ret_ty)
+
+
+# ---------------------------------------------------------------------------
+# the pass
+# ---------------------------------------------------------------------------
+
+
+def plan_kernels(
+    e: ir.Expr,
+    input_shapes: Optional[Dict[str, tuple]] = None,
+    stats: Optional[Dict[str, int]] = None,
+) -> ir.Expr:
+    """Annotate matched loops with KernelCall nodes.  Identity on programs
+    with no matches; never rewrites inside ``for`` bodies."""
+    stats = stats if stats is not None else {}
+    stats.setdefault("kernelize.matched", 0)
+    dense: Set[str] = set(input_shapes or ())
+
+    def found(kc: ir.KernelCall) -> ir.KernelCall:
+        stats["kernelize.matched"] += 1
+        key = f"kernelize.{kc.kernel}"
+        stats[key] = stats.get(key, 0) + 1
+        return kc
+
+    def rec(x: ir.Expr) -> ir.Expr:
+        if isinstance(x, ir.Lambda):
+            return x  # loop bodies are off-limits
+        if isinstance(x, ir.Let):
+            v = rec(x.value)
+            if _value_dense(v, dense):
+                dense.add(x.name)
+            return ir.Let(x.name, v, rec(x.body))
+        x = x.map_children(rec)
+        if isinstance(x, ir.Result):
+            kc = _match_loop(x, dense)
+            if kc is not None:
+                return found(kc)
+        if isinstance(x, ir.CUDF):
+            kc = _match_cudf(x)
+            if kc is not None:
+                return found(kc)
+        return x
+
+    return rec(e)

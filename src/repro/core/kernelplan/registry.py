@@ -1,0 +1,307 @@
+"""Declarative registry of Pallas kernels reachable from the IR planner.
+
+Each :class:`KernelSpec` describes one kernel in ``repro.kernels.ops``:
+the IR pattern family it accelerates (loop shape + builder kind), the
+scalar kinds it accepts, its static-shape constraints, and the backend
+adapter that invokes the entry point on traced values.  The planner
+(`repro.core.kernelplan.planner`) consults this table — patterns are
+matched *by family*, so registering/unregistering a spec is the ablation
+knob for a kernel, no planner change needed.
+
+Adapters receive backend values (``WVec``/arrays), the static params
+baked into the ``KernelCall`` node, the staged per-element callables, and
+the ``impl`` knob (ref / interpret / pallas) which is forwarded to
+``repro.kernels.ops`` so the existing resolution machinery applies.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ...kernels import ops as kops
+from ...kernels import segment_reduce as _sr
+from ..backend.values import WDict, WVec
+
+
+class KernelPlanError(RuntimeError):
+    """An annotated kernel call could not be executed (planner bug or a
+    runtime-shape violation of a registry constraint)."""
+
+
+# ---------------------------------------------------------------------------
+# Spec + registry
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class KernelSpec:
+    #: registry key; also the ``KernelCall.kernel`` tag and stats suffix.
+    name: str
+    #: entry point, dotted (module:function) — documentation + dispatch.
+    entry: str
+    #: IR pattern family the planner matches (see planner.py).
+    pattern: str
+    #: builder kind of the matched loop ("merger[+]", "vecmerger[+]",
+    #: "dictmerger[+]", "vecbuilder", or "-" for non-loop patterns).
+    builder: str
+    #: scalar kinds accepted for the merged element / operands.
+    elem_kinds: Tuple[str, ...]
+    description: str
+    #: static bound on segment count / dict capacity (None = unbounded).
+    max_segments: Optional[int] = None
+    #: backend adapter: (args, params, fns, impl) -> backend value.
+    execute: Callable = None
+
+
+_REGISTRY: Dict[str, KernelSpec] = {}
+
+
+def register(spec: KernelSpec) -> KernelSpec:
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def unregister(name: str) -> None:
+    _REGISTRY.pop(name, None)
+
+
+def get(name: str) -> KernelSpec:
+    if name not in _REGISTRY:
+        raise KernelPlanError(f"no registered kernel {name!r}")
+    return _REGISTRY[name]
+
+
+def available(name: str) -> Optional[KernelSpec]:
+    return _REGISTRY.get(name)
+
+
+def all_specs() -> Tuple[KernelSpec, ...]:
+    return tuple(_REGISTRY.values())
+
+
+def fingerprint() -> str:
+    """Stable key of the registered-kernel set — part of the compile-cache
+    key, so register/unregister (the ablation knob) forces a recompile."""
+    return ",".join(sorted(_REGISTRY))
+
+
+def describe() -> str:
+    """Human-readable registry dump (docs / debugging)."""
+    lines = []
+    for s in _REGISTRY.values():
+        lines.append(
+            f"{s.name:24s} {s.pattern:16s} {s.builder:14s} "
+            f"[{','.join(s.elem_kinds)}] -> {s.entry}"
+        )
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Adapter helpers
+# ---------------------------------------------------------------------------
+
+
+def _dense_data(v, what: str):
+    if not isinstance(v, WVec):
+        raise KernelPlanError(f"{what}: expected a vector value")
+    if not v.is_dense:
+        raise KernelPlanError(f"{what}: kernel path requires a dense vector")
+    return v.data
+
+
+def _elem_of(arrays):
+    return arrays[0] if len(arrays) == 1 else tuple(arrays)
+
+
+def _as_col(v, n):
+    """Broadcast a staged per-element result to a full (n,) column."""
+    v = jnp.asarray(v)
+    if v.ndim >= 1 and v.shape[0] == n:
+        return v
+    return jnp.broadcast_to(v, (n,) + v.shape)
+
+
+# ---------------------------------------------------------------------------
+# Adapters
+# ---------------------------------------------------------------------------
+
+
+def _exec_filter_reduce(args, params, fns, impl):
+    """(iters...) + staged val/pred bodies -> scalar (or struct of) sums."""
+    arrays = [_dense_data(a, "filter_reduce") for a in args]
+    n = arrays[0].shape[0]
+    idx = jnp.arange(n, dtype=jnp.int64)
+    elem = _elem_of(arrays)
+    n_aggs = params["n_aggs"]
+    if params["has_pred"]:
+        pred = _as_col(fns[n_aggs](idx, elem), n).astype(bool)
+    else:
+        pred = jnp.ones((n,), dtype=bool)
+    outs = []
+    for k in range(n_aggs):
+        val = _as_col(fns[k](idx, elem), n)
+        outs.append(kops.filter_reduce_sum(val, pred, impl=impl))
+    return tuple(outs) if params["struct"] else outs[0]
+
+
+def _exec_vecmerger_segment_sum(args, params, fns, impl):
+    """base + scatter-add of staged {index, value} pairs via segment_sum."""
+    base = _dense_data(args[0], "vecmerger base")
+    arrays = [_dense_data(a, "vecmerger") for a in args[1:]]
+    n = arrays[0].shape[0]
+    idx = jnp.arange(n, dtype=jnp.int64)
+    elem = _elem_of(arrays)
+    seg = _as_col(fns[0](idx, elem), n).astype(jnp.int32)
+    vals = _as_col(fns[1](idx, elem), n).astype(base.dtype)
+    k = base.shape[0]
+    out = base + kops.segment_sum(seg, vals, num_segments=k, impl=impl)
+    return WVec(out)
+
+
+def _exec_dict_group_sum(args, params, fns, impl):
+    """Dense-int-key group-by-sum: one-hot MXU accumulation + compaction.
+
+    The route assumes keys in [0, capacity).  Rows failing the (optional)
+    loop predicate are masked out; rows that PASS the predicate but carry
+    an out-of-range key cannot be aggregated here — the generic sort path
+    would have kept them — so the result is flagged (negative count) and
+    decoding raises instead of returning a silently-short dict.
+    """
+    arrays = [_dense_data(a, "dict group") for a in args]
+    n = arrays[0].shape[0]
+    idx = jnp.arange(n, dtype=jnp.int64)
+    elem = _elem_of(arrays)
+    cap = int(params["capacity"])
+    keys = _as_col(fns[0](idx, elem), n).astype(jnp.int64)
+    vals = _as_col(fns[1](idx, elem), n)
+    if params.get("has_pred"):
+        mask = _as_col(fns[2](idx, elem), n).astype(bool)
+    else:
+        mask = jnp.ones((n,), dtype=bool)
+    inrange = (keys >= 0) & (keys < cap)
+    overflow = jnp.any(mask & ~inrange)
+    valid = mask & inrange
+    # invalid rows contribute zero to segment 0 (sum identity)
+    seg = jnp.where(valid, keys, 0).astype(jnp.int32)
+    vals_m = jnp.where(valid, vals, jnp.zeros((), vals.dtype))
+    ones = jnp.where(valid, 1, 0).astype(vals.dtype)
+    # one fused launch for sums + presence counts (shared seg-id loads)
+    both = kops.segment_sum_vectors(seg, jnp.stack([vals_m, ones], axis=1),
+                                    num_segments=cap, impl=impl)
+    sums, counts = both[:, 0], both[:, 1]
+    present = counts > 0
+    order = jnp.argsort(~present, stable=True)  # front-pack, keys ascending
+    key_dtype = np.dtype(params.get("key_np", "int64"))
+    keys_out = jnp.arange(cap, dtype=key_dtype)[order]
+    vals_out = sums[order]
+    count = present.sum()
+    # Overflow guards, layered: the negative count makes host decode raise
+    # (WDict.to_numpy); poisoned keys/values cover traced consumers that
+    # never decode — KeyExists sees no keys, Lookup yields NaN, so a wrong
+    # aggregate cannot propagate as a plausible number.
+    count = jnp.where(overflow, -count - 1, count)
+    keys_out = jnp.where(overflow, jnp.full_like(keys_out, -1), keys_out)
+    if jnp.issubdtype(vals_out.dtype, jnp.floating):
+        vals_out = jnp.where(overflow, jnp.full_like(vals_out, jnp.nan),
+                             vals_out)
+    return WDict(keys_out, vals_out, count)
+
+
+def _exec_matmul(args, params, fns, impl):
+    a = _dense_data(args[0], "matmul lhs")
+    b = _dense_data(args[1], "matmul rhs")
+    ct = jnp.result_type(a, b)
+    return WVec(kops.matmul(a.astype(ct), b.astype(ct), impl=impl))
+
+
+def _exec_matvec(args, params, fns, impl):
+    a = _dense_data(args[0], "matvec lhs")
+    b = _dense_data(args[1], "matvec rhs")
+    ct = jnp.result_type(a, b)
+    out = kops.matmul(a.astype(ct), b[:, None].astype(ct), impl=impl)
+    return WVec(out[:, 0])
+
+
+def _exec_map_elementwise(args, params, fns, impl):
+    arrays = [_dense_data(a, "map chain") for a in args]
+
+    def body(*cols):
+        # the staged lambda is (i, x); map-chain matching guarantees the
+        # index is unused, so bind a dummy scalar.
+        return fns[0](jnp.int64(0), _elem_of(list(cols)))
+
+    return WVec(kops.map_elementwise(body, arrays, impl=impl))
+
+
+# ---------------------------------------------------------------------------
+# The shipped registry (one entry per reachable Pallas kernel)
+# ---------------------------------------------------------------------------
+
+register(KernelSpec(
+    name="filter_reduce_sum",
+    entry="repro.kernels.ops:filter_reduce_sum",
+    pattern="filter_reduce",
+    builder="merger[+]",
+    elem_kinds=("f32", "f64", "i32", "i64"),
+    description="predicated sum over a (possibly multi-column) loop; the "
+                "fused form of Listing 10 / TPC-H Q6",
+    execute=_exec_filter_reduce,
+))
+
+register(KernelSpec(
+    name="vecmerger_segment_sum",
+    entry="repro.kernels.ops:segment_sum",
+    pattern="vecmerger_scatter",
+    builder="vecmerger[+]",
+    elem_kinds=("f32", "f64"),
+    description="scatter-add into a dense base vector as one-hot MXU "
+                "segment sums (PageRank's edge scan)",
+    max_segments=None,  # kops falls back to the ref path above MAX_K
+    execute=_exec_vecmerger_segment_sum,
+))
+
+register(KernelSpec(
+    name="dict_group_sum",
+    entry="repro.kernels.ops:segment_sum_vectors",
+    pattern="dict_group",
+    builder="dictmerger[+]",
+    elem_kinds=("f32", "f64", "i32", "i64"),
+    description="group-by-sum with dense int keys in [0, capacity) via "
+                "segment_sum + presence compaction",
+    max_segments=_sr.MAX_K,
+    execute=_exec_dict_group_sum,
+))
+
+register(KernelSpec(
+    name="matmul",
+    entry="repro.kernels.ops:matmul",
+    pattern="linalg.matmul",
+    builder="-",
+    elem_kinds=("f32", "f64"),
+    description="tiled VMEM-blocked matmul for raised 2-D dot loops",
+    execute=_exec_matmul,
+))
+
+register(KernelSpec(
+    name="matvec",
+    entry="repro.kernels.ops:matmul",
+    pattern="linalg.matvec",
+    builder="-",
+    elem_kinds=("f32", "f64"),
+    description="matrix-vector product through the tiled matmul kernel",
+    execute=_exec_matvec,
+))
+
+register(KernelSpec(
+    name="map_elementwise",
+    entry="repro.kernels.ops:map_elementwise",
+    pattern="map_chain",
+    builder="vecbuilder",
+    elem_kinds=("f32", "f64", "i32", "i64"),
+    description="fused elementwise map chain staged into one Pallas pass "
+                "(Black-Scholes-style operator chains)",
+    execute=_exec_map_elementwise,
+))

@@ -128,8 +128,9 @@ class WeldObject:
         self._ty = ir.typeof(self.expr, env)
         return self._ty
 
-    def evaluate(self, memory_limit: Optional[int] = None) -> WeldResult:
-        return Evaluate(self, memory_limit=memory_limit)
+    def evaluate(self, memory_limit: Optional[int] = None,
+                 **kw) -> WeldResult:
+        return Evaluate(self, memory_limit=memory_limit, **kw)
 
     def free(self) -> None:
         """FreeWeldObject: drops internal state, not deps (paper §4.1)."""
@@ -204,6 +205,31 @@ class Program:
     inputs: Dict[str, Tuple[wt.WeldType, Encoder, object]]
     out_ty: wt.WeldType = None  # type: ignore
 
+    def evaluate(
+        self,
+        optimize: bool = True,
+        memory_limit: Optional[int] = None,
+        passes=None,
+        kernelize: Optional[bool] = None,
+        kernel_impl: Optional[str] = None,
+    ):
+        """Compile + run this program directly (no WeldObject wrapper).
+
+        Returns ``(value, compile_ms, from_cache, stats)``;
+        ``kernelize=True`` routes matched loops through the Pallas
+        kernel library (see ``repro.core.kernelplan``).
+        """
+        from .runtime import compile_and_run  # local import: needs jax
+
+        return compile_and_run(
+            self,
+            optimize=optimize,
+            memory_limit=memory_limit,
+            passes=passes,
+            kernelize=kernelize,
+            kernel_impl=kernel_impl,
+        )
+
 
 def build_program(root: WeldObject) -> Program:
     """Topologically stitch the DAG below `root` into one IR expression.
@@ -263,12 +289,17 @@ def Evaluate(
     passes=None,
     backend: str = "jax",
     collect_stats: Optional[dict] = None,
+    kernelize: Optional[bool] = None,
+    kernel_impl: Optional[str] = None,
 ) -> WeldResult:
     """Optimize + compile + run the whole DAG under `o` (paper Table 2).
 
     `memory_limit` bounds Weld-owned temporary allocation (estimated from
     size analysis); exceeded limits raise before execution.  `passes`
     selects a subset of optimizer passes (ablation benchmarks).
+    `kernelize` routes matched fused loops onto the Pallas kernel library
+    (None = process default, see ``repro.core.kernelplan``);
+    `kernel_impl` picks ref / interpret / pallas for those kernel calls.
     """
     from .runtime import compile_and_run  # local import: runtime needs jax
 
@@ -280,6 +311,8 @@ def Evaluate(
             optimize=optimize,
             memory_limit=memory_limit,
             passes=passes,
+            kernelize=kernelize,
+            kernel_impl=kernel_impl,
         )
         run_ms = (time.perf_counter() - t0) * 1e3 - compile_ms
     if collect_stats is not None:

@@ -40,6 +40,11 @@ def pretty(e: "ir.Expr", indent: int = 0) -> str:
         return f"keyexists({p(e.expr)}, {p(e.key)})"
     if isinstance(e, ir.CUDF):
         return f"cudf[{e.name}](" + ", ".join(p(a) for a in e.args) + ")"
+    if isinstance(e, ir.KernelCall):
+        parts = [p(a) for a in e.args]
+        parts += [f"{k}={v}" for k, v in e.params]
+        parts += [p(f) for f in e.fns]
+        return f"kernel[{e.kernel}](" + ", ".join(parts) + ")"
     if isinstance(e, ir.Lambda):
         params = ",".join(f"{q.name}:{q.ty}" for q in e.params)
         return f"|{params}| {pretty(e.body, indent + 1)}"

@@ -42,8 +42,31 @@ def compile_and_run(
     optimize: bool = True,
     memory_limit: Optional[int] = None,
     passes=None,
+    kernelize: Optional[bool] = None,
+    kernel_impl: Optional[str] = None,
 ):
-    """Returns (value, compile_ms, from_cache, stats)."""
+    """Returns (value, compile_ms, from_cache, stats).
+
+    ``kernelize`` (None = the kernelplan process default, False until
+    parity is proven) runs the kernel planner after optimization so
+    matched loops dispatch to the Pallas kernel library; ``kernel_impl``
+    selects ref / interpret / pallas for those calls (None = the kernel
+    library's own default).
+    """
+    # kernelplan (and the Pallas kernel library behind it) is imported
+    # lazily so the default jnp-only path doesn't pay its import cost
+    if kernelize is None:
+        from .kernelplan import DEFAULT_KERNELIZE
+
+        kernelize = DEFAULT_KERNELIZE
+    kernelize = bool(kernelize)
+    if kernelize and kernel_impl is None:
+        # resolve the kernel library's default NOW so it lands in the
+        # compile-cache key — kops promises set_default_impl() always
+        # takes effect, which a cached executable would otherwise defeat
+        from ..kernels import ops as _kops
+
+        kernel_impl = _kops.DEFAULT_IMPL
     input_names = sorted(prog.inputs)
     arrays = []
     shapes: Dict[str, tuple] = {}
@@ -60,9 +83,15 @@ def compile_and_run(
     # one compiled executable as long as their structure matches
     name_map = {n: f"in{i}" for i, n in enumerate(input_names)}
     sig = ",".join(f"{a.dtype}:{a.shape}" for a in arrays)
+    kreg = ""
+    if kernelize:
+        from .kernelplan import fingerprint
+
+        kreg = fingerprint()  # register/unregister must invalidate the cache
     key = (
         ir.canon_key(prog.expr, name_map)
-        + f"|opt={optimize}|mem={memory_limit}|passes={passes}|{sig}"
+        + f"|opt={optimize}|mem={memory_limit}|passes={passes}"
+        + f"|kz={kernelize}|kimpl={kernel_impl}|kreg={kreg}|{sig}"
     )
 
     stats: dict = {}
@@ -79,7 +108,12 @@ def compile_and_run(
             expr = run_passes(expr, passes=passes, stats=stats,
                               input_shapes=shapes)
         stats["loops.after"] = loop_count(expr)
-        fn = emit_program(expr, input_names, types, shapes, memory_limit)
+        if kernelize:
+            from .kernelplan import plan_kernels
+
+            expr = plan_kernels(expr, input_shapes=shapes, stats=stats)
+        fn = emit_program(expr, input_names, types, shapes, memory_limit,
+                          kernel_impl=kernel_impl)
         jitted = jax.jit(fn)
         # trigger tracing+compilation now so compile_ms is honest
         _ = jitted.lower(*arrays).compile()

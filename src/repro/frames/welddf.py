@@ -106,8 +106,14 @@ class DataFrame:
         ones = self.mask.astype(np.int64)
         return ones.sum()
 
-    def groupby_sum(self, key: str, val: str, capacity: int = 4096) -> dict:
-        """dict[key -> sum(val)] via a dictmerger; evaluation point."""
+    def groupby_sum(self, key: str, val: str, capacity: int = 4096,
+                    kernelize=None, kernel_impl=None,
+                    collect_stats: Optional[dict] = None) -> dict:
+        """dict[key -> sum(val)] via a dictmerger; evaluation point.
+
+        ``kernelize=True`` routes the group-by onto the segment-reduce
+        Pallas kernel when the key column is int-typed and the capacity
+        fits the kernel's VMEM tile (see ``repro.core.kernelplan``)."""
         kcol, vcol = self.columns[key], self.columns[val]
         if self.eager:
             k, v = kcol._eager, vcol._eager
@@ -145,9 +151,11 @@ class DataFrame:
                 )
             )
         obj = NewWeldObject(deps, expr)
-        return Evaluate(obj).value
+        return Evaluate(obj, kernelize=kernelize, kernel_impl=kernel_impl,
+                        collect_stats=collect_stats).value
 
-    def unique(self, key: str, capacity: int = 4096) -> np.ndarray:
+    def unique(self, key: str, capacity: int = 4096,
+               kernelize=None, kernel_impl=None) -> np.ndarray:
         """Distinct values of a column (dictmerger keys)."""
         col = self.columns[key]
         if self.eager:
@@ -155,7 +163,8 @@ class DataFrame:
             if self.mask is not None:
                 v = v[self.mask._eager]
             return np.unique(v)
-        d = self.groupby_sum(key, key, capacity=capacity)
+        d = self.groupby_sum(key, key, capacity=capacity,
+                             kernelize=kernelize, kernel_impl=kernel_impl)
         return np.sort(np.array(list(d.keys())))
 
     def slice_code(self, key: str, digits: int = 5) -> weldnp.ndarray:

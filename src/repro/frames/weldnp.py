@@ -68,10 +68,17 @@ class ndarray:
 
     # -- evaluation points ---------------------------------------------------
 
-    def evaluate(self, **kw):
+    def evaluate(self, kernelize=None, kernel_impl=None, **kw):
+        """Force evaluation of the accumulated workflow as one program.
+
+        ``kernelize=True`` routes matched fused loops through the Pallas
+        kernel library (``repro.core.kernelplan``); ``kernel_impl``
+        selects ref / interpret / pallas for those kernel calls.
+        """
         if self.is_eager:
             return self._eager
-        res = Evaluate(self.obj, **kw)
+        res = Evaluate(self.obj, kernelize=kernelize,
+                       kernel_impl=kernel_impl, **kw)
         return res.value
 
     def to_numpy(self, **kw) -> np.ndarray:

@@ -44,9 +44,12 @@ class Query:
 
     # -- ungrouped aggregate ---------------------------------------------------
 
-    def agg(self, exprs: Dict[str, Tuple[weldnp.ndarray, str]]):
+    def agg(self, exprs: Dict[str, Tuple[weldnp.ndarray, str]],
+            kernelize=None, kernel_impl=None,
+            collect_stats: Optional[dict] = None):
         """exprs: name -> (value column expression, op).  Returns dict of
-        scalars; single fused pass over the data."""
+        scalars; single fused pass over the data.  ``kernelize=True``
+        routes the fused filter+reduce onto the Pallas kernel library."""
         if self.table.eager:
             out = {}
             m = self.pred._eager if self.pred is not None else None
@@ -104,7 +107,8 @@ class Query:
             ir.Lambda((b, i, x), body),
         )
         obj = NewWeldObject(deps, ir.Result(loop))
-        res = Evaluate(obj).value
+        res = Evaluate(obj, kernelize=kernelize, kernel_impl=kernel_impl,
+                       collect_stats=collect_stats).value
         return {n: res[k] for k, n in enumerate(names)}
 
     # -- grouped aggregate -------------------------------------------------------
@@ -114,9 +118,16 @@ class Query:
         keys: Sequence[weldnp.ndarray],
         vals: Dict[str, Tuple[weldnp.ndarray, str]],
         capacity: int = 4096,
+        kernelize=None,
+        kernel_impl=None,
     ):
         """GROUP BY keys; all aggregates share ONE dictmerger pass.
-        Returns {key_tuple: (agg,...)} (+ implicit count as last value)."""
+        Returns {key_tuple: (agg,...)} (+ implicit count as last value).
+
+        NOTE: grouped multi-aggregates build a struct-valued dictmerger,
+        which the kernel planner does not yet route (ROADMAP: multi-agg
+        fusion) — ``kernelize=True`` is accepted for API symmetry but
+        currently always falls back to the generic sort-based path."""
         if self.table.eager:
             m = self.pred._eager if self.pred is not None else slice(None)
             karrs = [k._eager[m] for k in keys]
@@ -183,7 +194,8 @@ class Query:
             ir.Lambda((b, i, x), body),
         )
         obj = NewWeldObject(deps, ir.Result(loop))
-        return Evaluate(obj).value
+        return Evaluate(obj, kernelize=kernelize,
+                        kernel_impl=kernel_impl).value
 
 
 def _ety(k: int, ids: List[ir.Expr]) -> wt.Scalar:

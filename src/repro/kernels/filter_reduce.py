@@ -41,6 +41,8 @@ def filter_reduce_sum(x: jax.Array, pred: jax.Array, *,
     """sum(x[pred]) in one pass.  x: (n,) float; pred: (n,) bool.
     n is padded to a block multiple with pred=False."""
     n = x.shape[0]
+    if n == 0:
+        return jnp.zeros((), x.dtype)
     npad = (block - n % block) % block
     if npad:
         x = jnp.pad(x, (0, npad))

@@ -18,6 +18,7 @@ import jax
 from . import filter_reduce as _fr
 from . import flash_attention as _fa
 from . import fused_adamw as _aw
+from . import map_chain as _mc
 from . import ref as _ref
 from . import segment_reduce as _sr
 from . import tiled_matmul as _tm
@@ -127,6 +128,22 @@ def _mm(a, b, impl):
 
 def matmul(a, b, impl: Optional[Impl] = None):
     return _mm(a, b, impl=_resolve(impl))
+
+
+# -- fused elementwise map chain --------------------------------------------------
+
+
+def map_elementwise(fn, arrays, impl: Optional[Impl] = None):
+    """Apply a staged elementwise body to 1-D columns in one fused pass.
+
+    ``fn`` is a jnp-traceable callable (built by the kernel planner from
+    IR), so there is no outer jit here — the caller is always inside the
+    program's jit and the kernel inlines into its trace.
+    """
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.map_elementwise(fn, arrays)
+    return _mc.map_elementwise(fn, arrays, interpret=(impl == "interpret"))
 
 
 # -- attention --------------------------------------------------------------------

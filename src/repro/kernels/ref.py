@@ -44,6 +44,11 @@ def tiled_matmul(a, b):
     return jnp.dot(a, b, preferred_element_type=a.dtype)
 
 
+def map_elementwise(fn, arrays):
+    out = fn(*[jnp.asarray(a) for a in arrays])
+    return jnp.broadcast_to(out, jnp.asarray(arrays[0]).shape)
+
+
 def attention(q, k, v, *, causal=True, group=1, scale=None):
     """q: (H, Sq, D); k/v: (H//group, Skv, D) — dense reference."""
     h, sq, d = q.shape

@@ -48,6 +48,8 @@ def segment_sum(seg_ids: jax.Array, vals: jax.Array, num_segments: int, *,
     """out[s] = sum(vals[seg_ids == s]).  seg_ids int32 in [0, K)."""
     assert num_segments <= MAX_K, "K too large for VMEM tile; use ref path"
     n = vals.shape[0]
+    if n == 0:
+        return jnp.zeros((num_segments,), vals.dtype)
     npad = (block - n % block) % block
     if npad:
         # park padding in a segment that we never read back
@@ -95,6 +97,8 @@ def segment_sum_vectors(seg_ids: jax.Array, vals: jax.Array,
     """vals: (n, d) rows merged into out: (K, d) by segment id."""
     assert num_segments <= MAX_K
     n, d = vals.shape
+    if n == 0:
+        return jnp.zeros((num_segments, d), vals.dtype)
     npad = (block - n % block) % block
     if npad:
         seg_ids = jnp.pad(seg_ids, (0, npad), constant_values=0)

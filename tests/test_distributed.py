@@ -11,6 +11,8 @@ import jax
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # subprocess meshes: minutes, not seconds
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 

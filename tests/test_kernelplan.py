@@ -1,0 +1,369 @@
+"""Kernel planner golden tests: fused IR loops route onto the Pallas
+kernel library, mismatches fall back to the jnp emitter unchanged, and
+kernelized results agree with the generic backend."""
+import numpy as np
+import pytest
+
+from repro.core import ir, macros as M, wtypes as wt
+from repro.core import kernelplan as kp
+from repro.core.lazy import Evaluate, NewWeldObject, build_program
+from repro.core.passes import optimize
+
+rng = np.random.RandomState(42)
+N = 4096
+
+
+def _ident(o):
+    return ir.Ident(o.obj_id, o.weld_type())
+
+
+def _q6_like_obj(n=N):
+    """Fused filter+reduce: sum(price*disc where price < 0.5)."""
+    price = NewWeldObject(rng.rand(n), None)
+    disc = NewWeldObject(rng.rand(n), None)
+    expr = M.filter_reduce(
+        M.zip_map([_ident(price), _ident(disc)],
+                  lambda p, d: ir.MakeStruct((p, d))),
+        lambda x: ir.BinOp("<", ir.GetField(x, 0), ir.Literal(0.5, wt.F64)),
+        "+",
+        lambda x: ir.BinOp("*", ir.GetField(x, 0), ir.GetField(x, 1)),
+    )
+    obj = NewWeldObject([price, disc], expr)
+    want = (np.asarray(price.data) * np.asarray(disc.data))[
+        np.asarray(price.data) < 0.5
+    ].sum()
+    return obj, want
+
+
+# ---------------------------------------------------------------------------
+# golden: optimized programs are annotated with the expected KernelCall
+# ---------------------------------------------------------------------------
+
+
+def test_planner_annotates_q6_filter_reduce():
+    obj, _ = _q6_like_obj()
+    prog = build_program(obj)
+    shapes = {k: tuple(np.asarray(v[2]).shape) for k, v in prog.inputs.items()}
+    opt = optimize(prog.expr, stats={}, input_shapes=shapes)
+    stats: dict = {}
+    planned = kp.plan_kernels(opt, input_shapes=shapes, stats=stats)
+    calls = [n for n in ir.walk(planned) if isinstance(n, ir.KernelCall)]
+    assert stats["kernelize.matched"] == 1
+    assert stats["kernelize.filter_reduce_sum"] == 1
+    assert [c.kernel for c in calls] == ["filter_reduce_sum"]
+    assert dict(calls[0].params)["has_pred"] is True
+
+
+def test_planner_annotates_segment_reduce():
+    """PageRank-style vecmerger scatter routes to segment_sum."""
+    idxs = NewWeldObject(rng.randint(0, 100, N).astype(np.int64), None)
+    vals = NewWeldObject(rng.rand(N), None)
+    base = NewWeldObject(np.zeros(100), None)
+    expr = M.scatter_add(_ident(base), _ident(idxs), _ident(vals))
+    obj = NewWeldObject([base, idxs, vals], expr)
+    prog = build_program(obj)
+    shapes = {k: tuple(np.asarray(v[2]).shape) for k, v in prog.inputs.items()}
+    opt = optimize(prog.expr, stats={}, input_shapes=shapes)
+    stats: dict = {}
+    planned = kp.plan_kernels(opt, input_shapes=shapes, stats=stats)
+    assert stats.get("kernelize.vecmerger_segment_sum", 0) == 1
+    assert any(isinstance(n, ir.KernelCall) for n in ir.walk(planned))
+
+
+def test_planner_annotates_dict_groupby():
+    keys = NewWeldObject(rng.randint(0, 32, N).astype(np.int64), None)
+    vals = NewWeldObject(rng.rand(N), None)
+    expr = M.groupby_agg(_ident(keys), _ident(vals), "+", capacity=64)
+    obj = NewWeldObject([keys, vals], expr)
+    prog = build_program(obj)
+    shapes = {k: tuple(np.asarray(v[2]).shape) for k, v in prog.inputs.items()}
+    opt = optimize(prog.expr, stats={}, input_shapes=shapes)
+    stats: dict = {}
+    kp.plan_kernels(opt, input_shapes=shapes, stats=stats)
+    assert stats.get("kernelize.dict_group_sum", 0) == 1
+
+
+def test_planner_annotates_matmul():
+    from repro.frames import weldnp
+
+    a = weldnp.array(rng.rand(32, 16))
+    b = weldnp.array(rng.rand(16, 8))
+    prog = build_program(a.dot(b).obj)
+    shapes = {k: tuple(np.asarray(v[2]).shape) for k, v in prog.inputs.items()}
+    opt = optimize(prog.expr, stats={}, input_shapes=shapes)
+    stats: dict = {}
+    kp.plan_kernels(opt, input_shapes=shapes, stats=stats)
+    assert stats.get("kernelize.matmul", 0) == 1
+
+
+# ---------------------------------------------------------------------------
+# end-to-end parity: kernelized == jnp-only
+# ---------------------------------------------------------------------------
+
+
+def test_q6_kernelized_matches_jnp():
+    obj, want = _q6_like_obj()
+    st: dict = {}
+    r1 = Evaluate(obj, kernelize=True, collect_stats=st)
+    r0 = Evaluate(obj, kernelize=False)
+    assert st["kernelize.filter_reduce_sum"] == 1
+    np.testing.assert_allclose(r1.value, r0.value, rtol=1e-12)
+    np.testing.assert_allclose(r1.value, want, rtol=1e-10)
+
+
+def test_reduce_without_filter_kernelized():
+    """Unconditional map+reduce (Black-Scholes shape) also routes."""
+    x = rng.rand(N)
+    xo = NewWeldObject(x, None)
+    expr = M.reduce_(
+        M.map_(_ident(xo), lambda v: ir.BinOp(
+            "*", ir.UnaryOp("exp", v), ir.Literal(2.0, wt.F64))),
+        "+",
+    )
+    obj = NewWeldObject([xo], expr)
+    st: dict = {}
+    r1 = Evaluate(obj, kernelize=True, collect_stats=st)
+    assert st["kernelize.filter_reduce_sum"] == 1
+    assert dict(
+        [(k, v) for k, v in st.items() if k == "kernelize.matched"]
+    )["kernelize.matched"] == 1
+    np.testing.assert_allclose(r1.value, (np.exp(x) * 2.0).sum(), rtol=1e-10)
+
+
+def test_segment_reduce_kernelized_matches_jnp():
+    idxs = rng.randint(0, 100, N).astype(np.int64)
+    vals = rng.rand(N)
+    base = rng.rand(100)
+    io = NewWeldObject(idxs, None)
+    vo = NewWeldObject(vals, None)
+    bo = NewWeldObject(base, None)
+    expr = M.scatter_add(_ident(bo), _ident(io), _ident(vo))
+    obj = NewWeldObject([bo, io, vo], expr)
+    st: dict = {}
+    r1 = np.asarray(Evaluate(obj, kernelize=True, collect_stats=st).value)
+    r0 = np.asarray(Evaluate(obj, kernelize=False).value)
+    assert st["kernelize.vecmerger_segment_sum"] == 1
+    np.testing.assert_allclose(r1, r0, rtol=1e-12)
+    want = base.copy()
+    np.add.at(want, idxs, vals)
+    np.testing.assert_allclose(r1, want, rtol=1e-10)
+
+
+def test_groupby_kernelized_matches_jnp():
+    from repro.frames import welddf
+
+    state = rng.randint(0, 50, N).astype(np.int64)
+    crime = rng.rand(N)
+    df = welddf.DataFrame({"state": state, "crime": crime})
+    st: dict = {}
+    d1 = df.groupby_sum("state", "crime", capacity=64, kernelize=True,
+                        collect_stats=st)
+    d0 = df.groupby_sum("state", "crime", capacity=64, kernelize=False)
+    assert st["kernelize.dict_group_sum"] == 1
+    assert set(d1) == set(d0)
+    for k in d0:
+        np.testing.assert_allclose(d1[k], d0[k], rtol=1e-10)
+
+
+def test_masked_groupby_kernelized_matches_jnp():
+    from repro.frames import welddf
+
+    state = rng.randint(0, 50, N).astype(np.int64)
+    crime = rng.rand(N)
+    df = welddf.DataFrame({"state": state, "crime": crime})
+    fdf = df[df["crime"] > 0.5]
+    st: dict = {}
+    d1 = fdf.groupby_sum("state", "crime", capacity=64, kernelize=True,
+                         collect_stats=st)
+    d0 = fdf.groupby_sum("state", "crime", capacity=64, kernelize=False)
+    assert st["kernelize.dict_group_sum"] == 1
+    assert set(d1) == set(d0)
+    for k in d0:
+        np.testing.assert_allclose(d1[k], d0[k], rtol=1e-10)
+
+
+def test_matmul_kernelized_matches_jnp():
+    from repro.frames import weldnp
+
+    A, B = rng.rand(48, 24), rng.rand(24, 16)
+    wa, wb = weldnp.array(A), weldnp.array(B)
+    st: dict = {}
+    got = np.asarray(wa.dot(wb).evaluate(kernelize=True, collect_stats=st))
+    assert st["kernelize.matmul"] == 1
+    np.testing.assert_allclose(got.reshape(48, 16), A @ B, rtol=1e-12)
+
+
+def test_map_chain_kernelized_matches_jnp():
+    from repro.frames import weldnp
+
+    x = rng.rand(N)
+    wx = weldnp.array(x)
+    y = weldnp.exp(wx * 2.0) + 1.0
+    st: dict = {}
+    got = np.asarray(y.evaluate(kernelize=True, collect_stats=st))
+    assert st["kernelize.map_elementwise"] == 1
+    np.testing.assert_allclose(got, np.exp(x * 2.0) + 1.0, rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# fallback: mismatches lower exactly as before
+# ---------------------------------------------------------------------------
+
+
+def test_non_plus_reduce_falls_back():
+    """max-reduce has no kernel; planner must leave it to the emitter."""
+    x = rng.rand(N)
+    xo = NewWeldObject(x, None)
+    expr = M.reduce_(_ident(xo), "max")
+    obj = NewWeldObject([xo], expr)
+    st: dict = {}
+    r1 = Evaluate(obj, kernelize=True, collect_stats=st)
+    assert st["kernelize.matched"] == 0
+    np.testing.assert_allclose(r1.value, x.max(), rtol=1e-12)
+
+
+def test_big_capacity_groupby_falls_back():
+    """capacity beyond the VMEM tile bound must not route."""
+    from repro.frames import welddf
+
+    state = rng.randint(0, 50, N).astype(np.int64)
+    crime = rng.rand(N)
+    df = welddf.DataFrame({"state": state, "crime": crime})
+    st: dict = {}
+    d1 = df.groupby_sum("state", "crime", capacity=1 << 17, kernelize=True,
+                        collect_stats=st)
+    assert st["kernelize.matched"] == 0
+    d0 = df.groupby_sum("state", "crime", capacity=1 << 17, kernelize=False)
+    assert set(d1) == set(d0)
+
+
+def test_default_capacity_groupby_routes():
+    """The frames' default capacity (4096) must fit the kernel tile."""
+    from repro.frames import welddf
+
+    state = rng.randint(0, 50, N).astype(np.int64)
+    crime = rng.rand(N)
+    df = welddf.DataFrame({"state": state, "crime": crime})
+    st: dict = {}
+    d1 = df.groupby_sum("state", "crime", kernelize=True, collect_stats=st)
+    assert st["kernelize.dict_group_sum"] == 1
+    d0 = df.groupby_sum("state", "crime", kernelize=False)
+    assert set(d1) == set(d0)
+    for k in d0:
+        np.testing.assert_allclose(d1[k], d0[k], rtol=1e-10)
+
+
+def test_out_of_range_keys_raise_not_drop():
+    """Keys outside [0, capacity) can't be represented by the dense-key
+    route; decoding must raise instead of silently dropping rows the
+    generic path would keep."""
+    from repro.frames import welddf
+
+    key = np.array([100, 100, 1, 2], dtype=np.int64)
+    val = np.array([1.0, 2.0, 3.0, 4.0])
+    df = welddf.DataFrame({"k": key, "v": val})
+    d0 = df.groupby_sum("k", "v", capacity=64, kernelize=False)
+    assert d0 == {1: 3.0, 2: 4.0, 100: 3.0}
+    with pytest.raises(RuntimeError, match="outside \\[0, capacity\\)"):
+        df.groupby_sum("k", "v", capacity=64, kernelize=True)
+
+
+def test_float_key_groupby_falls_back():
+    from repro.frames import welddf
+
+    key = rng.rand(N)  # float keys: no dense-int routing
+    val = rng.rand(N)
+    df = welddf.DataFrame({"k": key, "v": val})
+    st: dict = {}
+    df.groupby_sum("k", "v", capacity=8192, kernelize=True, collect_stats=st)
+    assert st["kernelize.matched"] == 0
+
+
+def test_kernelize_false_is_default_and_identical():
+    """No knob -> no planning; stats carry no kernelize keys."""
+    obj, want = _q6_like_obj()
+    st: dict = {}
+    r = Evaluate(obj, collect_stats=st)
+    assert not any(k.startswith("kernelize") for k in st)
+    np.testing.assert_allclose(r.value, want, rtol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# impl resolution: interpret (Pallas body on CPU) vs ref oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pattern", ["q6", "mapchain"])
+def test_interpret_matches_ref(pattern):
+    if pattern == "q6":
+        obj, _ = _q6_like_obj(512)
+        ri = Evaluate(obj, kernelize=True, kernel_impl="interpret")
+        rr = Evaluate(obj, kernelize=True, kernel_impl="ref")
+        np.testing.assert_allclose(ri.value, rr.value, rtol=1e-12)
+    else:
+        from repro.frames import weldnp
+
+        x = rng.rand(512)
+        wx = weldnp.array(x)
+        y = weldnp.exp(wx * 2.0) + 1.0
+        gi = np.asarray(y.evaluate(kernelize=True, kernel_impl="interpret"))
+        gr = np.asarray(y.evaluate(kernelize=True, kernel_impl="ref"))
+        np.testing.assert_allclose(gi, gr, rtol=1e-12)
+
+
+def test_overflowed_dict_lookup_is_poisoned_not_plausible():
+    """In-IR Lookup into an overflowed kernelized dict must not return a
+    plausible-but-wrong number: float sums are NaN-poisoned and KeyExists
+    sees no keys (host decode raises separately)."""
+    keys = NewWeldObject(np.array([100, 1, 2], dtype=np.int64), None)
+    vals = NewWeldObject(np.array([3.0, 3.0, 4.0]), None)
+    d = M.groupby_agg(_ident(keys), _ident(vals), "+", capacity=8)
+    obj = NewWeldObject([keys, vals], ir.Lookup(d, ir.Literal(2, wt.I64)))
+    g0 = Evaluate(obj, kernelize=False).value
+    assert g0 == 4.0
+    assert np.isnan(Evaluate(obj, kernelize=True).value)
+    d2 = M.groupby_agg(_ident(keys), _ident(vals), "+", capacity=8)
+    obj2 = NewWeldObject([keys, vals],
+                         ir.KeyExists(d2, ir.Literal(1, wt.I64)))
+    assert not bool(Evaluate(obj2, kernelize=True).value)
+
+
+def test_unregister_invalidates_compile_cache():
+    """register/unregister is the ablation knob; a cached kernelized
+    executable must not survive a registry change."""
+    from repro.frames import welddf
+
+    df = welddf.DataFrame({"k": np.array([1, 2, 2], dtype=np.int64),
+                           "v": np.array([1.0, 2.0, 3.0])})
+    st: dict = {}
+    df.groupby_sum("k", "v", capacity=16, kernelize=True, collect_stats=st)
+    assert st["kernelize.dict_group_sum"] == 1
+    spec = kp.get("dict_group_sum")
+    kp.unregister("dict_group_sum")
+    try:
+        st2: dict = {}
+        d = df.groupby_sum("k", "v", capacity=16, kernelize=True,
+                           collect_stats=st2)
+        assert st2.get("kernelize.dict_group_sum", 0) == 0
+        assert d == {1: 1.0, 2: 5.0}
+    finally:
+        kp.register(spec)
+
+
+def test_program_evaluate_threads_kernelize():
+    """lazy.Program.evaluate exposes the knob and the planner stats."""
+    obj, want = _q6_like_obj()
+    prog = build_program(obj)
+    value, compile_ms, from_cache, stats = prog.evaluate(kernelize=True)
+    assert stats["kernelize.filter_reduce_sum"] == 1
+    np.testing.assert_allclose(np.asarray(value), want, rtol=1e-10)
+    v0, *_ = prog.evaluate(kernelize=False)
+    np.testing.assert_allclose(np.asarray(value), np.asarray(v0), rtol=1e-12)
+
+
+def test_registry_describes_all_kernels():
+    names = {s.name for s in kp.all_specs()}
+    assert {"filter_reduce_sum", "vecmerger_segment_sum", "dict_group_sum",
+            "matmul", "matvec", "map_elementwise"} <= names
+    text = kp.describe()
+    assert "repro.kernels.ops" in text

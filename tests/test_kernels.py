@@ -3,8 +3,33 @@ shape/dtype sweeps, plus hypothesis sweeps for the reductions."""
 import numpy as np
 import pytest
 import jax
-import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+# the IR runtime enables x64 globally on import; do the same here so the
+# f64 sweeps keep their dtype when this module runs first/alone.
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+try:  # hypothesis is an optional extra: sweeps run everywhere, the
+    # property tests only where it is installed.
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - environment-dependent
+    HAVE_HYPOTHESIS = False
+
+    def given(**kw):  # no-op decorator: the test below is skipped
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    def settings(**kw):
+        def deco(fn):
+            return fn
+        return deco
+
+    class st:  # noqa: N801 - mirrors the hypothesis strategies namespace
+        @staticmethod
+        def integers(*a, **kw):
+            return None
 
 from repro.kernels import ops, ref
 from repro.kernels import filter_reduce, flash_attention, fused_adamw

@@ -9,6 +9,8 @@ import pytest
 from repro.configs import get_config, list_configs
 from repro.models import build_model
 
+pytestmark = pytest.mark.slow  # one jit per architecture: ~1 min total
+
 ARCHS = [a for a in list_configs() if a != "weld-bench"]
 
 B, T = 2, 32

@@ -10,7 +10,13 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis is an optional extra; every test here is a "
+           "property sweep, so the whole module skips without it",
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import ir, macros as M, wtypes as wt
 from repro.core.interp import interpret

@@ -10,6 +10,8 @@ import pytest
 
 from repro.checkpoint import Checkpointer
 from repro.data import TokenPipeline
+
+pytestmark = pytest.mark.slow  # full train/resume loops: ~30 s
 from repro.distributed.straggler import StepMonitor
 from repro.kernels import ref as kref
 from repro.launch.train import train

@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# CI gate: byte-compile lint + the fast tier-1 slice (< a few minutes).
+#
+#   tools/ci.sh            # lint + fast tests
+#   tools/ci.sh --full     # lint + the whole tier-1 suite (slow tests too)
+#
+# Extra args after the mode flag are forwarded to pytest.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+MARK='not slow'
+if [[ "${1:-}" == "--full" ]]; then
+    MARK=''
+    shift
+fi
+
+echo "== compileall lint =="
+python -m compileall -q src benchmarks tests tools 2>/dev/null || \
+python -m compileall -q src benchmarks tests
+
+echo "== pytest =="
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+if [[ -n "$MARK" ]]; then
+    python -m pytest -x -q -m "$MARK" "$@"
+else
+    python -m pytest -x -q "$@"
+fi
