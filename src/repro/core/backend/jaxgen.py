@@ -601,8 +601,35 @@ class Emitter:
 
         spec = kreg.get(x.kernel)
         args = [self.ev(a, env, ctx) for a in x.args]
+        params = dict(x.params)
+        if self.memory_limit is not None and spec.footprint is not None:
+            # kernel calls pay padding + scratch out of the same budget
+            # the vecbuilder size hints feed — a kernelized plan cannot
+            # silently blow the evaluation's memory estimate
+            self.est_bytes += self._kernel_footprint(spec, args, x, params)
+            if self.est_bytes > self.memory_limit:
+                raise WeldMemoryError(
+                    f"estimated temp bytes {self.est_bytes} (incl. kernel "
+                    f"{x.kernel} padding/scratch) exceed memory limit "
+                    f"{self.memory_limit}"
+                )
         fns = [self._stage_elem_fn(lam, env) for lam in x.fns]
-        return spec.execute(args, dict(x.params), fns, self.kernel_impl)
+        return spec.execute(args, params, fns, self.kernel_impl)
+
+    @staticmethod
+    def _kernel_footprint(spec, args, x: ir.KernelCall, params) -> int:
+        def shape_of(v):
+            if isinstance(v, WVec):
+                leaf = v.data[0] if isinstance(v.data, tuple) else v.data
+                return tuple(leaf.shape)
+            return getattr(v, "shape", None) and tuple(v.shape) or ()
+
+        try:
+            return int(spec.footprint(
+                [shape_of(a) for a in args], wt.elem_bytes(x.ret_ty), params
+            ))
+        except Exception:
+            return 0  # accounting must never break a valid plan
 
     def _stage_elem_fn(self, lam: ir.Lambda, env):
         """Per-element IR lambda -> jnp-traceable callable (whole-column

@@ -3,34 +3,66 @@
 The subsystem sits between the optimizer and the backend emitter:
 
     frames -> lazy DAG -> optimize (fusion/predication/CSE)
-           -> **plan_kernels** (this package)
+           -> **plan_kernels** (this package; cost-gated in "auto" mode)
+           -> **tune_plan** (block-size autotuner bakes tuned params)
            -> jaxgen emitter (KernelCall nodes dispatch to repro.kernels.ops,
               everything else lowers through the generic vector emitter)
 
-``kernelize`` is opt-in per evaluation (``Evaluate(obj, kernelize=True)``)
-or globally via :func:`set_default_kernelize`; ``kernel_impl`` forwards
-the usual ref / interpret / pallas resolution to the kernel entries.
+``kernelize`` accepts three modes (bools are accepted for
+back-compatibility):
 
-This module stays import-light: the planner/registry (and the Pallas
-kernel library behind them) load lazily on first attribute access, so
-the default jnp-only evaluation path never pays their import cost.
+* ``"auto"`` (the default, ``None``) — route a matched loop only when
+  the roofline cost model (:mod:`.cost`) prices the kernel route at
+  least as fast as the generic jnp lowering;
+* ``"always"`` (``True``) — route every sound match unconditionally
+  (the pre-cost-model behavior; ablations and tests);
+* ``"off"`` (``False``) — bypass the planner entirely.
+
+``kernel_impl`` forwards the usual ref / interpret / pallas resolution
+to the kernel entries.
+
+This module stays import-light: the planner/registry/autotuner (and the
+Pallas kernel library behind them) load lazily on first attribute
+access.  With the default now "auto" they load at the first evaluation
+rather than never; ``kernelize="off"`` evaluations still skip them.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Union
+
+KERNELIZE_MODES = ("always", "auto", "off")
 
 #: process-wide default for evaluations that don't pass ``kernelize=``.
-#: stays False until kernel/jnp parity is proven on a deployment target.
-DEFAULT_KERNELIZE: bool = False
+#: "auto" = cost-gated routing — safe to leave on everywhere because the
+#: gate falls back to the jnp lowering whenever the kernel can't win.
+DEFAULT_KERNELIZE: str = "auto"
 
 
-def set_default_kernelize(flag: bool) -> None:
+def normalize_kernelize(kernelize: Union[None, bool, str]) -> str:
+    """Map the public knob (None/bool/str) onto a mode string."""
+    if kernelize is None:
+        return DEFAULT_KERNELIZE
+    if kernelize is True:
+        return "always"
+    if kernelize is False:
+        return "off"
+    if kernelize in KERNELIZE_MODES:
+        return str(kernelize)
+    raise ValueError(
+        f"kernelize must be None, bool, or one of {KERNELIZE_MODES}; "
+        f"got {kernelize!r}"
+    )
+
+
+def set_default_kernelize(mode: Union[bool, str]) -> None:
     global DEFAULT_KERNELIZE
-    DEFAULT_KERNELIZE = bool(flag)
+    if mode is None:
+        raise ValueError("default kernelize mode cannot be None")
+    DEFAULT_KERNELIZE = normalize_kernelize(mode)
 
 
-def resolve_kernelize(kernelize: Optional[bool]) -> bool:
-    return DEFAULT_KERNELIZE if kernelize is None else bool(kernelize)
+def resolve_kernelize(kernelize: Union[None, bool, str]) -> str:
+    return normalize_kernelize(kernelize)
 
 
 _PLANNER_ATTRS = {"plan_kernels"}
@@ -38,6 +70,7 @@ _REGISTRY_ATTRS = {
     "KernelPlanError", "KernelSpec", "all_specs", "available", "describe",
     "fingerprint", "get", "register", "unregister",
 }
+_AUTOTUNE_ATTRS = {"tune_plan"}
 
 
 def __getattr__(name: str):  # PEP 562 lazy re-exports
@@ -49,11 +82,16 @@ def __getattr__(name: str):  # PEP 562 lazy re-exports
         from . import registry
 
         return getattr(registry, name)
+    if name in _AUTOTUNE_ATTRS:
+        from . import autotune
+
+        return getattr(autotune, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 __all__ = [
     "plan_kernels",
+    "tune_plan",
     "KernelPlanError",
     "KernelSpec",
     "register",
@@ -65,5 +103,7 @@ __all__ = [
     "fingerprint",
     "set_default_kernelize",
     "resolve_kernelize",
+    "normalize_kernelize",
+    "KERNELIZE_MODES",
     "DEFAULT_KERNELIZE",
 ]

@@ -30,17 +30,38 @@ Soundness rules (checked per match, conservative):
   whole program inputs are fine);
 * the planner never rewrites inside a ``for`` body — kernel calls are
   evaluation-point constructs, not loop-body ones.
+
+Routing modes (``plan_kernels(mode=...)``):
+
+* ``"always"`` — route every sound match (the PR-1 behavior; what
+  ``kernelize=True`` requests);
+* ``"auto"`` — price each match through :mod:`.cost` (roofline terms
+  fed by ``Iter`` size hints and the staged bodies' op counts) and keep
+  the jnp lowering when the kernel route cannot win.  Unknown sizes
+  reject conservatively.  This is the process default.
+
+Along the way the planner tracks *shapes*, not just density: the
+``dense`` map carries the statically-known shape of every dense name
+(program inputs from ``input_shapes``, let-bound map/scatter loops from
+their iter sources), which is what prices the candidates and stamps
+``n_rows`` onto emitted ``KernelCall`` nodes for the block-size
+autotuner (:mod:`.autotune`).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from .. import ir
 from .. import wtypes as wt
+from . import cost as _cost
 from . import registry as reg
 
 #: minimum compute-node count for a map chain to be worth a kernel launch.
 MIN_MAP_OPS = 2
+
+#: shape map: dense name -> statically known shape tuple (or None when
+#: the name is provably dense but its length is not statically known).
+Shapes = Dict[str, Optional[tuple]]
 
 
 # ---------------------------------------------------------------------------
@@ -52,7 +73,7 @@ def _is_ident(e: ir.Expr, name: str) -> bool:
     return isinstance(e, ir.Ident) and e.name == name
 
 
-def _dense_expr(e: ir.Expr, dense: Set[str]) -> bool:
+def _dense_expr(e: ir.Expr, dense: Shapes) -> bool:
     if isinstance(e, ir.Ident):
         return e.name in dense
     if isinstance(e, ir.KernelCall):
@@ -60,11 +81,11 @@ def _dense_expr(e: ir.Expr, dense: Set[str]) -> bool:
     return False
 
 
-def _iter_ok(it: ir.Iter, dense: Set[str]) -> bool:
+def _iter_ok(it: ir.Iter, dense: Shapes) -> bool:
     return it.is_plain and _dense_expr(it.data, dense)
 
 
-def _value_dense(e: ir.Expr, dense: Set[str]) -> bool:
+def _value_dense(e: ir.Expr, dense: Shapes) -> bool:
     """Is a let-bound value a dense vector (no padding/count)?"""
     if _dense_expr(e, dense):
         return True
@@ -87,7 +108,7 @@ def _value_dense(e: ir.Expr, dense: Set[str]) -> bool:
     return False
 
 
-def _elementwise_ok(e: ir.Expr, banned: Set[str], per_elem: Set[str],
+def _elementwise_ok(e: ir.Expr, banned: set, per_elem: set,
                     allow_lookup: bool = True) -> bool:
     """Can `e` be staged as a whole-column jnp evaluation of the element?"""
 
@@ -141,7 +162,7 @@ def _destructure_pair(mval: ir.Expr) -> Tuple[ir.Expr, ir.Expr]:
 # ---------------------------------------------------------------------------
 
 
-def _match_filter_reduce(loop: ir.For, dense: Set[str]) -> Optional[ir.KernelCall]:
+def _match_filter_reduce(loop: ir.For, dense: Shapes) -> Optional[ir.KernelCall]:
     spec = reg.available("filter_reduce_sum")
     if spec is None:
         return None
@@ -226,7 +247,7 @@ def _match_filter_reduce(loop: ir.For, dense: Set[str]) -> Optional[ir.KernelCal
     )
 
 
-def _match_vecmerger(loop: ir.For, dense: Set[str]) -> Optional[ir.KernelCall]:
+def _match_vecmerger(loop: ir.For, dense: Shapes) -> Optional[ir.KernelCall]:
     spec = reg.available("vecmerger_segment_sum")
     if spec is None:
         return None
@@ -257,7 +278,7 @@ def _match_vecmerger(loop: ir.For, dense: Set[str]) -> Optional[ir.KernelCall]:
     )
 
 
-def _match_dict_group(loop: ir.For, dense: Set[str]) -> Optional[ir.KernelCall]:
+def _match_dict_group(loop: ir.For, dense: Shapes) -> Optional[ir.KernelCall]:
     spec = reg.available("dict_group_sum")
     if spec is None:
         return None
@@ -310,7 +331,7 @@ def _match_dict_group(loop: ir.For, dense: Set[str]) -> Optional[ir.KernelCall]:
     )
 
 
-def _match_map_chain(loop: ir.For, dense: Set[str]) -> Optional[ir.KernelCall]:
+def _match_map_chain(loop: ir.For, dense: Shapes) -> Optional[ir.KernelCall]:
     spec = reg.available("map_elementwise")
     if spec is None:
         return None
@@ -343,7 +364,7 @@ def _match_map_chain(loop: ir.For, dense: Set[str]) -> Optional[ir.KernelCall]:
     )
 
 
-def _match_loop(e: ir.Result, dense: Set[str]) -> Optional[ir.KernelCall]:
+def _match_loop(e: ir.Result, dense: Shapes) -> Optional[ir.KernelCall]:
     loop = e.builder
     if not isinstance(loop, ir.For) or not loop.iters:
         return None
@@ -387,6 +408,117 @@ def _match_cudf(e: ir.CUDF) -> Optional[ir.KernelCall]:
 
 
 # ---------------------------------------------------------------------------
+# static shape inference (feeds the cost model and the autotuner)
+# ---------------------------------------------------------------------------
+
+
+def _shape_of(e: ir.Expr, dense: Shapes) -> Optional[tuple]:
+    """Statically-known shape of a dense expression, if any."""
+    if isinstance(e, ir.Ident):
+        return dense.get(e.name)
+    if isinstance(e, ir.MakeVec):
+        return (len(e.items),)
+    if isinstance(e, ir.KernelCall):
+        if e.kernel in ("vecmerger_segment_sum",):
+            return _shape_of(e.args[0], dense)
+        if e.kernel in ("map_elementwise",):
+            return _shape_of(e.args[0], dense)
+        if e.kernel == "matmul":
+            a = _shape_of(e.args[0], dense)
+            b = _shape_of(e.args[1], dense)
+            if a and b and len(a) == 2 and len(b) == 2:
+                return (a[0], b[1])
+            return None
+        if e.kernel == "matvec":
+            a = _shape_of(e.args[0], dense)
+            return (a[0],) if a else None
+        return None
+    if isinstance(e, ir.Result) and isinstance(e.builder, ir.For):
+        loop = e.builder
+        nb = loop.builder
+        if isinstance(nb, ir.NewBuilder) and isinstance(nb.ty, wt.VecMerger):
+            return _shape_of(nb.arg, dense)
+        if loop.iters:  # map-like: output length == iter length
+            src = _shape_of(loop.iters[0].data, dense)
+            return (src[0],) if src else None
+    return None
+
+
+def _len_of(e: ir.Expr, dense: Shapes) -> Optional[int]:
+    shp = _shape_of(e, dense)
+    return int(shp[0]) if shp else None
+
+
+_elem_bytes = wt.elem_bytes  # shared with jaxgen's memory accounting
+
+
+def _min_block(spec: reg.KernelSpec, key: str) -> Optional[int]:
+    """Best-case (smallest) tunable block: the padding the autotuner can
+    shrink the kernel route down to, which is what the gate should price."""
+    space = getattr(spec, "tune_space", None) or {}
+    cands = space.get(key)
+    return min(cands) if cands else None
+
+
+def _call_meta(kc: ir.KernelCall, dense: Shapes) -> dict:
+    """Static description of a matched call for cost.py / autotune.py."""
+    spec = reg.available(kc.kernel)
+    params = dict(kc.params)
+    meta: dict = {"kernel": kc.kernel}
+    if kc.kernel == "filter_reduce_sum":
+        meta["n"] = next(
+            (v for v in (_len_of(a, dense) for a in kc.args) if v), None
+        )
+        meta["cols"] = len(kc.args)
+        meta["n_aggs"] = params.get("n_aggs", 1)
+        meta["ops"] = sum(_compute_ops(f.body) for f in kc.fns) or 1
+        meta["elem_bytes"] = _elem_bytes(kc.ret_ty)
+    elif kc.kernel == "vecmerger_segment_sum":
+        meta["n"] = next(
+            (v for v in (_len_of(a, dense) for a in kc.args[1:]) if v), None
+        )
+        meta["k"] = _len_of(kc.args[0], dense)
+        meta["elem_bytes"] = _elem_bytes(kc.ret_ty)
+        meta["max_k"] = spec.max_segments if spec else None
+    elif kc.kernel == "dict_group_sum":
+        meta["n"] = next(
+            (v for v in (_len_of(a, dense) for a in kc.args) if v), None
+        )
+        meta["k"] = params.get("capacity")
+        meta["elem_bytes"] = _elem_bytes(kc.ret_ty)
+    elif kc.kernel in ("matmul", "matvec"):
+        a = _shape_of(kc.args[0], dense)
+        b = _shape_of(kc.args[1], dense)
+        if a and len(a) == 2:
+            if kc.kernel == "matvec":
+                # rhs is a vector: the output column count is 1 by shape
+                meta["dims"] = (a[0], a[1], 1)
+                meta["n"] = a[0]
+            elif b and len(b) == 2:
+                meta["dims"] = (a[0], a[1], b[1])
+                meta["n"] = a[0]
+            # else: rhs shape unknown — leave dims unset so the cost
+            # model rejects conservatively instead of pricing a guess
+        meta["elem_bytes"] = _elem_bytes(kc.ret_ty)
+        for key in ("bm", "bn", "bk"):
+            blk = _min_block(spec, key) if spec else None
+            if blk:
+                meta[key] = blk
+    elif kc.kernel == "map_elementwise":
+        meta["n"] = next(
+            (v for v in (_len_of(a, dense) for a in kc.args) if v), None
+        )
+        meta["cols"] = len(kc.args)
+        meta["ops"] = sum(_compute_ops(f.body) for f in kc.fns) or 1
+        meta["elem_bytes"] = _elem_bytes(kc.ret_ty)
+    if spec is not None and "block" not in meta:
+        blk = _min_block(spec, "block")
+        if blk:
+            meta["block"] = blk
+    return meta
+
+
+# ---------------------------------------------------------------------------
 # the pass
 # ---------------------------------------------------------------------------
 
@@ -395,18 +527,60 @@ def plan_kernels(
     e: ir.Expr,
     input_shapes: Optional[Dict[str, tuple]] = None,
     stats: Optional[Dict[str, int]] = None,
+    mode: str = "always",
 ) -> ir.Expr:
     """Annotate matched loops with KernelCall nodes.  Identity on programs
-    with no matches; never rewrites inside ``for`` bodies."""
+    with no matches; never rewrites inside ``for`` bodies.
+
+    ``mode="always"`` routes every sound match; ``mode="auto"`` prices
+    each candidate through the roofline cost model and keeps the jnp
+    lowering when the kernel route loses.  Decisions (with both cost
+    estimates) are recorded under ``stats["kernelplan"]``.
+    """
+    if mode not in ("always", "auto"):
+        raise ValueError(f"plan_kernels mode must be always/auto, got {mode!r}")
     stats = stats if stats is not None else {}
     stats.setdefault("kernelize.matched", 0)
-    dense: Set[str] = set(input_shapes or ())
+    kplan = stats.setdefault(
+        "kernelplan",
+        {"mode": mode, "routed": {}, "rejected": {}, "costs": []},
+    )
+    dense: Shapes = {
+        k: tuple(v) if v is not None else None
+        for k, v in (input_shapes or {}).items()
+    }
 
-    def found(kc: ir.KernelCall) -> ir.KernelCall:
+    def consider(kc: ir.KernelCall, orig: ir.Expr) -> ir.Expr:
+        meta = _call_meta(kc, dense)
+        if mode == "auto":
+            est = _cost.estimate(reg.get(kc.kernel), meta)
+            kplan["costs"].append({"kernel": kc.kernel, **est.as_stats()})
+            if not est.routed:
+                kplan["rejected"][kc.kernel] = (
+                    kplan["rejected"].get(kc.kernel, 0) + 1
+                )
+                return orig
+        kplan["routed"][kc.kernel] = kplan["routed"].get(kc.kernel, 0) + 1
         stats["kernelize.matched"] += 1
         key = f"kernelize.{kc.kernel}"
         stats[key] = stats.get(key, 0) + 1
-        return kc
+        n = meta.get("n")
+        extra: Tuple[Tuple[str, object], ...] = (
+            ("n_rows", int(n) if n else -1),
+        )
+        if meta.get("dims"):
+            extra += (("dims", tuple(int(d) for d in meta["dims"])),)
+        if meta.get("k") and "capacity" not in dict(kc.params):
+            # segment width for the autotuner (dict routes carry it as
+            # "capacity" already; vecmerger needs it stamped explicitly)
+            extra += (("k", int(meta["k"])),)
+        return ir.KernelCall(
+            kernel=kc.kernel,
+            args=kc.args,
+            ret_ty=kc.ret_ty,
+            params=kc.params + extra,
+            fns=kc.fns,
+        )
 
     def rec(x: ir.Expr) -> ir.Expr:
         if isinstance(x, ir.Lambda):
@@ -414,17 +588,17 @@ def plan_kernels(
         if isinstance(x, ir.Let):
             v = rec(x.value)
             if _value_dense(v, dense):
-                dense.add(x.name)
+                dense[x.name] = _shape_of(v, dense)
             return ir.Let(x.name, v, rec(x.body))
         x = x.map_children(rec)
         if isinstance(x, ir.Result):
             kc = _match_loop(x, dense)
             if kc is not None:
-                return found(kc)
+                return consider(kc, x)
         if isinstance(x, ir.CUDF):
             kc = _match_cudf(x)
             if kc is not None:
-                return found(kc)
+                return consider(kc, x)
         return x
 
     return rec(e)

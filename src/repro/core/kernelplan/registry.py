@@ -12,18 +12,36 @@ Adapters receive backend values (``WVec``/arrays), the static params
 baked into the ``KernelCall`` node, the staged per-element callables, and
 the ``impl`` knob (ref / interpret / pallas) which is forwarded to
 ``repro.kernels.ops`` so the existing resolution machinery applies.
+Tuned block sizes arrive the same way: the autotuner appends ``block``
+(or ``bm``/``bn``/``bk``) to the call's params and adapters forward them.
+
+Beyond the adapter, each spec now carries the hooks the adaptive
+planner needs:
+
+* ``cost`` — roofline pricing of the match (see ``cost.py``); drives
+  ``mode="auto"`` routing;
+* ``tune_space`` / ``make_bench`` — the tunable-parameter grid and a
+  synthetic-workload builder the autotuner times it with;
+* ``footprint`` — padding + scratch bytes of one call, charged against
+  the evaluation's ``memory_limit`` budget by the emitter (the same
+  budget vecbuilder size hints feed).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Dict, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ...kernels import filter_reduce as _fr
+from ...kernels import map_chain as _mc
 from ...kernels import ops as kops
 from ...kernels import segment_reduce as _sr
+from ...kernels import tiled_matmul as _tm
 from ..backend.values import WDict, WVec
+from . import cost as _cost
 
 
 class KernelPlanError(RuntimeError):
@@ -54,6 +72,21 @@ class KernelSpec:
     max_segments: Optional[int] = None
     #: backend adapter: (args, params, fns, impl) -> backend value.
     execute: Callable = None
+    #: roofline cost hook: (meta dict) -> cost.CostEstimate.  None means
+    #: "always route" (no model; pre-cost-gate behavior).
+    cost: Optional[Callable] = None
+    #: tunable-parameter grid, e.g. {"block": (1024, 8192, 32768)}.
+    #: Empty = nothing to tune.
+    tune_space: Dict[str, tuple] = field(default_factory=dict)
+    #: synthetic-workload builder for the autotuner:
+    #: (meta, params, impl) -> zero-arg timed callable.
+    make_bench: Optional[Callable] = None
+    #: HBM overhead accounting: (arg_shapes, itemsize, params) -> bytes of
+    #: padding + scratch this call adds beyond its natural inputs/outputs.
+    footprint: Optional[Callable] = None
+    #: module-default value per tunable (what runs untuned; also what the
+    #: autotuner bakes into the plan when timing is unavailable).
+    tune_defaults: Dict[str, int] = field(default_factory=dict)
 
 
 _REGISTRY: Dict[str, KernelSpec] = {}
@@ -84,8 +117,12 @@ def all_specs() -> Tuple[KernelSpec, ...]:
 
 def fingerprint() -> str:
     """Stable key of the registered-kernel set — part of the compile-cache
-    key, so register/unregister (the ablation knob) forces a recompile."""
-    return ",".join(sorted(_REGISTRY))
+    key, so register/unregister (the ablation knob) and default-block
+    changes force a recompile rather than serving a stale executable."""
+    return ",".join(sorted(
+        f"{s.name}:{s.entry}:{sorted(s.tune_defaults.items())}"
+        for s in _REGISTRY.values()
+    ))
 
 
 def describe() -> str:
@@ -130,20 +167,36 @@ def _as_col(v, n):
 
 
 def _exec_filter_reduce(args, params, fns, impl):
-    """(iters...) + staged val/pred bodies -> scalar (or struct of) sums."""
+    """(iters...) + staged val/pred bodies -> scalar (or struct of) sums.
+
+    Multi-aggregate calls (weldrel's struct-of-mergers ``agg``) stack
+    the staged value columns and take the fused multi-output kernel, so
+    the predicate mask and the column tiles are loaded once for ALL
+    aggregates instead of once per aggregate.  ``multi=False`` in params
+    forces the per-aggregate path (parity tests / ablation)."""
     arrays = [_dense_data(a, "filter_reduce") for a in args]
     n = arrays[0].shape[0]
     idx = jnp.arange(n, dtype=jnp.int64)
     elem = _elem_of(arrays)
     n_aggs = params["n_aggs"]
+    block = params.get("block")
     if params["has_pred"]:
         pred = _as_col(fns[n_aggs](idx, elem), n).astype(bool)
     else:
         pred = jnp.ones((n,), dtype=bool)
-    outs = []
-    for k in range(n_aggs):
-        val = _as_col(fns[k](idx, elem), n)
-        outs.append(kops.filter_reduce_sum(val, pred, impl=impl))
+    vals = [_as_col(fns[k](idx, elem), n) for k in range(n_aggs)]
+    fuse = (
+        params.get("multi", True)
+        and n_aggs > 1
+        and len({v.dtype for v in vals}) == 1
+    )
+    if fuse:
+        fused = kops.filter_reduce_sum_multi(jnp.stack(vals), pred,
+                                             impl=impl, block=block)
+        outs = [fused[k] for k in range(n_aggs)]
+    else:
+        outs = [kops.filter_reduce_sum(v, pred, impl=impl, block=block)
+                for v in vals]
     return tuple(outs) if params["struct"] else outs[0]
 
 
@@ -157,7 +210,8 @@ def _exec_vecmerger_segment_sum(args, params, fns, impl):
     seg = _as_col(fns[0](idx, elem), n).astype(jnp.int32)
     vals = _as_col(fns[1](idx, elem), n).astype(base.dtype)
     k = base.shape[0]
-    out = base + kops.segment_sum(seg, vals, num_segments=k, impl=impl)
+    out = base + kops.segment_sum(seg, vals, num_segments=k, impl=impl,
+                                  block=params.get("block"))
     return WVec(out)
 
 
@@ -190,7 +244,8 @@ def _exec_dict_group_sum(args, params, fns, impl):
     ones = jnp.where(valid, 1, 0).astype(vals.dtype)
     # one fused launch for sums + presence counts (shared seg-id loads)
     both = kops.segment_sum_vectors(seg, jnp.stack([vals_m, ones], axis=1),
-                                    num_segments=cap, impl=impl)
+                                    num_segments=cap, impl=impl,
+                                    block=params.get("block"))
     sums, counts = both[:, 0], both[:, 1]
     present = counts > 0
     order = jnp.argsort(~present, stable=True)  # front-pack, keys ascending
@@ -210,18 +265,24 @@ def _exec_dict_group_sum(args, params, fns, impl):
     return WDict(keys_out, vals_out, count)
 
 
+def _tiles(params) -> dict:
+    return {k: params.get(k) for k in ("bm", "bn", "bk")}
+
+
 def _exec_matmul(args, params, fns, impl):
     a = _dense_data(args[0], "matmul lhs")
     b = _dense_data(args[1], "matmul rhs")
     ct = jnp.result_type(a, b)
-    return WVec(kops.matmul(a.astype(ct), b.astype(ct), impl=impl))
+    return WVec(kops.matmul(a.astype(ct), b.astype(ct), impl=impl,
+                            **_tiles(params)))
 
 
 def _exec_matvec(args, params, fns, impl):
     a = _dense_data(args[0], "matvec lhs")
     b = _dense_data(args[1], "matvec rhs")
     ct = jnp.result_type(a, b)
-    out = kops.matmul(a.astype(ct), b[:, None].astype(ct), impl=impl)
+    out = kops.matmul(a.astype(ct), b[:, None].astype(ct), impl=impl,
+                      **_tiles(params))
     return WVec(out[:, 0])
 
 
@@ -233,7 +294,132 @@ def _exec_map_elementwise(args, params, fns, impl):
         # index is unused, so bind a dummy scalar.
         return fns[0](jnp.int64(0), _elem_of(list(cols)))
 
-    return WVec(kops.map_elementwise(body, arrays, impl=impl))
+    return WVec(kops.map_elementwise(body, arrays, impl=impl,
+                                     block=params.get("block")))
+
+
+# ---------------------------------------------------------------------------
+# Footprints: padding + scratch bytes one call adds to the HBM budget.
+# (arg_shapes are the dense arg shapes at trace time; itemsize is the
+# result element width.)  Charged by the emitter against memory_limit.
+# ---------------------------------------------------------------------------
+
+
+def _pad_of(n: int, block: int) -> int:
+    return (-n) % max(block, 1)
+
+
+def _fp_filter_reduce(arg_shapes, itemsize, params):
+    n = arg_shapes[0][0] if arg_shapes and arg_shapes[0] else 0
+    pad = _pad_of(n, params.get("block") or _fr.BLOCK)
+    aggs = params.get("n_aggs", 1)
+    # staged value columns (one per agg; stacked when fused) + pred mask
+    scratch = aggs * (n + pad) * itemsize + (n + pad)
+    return pad * len(arg_shapes) * itemsize + scratch
+
+
+def _fp_vecmerger(arg_shapes, itemsize, params):
+    n = arg_shapes[1][0] if len(arg_shapes) > 1 and arg_shapes[1] else 0
+    pad = _pad_of(n, params.get("block") or _sr.BLOCK_N)
+    # staged seg-id (i32) and value columns + the padded tails
+    return (n + pad) * (4 + itemsize) + pad * itemsize * (len(arg_shapes) - 1)
+
+
+def _fp_dict_group(arg_shapes, itemsize, params):
+    n = arg_shapes[0][0] if arg_shapes and arg_shapes[0] else 0
+    cap = int(params.get("capacity", 0))
+    pad = _pad_of(n, params.get("block") or 256)
+    # staged keys/mask + the stacked (n, 2) value matrix + K-compaction
+    return (n + pad) * (4 + 2 * itemsize + 1) + cap * (3 * itemsize + 8)
+
+
+def _fp_matmul(arg_shapes, itemsize, params):
+    if len(arg_shapes) < 2 or not arg_shapes[0] or not arg_shapes[1]:
+        return 0
+    m, k = arg_shapes[0][0], arg_shapes[0][1] if len(arg_shapes[0]) > 1 else 1
+    n = arg_shapes[1][1] if len(arg_shapes[1]) > 1 else 1
+    bm = params.get("bm") or 256
+    bn = params.get("bn") or 256
+    bk = params.get("bk") or 512
+    mp, kp, np_ = m + _pad_of(m, bm), k + _pad_of(k, bk), n + _pad_of(n, bn)
+    return (mp * kp - m * k + kp * np_ - k * n + mp * np_ - m * n) * itemsize
+
+
+def _fp_map_chain(arg_shapes, itemsize, params):
+    n = arg_shapes[0][0] if arg_shapes and arg_shapes[0] else 0
+    pad = _pad_of(n, params.get("block") or _mc.BLOCK)
+    return pad * (len(arg_shapes) + 1) * itemsize
+
+
+# ---------------------------------------------------------------------------
+# Autotune benches: synthetic workloads matching the tuned call's shape.
+# (meta carries n / k / dims / dtype; params is one candidate point.)
+# ---------------------------------------------------------------------------
+
+
+def _bench_filter_reduce(meta, params, impl):
+    n = int(meta["n"])
+    x = jnp.ones((n,), meta.get("dtype", jnp.float64))
+    p = jnp.ones((n,), bool)
+
+    def go():
+        jax.block_until_ready(kops.filter_reduce_sum(
+            x, p, impl=impl, block=params.get("block")))
+
+    return go
+
+
+def _bench_vecmerger(meta, params, impl):
+    n = int(meta["n"])
+    k = int(meta.get("k") or 256)
+    seg = (jnp.arange(n, dtype=jnp.int32) % max(min(k, _sr.MAX_K), 1))
+    vals = jnp.ones((n,), meta.get("dtype", jnp.float64))
+
+    def go():
+        jax.block_until_ready(kops.segment_sum(
+            seg, vals, num_segments=min(k, _sr.MAX_K), impl=impl,
+            block=params.get("block")))
+
+    return go
+
+
+def _bench_dict_group(meta, params, impl):
+    n = int(meta["n"])
+    k = int(meta.get("k") or 256)
+    seg = (jnp.arange(n, dtype=jnp.int32) % max(min(k, _sr.MAX_K), 1))
+    vals = jnp.ones((n, 2), meta.get("dtype", jnp.float64))
+
+    def go():
+        jax.block_until_ready(kops.segment_sum_vectors(
+            seg, vals, num_segments=min(k, _sr.MAX_K), impl=impl,
+            block=params.get("block")))
+
+    return go
+
+
+def _bench_matmul(meta, params, impl):
+    m, k, n = (int(d) for d in meta["dims"])
+    a = jnp.ones((m, k), meta.get("dtype", jnp.float64))
+    b = jnp.ones((k, n), meta.get("dtype", jnp.float64))
+
+    def go():
+        jax.block_until_ready(kops.matmul(
+            a, b, impl=impl, bm=params.get("bm"), bn=params.get("bn"),
+            bk=params.get("bk")))
+
+    return go
+
+
+def _bench_map_chain(meta, params, impl):
+    n = int(meta["n"])
+    x = jnp.ones((n,), meta.get("dtype", jnp.float64))
+
+    def go():
+        jax.block_until_ready(kops.map_elementwise(
+            lambda c: c * 2.0 + 1.0, [x], impl=impl,
+            block=params.get("block")))
+
+    return go
 
 
 # ---------------------------------------------------------------------------
@@ -247,8 +433,14 @@ register(KernelSpec(
     builder="merger[+]",
     elem_kinds=("f32", "f64", "i32", "i64"),
     description="predicated sum over a (possibly multi-column) loop; the "
-                "fused form of Listing 10 / TPC-H Q6",
+                "fused form of Listing 10 / TPC-H Q6; multi-aggregate "
+                "struct matches fuse into one multi-output launch",
     execute=_exec_filter_reduce,
+    cost=_cost.cost_filter_reduce,
+    tune_space={"block": _fr.BLOCK_CANDIDATES},
+    tune_defaults={"block": _fr.BLOCK},
+    make_bench=_bench_filter_reduce,
+    footprint=_fp_filter_reduce,
 ))
 
 register(KernelSpec(
@@ -259,8 +451,14 @@ register(KernelSpec(
     elem_kinds=("f32", "f64"),
     description="scatter-add into a dense base vector as one-hot MXU "
                 "segment sums (PageRank's edge scan)",
-    max_segments=None,  # kops falls back to the ref path above MAX_K
+    max_segments=_sr.MAX_K,  # beyond this, kops serves the ref scatter:
+                             # the cost gate prices that route as a loss
     execute=_exec_vecmerger_segment_sum,
+    cost=_cost.cost_vecmerger,
+    tune_space={"block": _sr.BLOCK_CANDIDATES},
+    tune_defaults={"block": _sr.BLOCK_N},
+    make_bench=_bench_vecmerger,
+    footprint=_fp_vecmerger,
 ))
 
 register(KernelSpec(
@@ -273,6 +471,11 @@ register(KernelSpec(
                 "segment_sum + presence compaction",
     max_segments=_sr.MAX_K,
     execute=_exec_dict_group_sum,
+    cost=_cost.cost_dict_group,
+    tune_space={"block": (128, 256, 512)},
+    tune_defaults={"block": 256},
+    make_bench=_bench_dict_group,
+    footprint=_fp_dict_group,
 ))
 
 register(KernelSpec(
@@ -283,6 +486,12 @@ register(KernelSpec(
     elem_kinds=("f32", "f64"),
     description="tiled VMEM-blocked matmul for raised 2-D dot loops",
     execute=_exec_matmul,
+    cost=_cost.cost_matmul,
+    tune_space={"bm": _tm.BM_CANDIDATES, "bn": _tm.BN_CANDIDATES,
+                "bk": _tm.BK_CANDIDATES},
+    tune_defaults={"bm": 256, "bn": 256, "bk": 512},
+    make_bench=_bench_matmul,
+    footprint=_fp_matmul,
 ))
 
 register(KernelSpec(
@@ -293,6 +502,11 @@ register(KernelSpec(
     elem_kinds=("f32", "f64"),
     description="matrix-vector product through the tiled matmul kernel",
     execute=_exec_matvec,
+    cost=_cost.cost_matmul,
+    tune_space={"bm": _tm.BM_CANDIDATES, "bk": _tm.BK_CANDIDATES},
+    tune_defaults={"bm": 256, "bk": 512},
+    make_bench=None,  # shares the matmul entry; tuned via matmul dims
+    footprint=_fp_matmul,
 ))
 
 register(KernelSpec(
@@ -304,4 +518,9 @@ register(KernelSpec(
     description="fused elementwise map chain staged into one Pallas pass "
                 "(Black-Scholes-style operator chains)",
     execute=_exec_map_elementwise,
+    cost=_cost.cost_map_chain,
+    tune_space={"block": _mc.BLOCK_CANDIDATES},
+    tune_defaults={"block": _mc.BLOCK},
+    make_bench=_bench_map_chain,
+    footprint=_fp_map_chain,
 ))

@@ -210,14 +210,15 @@ class Program:
         optimize: bool = True,
         memory_limit: Optional[int] = None,
         passes=None,
-        kernelize: Optional[bool] = None,
+        kernelize=None,
         kernel_impl: Optional[str] = None,
     ):
         """Compile + run this program directly (no WeldObject wrapper).
 
         Returns ``(value, compile_ms, from_cache, stats)``;
-        ``kernelize=True`` routes matched loops through the Pallas
-        kernel library (see ``repro.core.kernelplan``).
+        ``kernelize`` selects the planner mode — ``"auto"`` (default:
+        cost-gated), ``"always"``/``True``, or ``"off"``/``False``
+        (see ``repro.core.kernelplan``).
         """
         from .runtime import compile_and_run  # local import: needs jax
 
@@ -289,17 +290,20 @@ def Evaluate(
     passes=None,
     backend: str = "jax",
     collect_stats: Optional[dict] = None,
-    kernelize: Optional[bool] = None,
+    kernelize=None,
     kernel_impl: Optional[str] = None,
 ) -> WeldResult:
     """Optimize + compile + run the whole DAG under `o` (paper Table 2).
 
     `memory_limit` bounds Weld-owned temporary allocation (estimated from
-    size analysis); exceeded limits raise before execution.  `passes`
-    selects a subset of optimizer passes (ablation benchmarks).
-    `kernelize` routes matched fused loops onto the Pallas kernel library
-    (None = process default, see ``repro.core.kernelplan``);
-    `kernel_impl` picks ref / interpret / pallas for those kernel calls.
+    size analysis, including kernel padding/scratch footprints); exceeded
+    limits raise before execution.  `passes` selects a subset of optimizer
+    passes (ablation benchmarks).  `kernelize` selects the kernel-planner
+    mode: ``"auto"`` (the process default — matched loops route onto the
+    Pallas kernel library only when the roofline cost model favors them),
+    ``"always"``/``True`` (route every match), ``"off"``/``False``
+    (bypass the planner; see ``repro.core.kernelplan``).  `kernel_impl`
+    picks ref / interpret / pallas for the routed kernel calls.
     """
     from .runtime import compile_and_run  # local import: runtime needs jax
 

@@ -41,10 +41,19 @@ def pretty(e: "ir.Expr", indent: int = 0) -> str:
     if isinstance(e, ir.CUDF):
         return f"cudf[{e.name}](" + ", ".join(p(a) for a in e.args) + ")"
     if isinstance(e, ir.KernelCall):
+        # tuned tile parameters surface next to the kernel name so a plan
+        # dump shows the block shape the autotuner chose for each call
+        blocks = [(k, v) for k, v in e.params
+                  if k in ("block", "bm", "bn", "bk")]
+        rest = [(k, v) for k, v in e.params
+                if k not in ("block", "bm", "bn", "bk")]
+        tag = f"kernel[{e.kernel}]"
+        if blocks:
+            tag += "@{" + ",".join(f"{k}={v}" for k, v in blocks) + "}"
         parts = [p(a) for a in e.args]
-        parts += [f"{k}={v}" for k, v in e.params]
+        parts += [f"{k}={v}" for k, v in rest]
         parts += [p(f) for f in e.fns]
-        return f"kernel[{e.kernel}](" + ", ".join(parts) + ")"
+        return tag + "(" + ", ".join(parts) + ")"
     if isinstance(e, ir.Lambda):
         params = ",".join(f"{q.name}:{q.ty}" for q in e.params)
         return f"|{params}| {pretty(e.body, indent + 1)}"

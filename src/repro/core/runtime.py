@@ -42,25 +42,27 @@ def compile_and_run(
     optimize: bool = True,
     memory_limit: Optional[int] = None,
     passes=None,
-    kernelize: Optional[bool] = None,
+    kernelize=None,
     kernel_impl: Optional[str] = None,
 ):
     """Returns (value, compile_ms, from_cache, stats).
 
-    ``kernelize`` (None = the kernelplan process default, False until
-    parity is proven) runs the kernel planner after optimization so
-    matched loops dispatch to the Pallas kernel library; ``kernel_impl``
-    selects ref / interpret / pallas for those calls (None = the kernel
+    ``kernelize`` selects the kernel-planner mode — ``"auto"`` (the
+    process default: roofline-cost-gated routing), ``"always"``
+    (``True``: route every match), or ``"off"`` (``False``).  The
+    planner runs after optimization so matched loops dispatch to the
+    Pallas kernel library; the block-size autotuner then bakes tuned
+    tile parameters into the plan.  ``kernel_impl`` selects
+    ref / interpret / pallas for those calls (None = the kernel
     library's own default).
     """
     # kernelplan (and the Pallas kernel library behind it) is imported
-    # lazily so the default jnp-only path doesn't pay its import cost
-    if kernelize is None:
-        from .kernelplan import DEFAULT_KERNELIZE
+    # lazily so kernelize="off" evaluations never pay its import cost
+    from .kernelplan import normalize_kernelize
 
-        kernelize = DEFAULT_KERNELIZE
-    kernelize = bool(kernelize)
-    if kernelize and kernel_impl is None:
+    mode = normalize_kernelize(kernelize)
+    kernelize_on = mode != "off"
+    if kernelize_on and kernel_impl is None:
         # resolve the kernel library's default NOW so it lands in the
         # compile-cache key — kops promises set_default_impl() always
         # takes effect, which a cached executable would otherwise defeat
@@ -84,15 +86,25 @@ def compile_and_run(
     name_map = {n: f"in{i}" for i, n in enumerate(input_names)}
     sig = ",".join(f"{a.dtype}:{a.shape}" for a in arrays)
     kreg = ""
-    if kernelize:
-        from .kernelplan import fingerprint
 
-        kreg = fingerprint()  # register/unregister must invalidate the cache
-    key = (
-        ir.canon_key(prog.expr, name_map)
-        + f"|opt={optimize}|mem={memory_limit}|passes={passes}"
-        + f"|kz={kernelize}|kimpl={kernel_impl}|kreg={kreg}|{sig}"
-    )
+    def _kreg() -> str:
+        from .kernelplan import autotune, fingerprint
+
+        return fingerprint() + "/" + autotune.fingerprint()
+
+    if kernelize_on:
+        # register/unregister AND new tunings must invalidate the cache:
+        # a stale executable must never serve a newly tuned plan
+        kreg = _kreg()
+
+    def _mk_key(kreg_now: str) -> str:
+        return (
+            ir.canon_key(prog.expr, name_map)
+            + f"|opt={optimize}|mem={memory_limit}|passes={passes}"
+            + f"|kz={mode}|kimpl={kernel_impl}|kreg={kreg_now}|{sig}"
+        )
+
+    key = _mk_key(kreg)
 
     stats: dict = {}
     if key in _compile_cache:
@@ -108,10 +120,14 @@ def compile_and_run(
             expr = run_passes(expr, passes=passes, stats=stats,
                               input_shapes=shapes)
         stats["loops.after"] = loop_count(expr)
-        if kernelize:
-            from .kernelplan import plan_kernels
+        if kernelize_on:
+            from .kernelplan import autotune, plan_kernels
 
-            expr = plan_kernels(expr, input_shapes=shapes, stats=stats)
+            expr = plan_kernels(expr, input_shapes=shapes, stats=stats,
+                                mode=mode)
+            if stats.get("kernelize.matched"):
+                expr = autotune.tune_plan(expr, impl=kernel_impl,
+                                          stats=stats)
         fn = emit_program(expr, input_names, types, shapes, memory_limit,
                           kernel_impl=kernel_impl)
         jitted = jax.jit(fn)
@@ -120,6 +136,14 @@ def compile_and_run(
         compile_ms = (time.perf_counter() - t0) * 1e3
         stats["compile_ms"] = compile_ms
         _compile_cache[key] = (jitted, stats)
+        if kernelize_on:
+            # first-encounter tuning bumps the autotune fingerprint AFTER
+            # the key was formed; the executable was built WITH those
+            # tunings, so file it under the refreshed key too — the next
+            # identical call hits instead of recompiling the same plan
+            kreg_now = _kreg()
+            if kreg_now != kreg:
+                _compile_cache[_mk_key(kreg_now)] = (jitted, stats)
 
     out = jitted(*arrays)
     out = jax.block_until_ready(out)

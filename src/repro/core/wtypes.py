@@ -228,6 +228,21 @@ def is_builder(ty: WeldType) -> bool:
     return isinstance(ty, BuilderType)
 
 
+def elem_bytes(ty: WeldType) -> int:
+    """Widest scalar element width (bytes) reachable in a value type —
+    the byte-per-element figure the kernel planner's cost model and the
+    emitter's memory accounting both price traffic with."""
+    if isinstance(ty, Struct):
+        return max((elem_bytes(f) for f in ty.fields), default=8)
+    if isinstance(ty, Vec):
+        return elem_bytes(ty.elem)
+    if isinstance(ty, DictType):
+        return elem_bytes(ty.val)
+    if isinstance(ty, Scalar):
+        return int(np.dtype(ty.np_dtype).itemsize)
+    return 8
+
+
 def merge_identity(op: str, ty: Scalar):
     """Identity element of a commutative merge op, as a python scalar."""
     if op == "+":

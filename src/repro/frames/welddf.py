@@ -111,9 +111,11 @@ class DataFrame:
                     collect_stats: Optional[dict] = None) -> dict:
         """dict[key -> sum(val)] via a dictmerger; evaluation point.
 
-        ``kernelize=True`` routes the group-by onto the segment-reduce
-        Pallas kernel when the key column is int-typed and the capacity
-        fits the kernel's VMEM tile (see ``repro.core.kernelplan``)."""
+        Under the default ``kernelize="auto"`` the group-by routes onto
+        the segment-reduce Pallas kernel when the key column is
+        int-typed, the capacity fits the kernel's VMEM tile, and the
+        roofline cost gate favors it (see ``repro.core.kernelplan``);
+        ``"always"``/True forces the route, ``"off"``/False disables."""
         kcol, vcol = self.columns[key], self.columns[val]
         if self.eager:
             k, v = kcol._eager, vcol._eager

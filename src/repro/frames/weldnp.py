@@ -71,9 +71,12 @@ class ndarray:
     def evaluate(self, kernelize=None, kernel_impl=None, **kw):
         """Force evaluation of the accumulated workflow as one program.
 
-        ``kernelize=True`` routes matched fused loops through the Pallas
-        kernel library (``repro.core.kernelplan``); ``kernel_impl``
-        selects ref / interpret / pallas for those kernel calls.
+        ``kernelize`` selects the planner mode — the default ``"auto"``
+        routes matched fused loops through the Pallas kernel library
+        whenever the roofline cost model favors them, ``"always"``/True
+        forces every match, ``"off"``/False bypasses the planner
+        (``repro.core.kernelplan``); ``kernel_impl`` selects
+        ref / interpret / pallas for the routed kernel calls.
         """
         if self.is_eager:
             return self._eager

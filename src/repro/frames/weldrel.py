@@ -48,8 +48,11 @@ class Query:
             kernelize=None, kernel_impl=None,
             collect_stats: Optional[dict] = None):
         """exprs: name -> (value column expression, op).  Returns dict of
-        scalars; single fused pass over the data.  ``kernelize=True``
-        routes the fused filter+reduce onto the Pallas kernel library."""
+        scalars; single fused pass over the data.  Under the default
+        ``kernelize="auto"`` the fused filter+reduce routes onto the
+        Pallas kernel library when the cost gate favors it — all
+        aggregates share one multi-output kernel launch; ``"always"``/
+        True forces the route, ``"off"``/False disables it."""
         if self.table.eager:
             out = {}
             m = self.pred._eager if self.pred is not None else None

@@ -10,7 +10,9 @@ conjunctions: keep = all(lo_k <= col_k < hi_k).
 
 Block size: 8×1024 f32 = 32 KiB per column tile — several columns fit VMEM
 (~16 MiB) with room for double buffering; the lane dim (1024) is a multiple
-of the 128-wide VPU registers.
+of the 128-wide VPU registers.  ``BLOCK`` is the default; the planner's
+autotuner sweeps ``BLOCK_CANDIDATES`` per (kernel, dtype, size-bucket)
+and bakes the winner into the plan.
 """
 from __future__ import annotations
 
@@ -21,6 +23,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 BLOCK = 8 * 1024
+#: autotune grid — all 1024-lane multiples so every candidate stays
+#: VPU-register aligned; small end bounds padding waste on short columns.
+BLOCK_CANDIDATES = (1024, 8 * 1024, 32 * 1024)
 
 
 def _kernel(x_ref, pred_ref, o_ref):
@@ -60,6 +65,52 @@ def filter_reduce_sum(x: jax.Array, pred: jax.Array, *,
         interpret=interpret,
     )(x, pred)
     return out[0, 0]
+
+
+def _kernel_multi(vals_ref, pred_ref, o_ref):
+    """Multi-aggregate form: A value rows share ONE predicate mask and
+    one grid pass — the struct-of-mergers (weldrel ``agg``) case fused
+    into a single launch instead of one kernel call per aggregate."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    vals = vals_ref[...]                      # (A, B)
+    keep = pred_ref[...]                      # (B,)
+    contrib = jnp.sum(
+        jnp.where(keep[None, :], vals, jnp.zeros_like(vals)), axis=1
+    )
+    o_ref[...] += contrib[None, :]
+
+
+def filter_reduce_sum_multi(vals: jax.Array, pred: jax.Array, *,
+                            block: int = BLOCK,
+                            interpret: bool = True) -> jax.Array:
+    """Row-wise predicated sums: vals (A, n), pred (n,) -> (A,) where
+    out[a] = sum(vals[a][pred]).  One pass; the predicate and the column
+    tiles are loaded once for all A aggregates."""
+    a, n = vals.shape
+    if n == 0:
+        return jnp.zeros((a,), vals.dtype)
+    npad = (block - n % block) % block
+    if npad:
+        vals = jnp.pad(vals, ((0, 0), (0, npad)))
+        pred = jnp.pad(pred, (0, npad))
+    grid = (vals.shape[1] // block,)
+    out = pl.pallas_call(
+        _kernel_multi,
+        out_shape=jax.ShapeDtypeStruct((1, a), vals.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((a, block), lambda i: (0, i)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, a), lambda i: (0, 0)),
+        interpret=interpret,
+    )(vals, pred)
+    return out[0]
 
 
 def _kernel_fused_pred(cols_ref, lo_ref, hi_ref, val_ref, o_ref):

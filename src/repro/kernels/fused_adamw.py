@@ -19,6 +19,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 BLOCK = 16 * 1024
+#: autotune grid — 4 arrays in flight per block, so the top end (64 KiB
+#: lanes = 1 MiB f32 in-flight) still leaves VMEM double-buffer headroom.
+BLOCK_CANDIDATES = (4 * 1024, 16 * 1024, 64 * 1024)
 
 
 def _kernel(p_ref, g_ref, m_ref, v_ref, lr_ref, t_ref,

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 BLOCK = 8 * 1024
+#: autotune grid (matches filter_reduce: these kernels share tile math).
+BLOCK_CANDIDATES = (1024, 8 * 1024, 32 * 1024)
 
 
 def map_elementwise(fn: Callable, arrays: Sequence[jax.Array], *,

@@ -7,6 +7,13 @@
 Default on this CPU container is "ref"; on TPU the launcher flips the
 default to "pallas".  Resolution happens OUTSIDE jit so flipping the
 default always takes effect (impl is a static argument of the inner jit).
+
+Block sizes are tunable: every entry takes an optional block override
+(``block=``, or ``bm``/``bn``/``bk`` for the matmul) resolved to the
+kernel module's default when omitted.  The kernel planner's autotuner
+(``repro.core.kernelplan.autotune``) sweeps each module's
+``*_CANDIDATES`` grid and passes the per-(dtype, size-bucket) winner
+through these knobs; the ref oracle ignores them by construction.
 """
 from __future__ import annotations
 
@@ -40,100 +47,127 @@ def _resolve(impl: Optional[str]) -> str:
 # -- filter+reduce -------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("impl",))
-def _frs(x, pred, impl):
+@functools.partial(jax.jit, static_argnames=("impl", "block"))
+def _frs(x, pred, impl, block):
     if impl == "ref":
         return _ref.filter_reduce_sum(x, pred)
-    return _fr.filter_reduce_sum(x, pred, interpret=(impl == "interpret"))
+    return _fr.filter_reduce_sum(x, pred, block=block,
+                                 interpret=(impl == "interpret"))
 
 
-def filter_reduce_sum(x, pred, impl: Optional[Impl] = None):
-    return _frs(x, pred, impl=_resolve(impl))
+def filter_reduce_sum(x, pred, impl: Optional[Impl] = None,
+                      block: Optional[int] = None):
+    return _frs(x, pred, impl=_resolve(impl), block=block or _fr.BLOCK)
 
 
-@functools.partial(jax.jit, static_argnames=("impl",))
-def _frq6(cols, lo, hi, val, impl):
+@functools.partial(jax.jit, static_argnames=("impl", "block"))
+def _frsm(vals, pred, impl, block):
+    if impl == "ref":
+        return _ref.filter_reduce_sum_multi(vals, pred)
+    return _fr.filter_reduce_sum_multi(vals, pred, block=block,
+                                       interpret=(impl == "interpret"))
+
+
+def filter_reduce_sum_multi(vals, pred, impl: Optional[Impl] = None,
+                            block: Optional[int] = None):
+    """Predicated row sums: vals (A, n) + pred (n,) -> (A,) in ONE pass
+    (the multi-aggregate fusion of filter_reduce_sum)."""
+    return _frsm(vals, pred, impl=_resolve(impl), block=block or _fr.BLOCK)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block"))
+def _frq6(cols, lo, hi, val, impl, block):
     if impl == "ref":
         return _ref.filter_reduce_q6(cols, lo, hi, val)
-    return _fr.filter_reduce_q6(cols, lo, hi, val,
+    return _fr.filter_reduce_q6(cols, lo, hi, val, block=block,
                                 interpret=(impl == "interpret"))
 
 
-def filter_reduce_q6(cols, lo, hi, val, impl: Optional[Impl] = None):
-    return _frq6(cols, lo, hi, val, impl=_resolve(impl))
+def filter_reduce_q6(cols, lo, hi, val, impl: Optional[Impl] = None,
+                     block: Optional[int] = None):
+    return _frq6(cols, lo, hi, val, impl=_resolve(impl),
+                 block=block or _fr.BLOCK)
 
 
 # -- segment reduce -------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("num_segments", "impl"))
-def _ss(seg_ids, vals, num_segments, impl):
+@functools.partial(jax.jit, static_argnames=("num_segments", "impl", "block"))
+def _ss(seg_ids, vals, num_segments, impl, block):
     if impl == "ref":
         return _ref.segment_sum(seg_ids, vals, num_segments)
-    return _sr.segment_sum(seg_ids, vals, num_segments,
+    return _sr.segment_sum(seg_ids, vals, num_segments, block=block,
                            interpret=(impl == "interpret"))
 
 
 def segment_sum(seg_ids, vals, num_segments: int,
-                impl: Optional[Impl] = None):
+                impl: Optional[Impl] = None, block: Optional[int] = None):
     impl = _resolve(impl)
     if num_segments > _sr.MAX_K:
         impl = "ref"
-    return _ss(seg_ids, vals, num_segments=num_segments, impl=impl)
+    return _ss(seg_ids, vals, num_segments=num_segments, impl=impl,
+               block=block or _sr.BLOCK_N)
 
 
-@functools.partial(jax.jit, static_argnames=("num_segments", "impl"))
-def _ssv(seg_ids, vals, num_segments, impl):
+@functools.partial(jax.jit, static_argnames=("num_segments", "impl", "block"))
+def _ssv(seg_ids, vals, num_segments, impl, block):
     if impl == "ref":
         return _ref.segment_sum_vectors(seg_ids, vals, num_segments)
-    return _sr.segment_sum_vectors(seg_ids, vals, num_segments,
+    return _sr.segment_sum_vectors(seg_ids, vals, num_segments, block=block,
                                    interpret=(impl == "interpret"))
 
 
 def segment_sum_vectors(seg_ids, vals, num_segments: int,
-                        impl: Optional[Impl] = None):
+                        impl: Optional[Impl] = None,
+                        block: Optional[int] = None):
     impl = _resolve(impl)
     if num_segments > _sr.MAX_K:
         impl = "ref"
-    return _ssv(seg_ids, vals, num_segments=num_segments, impl=impl)
+    return _ssv(seg_ids, vals, num_segments=num_segments, impl=impl,
+                block=block or 256)
 
 
 # -- fused adamw ----------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("b1", "b2", "eps", "wd", "impl"))
-def _adamw(p, g, m, v, lr, step, b1, b2, eps, wd, impl):
+@functools.partial(jax.jit,
+                   static_argnames=("b1", "b2", "eps", "wd", "impl", "block"))
+def _adamw(p, g, m, v, lr, step, b1, b2, eps, wd, impl, block):
     kw = dict(b1=b1, b2=b2, eps=eps, wd=wd)
     if impl == "ref":
         return _ref.adamw_update(p, g, m, v, lr, step, **kw)
-    return _aw.adamw_update(p, g, m, v, lr, step,
+    return _aw.adamw_update(p, g, m, v, lr, step, block=block,
                             interpret=(impl == "interpret"), **kw)
 
 
 def adamw_update(p, g, m, v, lr, step, b1=0.9, b2=0.999, eps=1e-8, wd=0.01,
-                 impl: Optional[Impl] = None):
+                 impl: Optional[Impl] = None, block: Optional[int] = None):
     return _adamw(p, g, m, v, lr, step, b1=b1, b2=b2, eps=eps, wd=wd,
-                  impl=_resolve(impl))
+                  impl=_resolve(impl), block=block or _aw.BLOCK)
 
 
 # -- tiled matmul -----------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("impl",))
-def _mm(a, b, impl):
+@functools.partial(jax.jit, static_argnames=("impl", "bm", "bn", "bk"))
+def _mm(a, b, impl, bm, bn, bk):
     if impl == "ref":
         return _ref.tiled_matmul(a, b)
-    return _tm.tiled_matmul(a, b, interpret=(impl == "interpret"))
+    return _tm.tiled_matmul(a, b, bm=bm, bn=bn, bk=bk,
+                            interpret=(impl == "interpret"))
 
 
-def matmul(a, b, impl: Optional[Impl] = None):
-    return _mm(a, b, impl=_resolve(impl))
+def matmul(a, b, impl: Optional[Impl] = None, bm: Optional[int] = None,
+           bn: Optional[int] = None, bk: Optional[int] = None):
+    return _mm(a, b, impl=_resolve(impl), bm=bm or 256, bn=bn or 256,
+               bk=bk or 512)
 
 
 # -- fused elementwise map chain --------------------------------------------------
 
 
-def map_elementwise(fn, arrays, impl: Optional[Impl] = None):
+def map_elementwise(fn, arrays, impl: Optional[Impl] = None,
+                    block: Optional[int] = None):
     """Apply a staged elementwise body to 1-D columns in one fused pass.
 
     ``fn`` is a jnp-traceable callable (built by the kernel planner from
@@ -143,7 +177,8 @@ def map_elementwise(fn, arrays, impl: Optional[Impl] = None):
     impl = _resolve(impl)
     if impl == "ref":
         return _ref.map_elementwise(fn, arrays)
-    return _mc.map_elementwise(fn, arrays, interpret=(impl == "interpret"))
+    return _mc.map_elementwise(fn, arrays, block=block or _mc.BLOCK,
+                               interpret=(impl == "interpret"))
 
 
 # -- attention --------------------------------------------------------------------

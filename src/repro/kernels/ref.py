@@ -15,6 +15,12 @@ def filter_reduce_sum(x, pred):
     return jnp.sum(jnp.where(pred, x, jnp.zeros_like(x)))
 
 
+def filter_reduce_sum_multi(vals, pred):
+    """vals (A, n), pred (n,) -> (A,) predicated row sums."""
+    return jnp.sum(jnp.where(pred[None, :], vals, jnp.zeros_like(vals)),
+                   axis=1)
+
+
 def filter_reduce_q6(cols, lo, hi, val):
     keep = jnp.all((cols >= lo[:, None]) & (cols < hi[:, None]), axis=0)
     return jnp.sum(jnp.where(keep, val, jnp.zeros_like(val)))

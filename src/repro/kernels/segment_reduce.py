@@ -25,6 +25,10 @@ from jax.experimental import pallas as pl
 
 BLOCK_N = 512
 MAX_K = 4096
+#: autotune grid for the row-block dim: MXU-aligned multiples of 128.
+#: Small blocks shrink the per-step one-hot tile (B × K) when K is large;
+#: big blocks amortize grid steps when K is small.
+BLOCK_CANDIDATES = (128, 256, 512, 1024)
 
 
 def _kernel(seg_ref, val_ref, o_ref, *, k: int):

@@ -21,6 +21,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+#: autotune grids per tile dim — MXU-aligned (multiples of 128); the
+#: planner's autotuner sweeps the cross product and bakes the winner.
+BM_CANDIDATES = (128, 256)
+BN_CANDIDATES = (128, 256)
+BK_CANDIDATES = (256, 512)
+
+
 def _kernel(a_ref, b_ref, o_ref):
     k = pl.program_id(2)
 

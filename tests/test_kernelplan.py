@@ -279,13 +279,22 @@ def test_float_key_groupby_falls_back():
     assert st["kernelize.matched"] == 0
 
 
-def test_kernelize_false_is_default_and_identical():
-    """No knob -> no planning; stats carry no kernelize keys."""
+def test_default_is_auto_and_off_disables_planning():
+    """No knob -> cost-gated "auto" planning (stats carry the decision
+    log); kernelize=False/"off" bypasses the planner entirely."""
+    assert kp.DEFAULT_KERNELIZE == "auto"
     obj, want = _q6_like_obj()
     st: dict = {}
     r = Evaluate(obj, collect_stats=st)
-    assert not any(k.startswith("kernelize") for k in st)
+    assert st["kernelplan"]["mode"] == "auto"
+    assert st["kernelplan"]["costs"]  # every candidate was priced
     np.testing.assert_allclose(r.value, want, rtol=1e-10)
+    st_off: dict = {}
+    r0 = Evaluate(obj, kernelize="off", collect_stats=st_off)
+    assert not any(k.startswith("kernel") for k in st_off)
+    np.testing.assert_allclose(r0.value, want, rtol=1e-10)
+    with pytest.raises(ValueError):
+        Evaluate(obj, kernelize="sometimes")
 
 
 # ---------------------------------------------------------------------------
@@ -367,3 +376,247 @@ def test_registry_describes_all_kernels():
             "matmul", "matvec", "map_elementwise"} <= names
     text = kp.describe()
     assert "repro.kernels.ops" in text
+
+
+# ---------------------------------------------------------------------------
+# cost gate (mode="auto"): tiny inputs reject, large dense inputs route,
+# oversized vecmerger scatter rejects
+# ---------------------------------------------------------------------------
+
+
+def test_cost_gate_rejects_tiny_input():
+    """Padding + launch overhead dominate a tiny reduce: the gate must
+    keep the jnp lowering (and still compute the right answer)."""
+    obj, want = _q6_like_obj(256)
+    st: dict = {}
+    r = Evaluate(obj, kernelize="auto", collect_stats=st)
+    assert st["kernelize.matched"] == 0
+    assert st["kernelplan"]["rejected"].get("filter_reduce_sum", 0) == 1
+    (entry,) = st["kernelplan"]["costs"]
+    assert entry["routed"] is False
+    assert entry["kernel_us"] > entry["jnp_us"]  # the losing estimate
+    np.testing.assert_allclose(r.value, want, rtol=1e-10)
+
+
+def test_cost_gate_routes_large_dense_input():
+    obj, want = _q6_like_obj(500_000)
+    st: dict = {}
+    r = Evaluate(obj, kernelize="auto", collect_stats=st)
+    assert st["kernelize.filter_reduce_sum"] == 1
+    assert st["kernelplan"]["routed"] == {"filter_reduce_sum": 1}
+    np.testing.assert_allclose(r.value, want, rtol=1e-8)
+
+
+def test_cost_gate_rejects_large_key_vecmerger():
+    """K beyond the VMEM tile bound degrades the kernel route to the
+    same scatter the jnp lowering does — auto must not route it."""
+    n, k = 100_000, 50_000
+    idxs = rng.randint(0, k, n).astype(np.int64)
+    vals = rng.rand(n)
+    base = np.zeros(k)
+    io, vo, bo = (NewWeldObject(a, None) for a in (idxs, vals, base))
+    expr = M.scatter_add(_ident(bo), _ident(io), _ident(vo))
+    obj = NewWeldObject([bo, io, vo], expr)
+    st: dict = {}
+    r = np.asarray(Evaluate(obj, kernelize="auto", collect_stats=st).value)
+    assert st["kernelize.matched"] == 0
+    assert st["kernelplan"]["rejected"].get("vecmerger_segment_sum", 0) == 1
+    want = base.copy()
+    np.add.at(want, idxs, vals)
+    np.testing.assert_allclose(r, want, rtol=1e-10)
+
+
+def test_cost_gate_unknown_size_is_conservative():
+    """A match whose iter length is not statically known cannot be
+    priced — auto must fall back to jnp rather than gamble."""
+    from repro.core.kernelplan import cost
+
+    spec = kp.get("filter_reduce_sum")
+    est = cost.estimate(spec, {"kernel": "filter_reduce_sum", "n": None})
+    assert est.routed is False
+    assert "unknown" in est.why
+
+
+# ---------------------------------------------------------------------------
+# autotune: cache hit / invalidate / fingerprint-keyed compile cache
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def tuner(tmp_path, monkeypatch):
+    from repro.core.kernelplan import autotune
+
+    monkeypatch.setenv(autotune.ENV_CACHE,
+                       str(tmp_path / "autotune.json"))
+    autotune.clear_cache(disk=False)
+    yield autotune
+    autotune.clear_cache(disk=False)
+
+
+def test_autotune_times_grid_then_hits_cache(tuner, monkeypatch):
+    spec = kp.get("filter_reduce_sum")
+    meta = {"n": 2000, "dtype": np.float64}
+    timed = []
+    real = tuner._time_candidate
+    monkeypatch.setattr(tuner, "_time_candidate",
+                        lambda go: timed.append(1) or real(go))
+    params, cached = tuner.tune(spec, meta, impl="interpret")
+    assert not cached
+    assert params["block"] in spec.tune_space["block"]
+    assert len(timed) == len(spec.tune_space["block"])
+    import json, os
+    assert os.path.exists(tuner.cache_path())
+    disk = json.load(open(tuner.cache_path()))
+    assert any(k.startswith("filter_reduce_sum|float64|") for k in disk)
+    # same size-bucket: cache hit, no re-timing
+    timed.clear()
+    params2, cached2 = tuner.tune(spec, {"n": 1800, "dtype": np.float64},
+                                  impl="interpret")
+    assert cached2 and params2 == params and not timed
+
+
+def test_autotune_invalidate_and_fingerprint(tuner):
+    spec = kp.get("filter_reduce_sum")
+    f0 = tuner.fingerprint()
+    tuner.tune(spec, {"n": 1500, "dtype": np.float64}, impl="interpret")
+    f1 = tuner.fingerprint()
+    assert f1 != f0  # new tuning must change the compile-cache key
+    assert tuner.invalidate("filter_reduce_sum") == 1
+    assert tuner.lookup("filter_reduce_sum", np.float64, 1500,
+                        "interpret") is None
+    assert tuner.fingerprint() != f1
+
+
+def test_autotune_ref_impl_uses_defaults_without_cache(tuner):
+    """The jnp oracle ignores block sizes: no timing, no cache writes."""
+    spec = kp.get("filter_reduce_sum")
+    params, cached = tuner.tune(spec, {"n": 4096, "dtype": np.float64},
+                                impl="ref")
+    assert params == spec.tune_defaults and not cached
+    assert tuner.lookup("filter_reduce_sum", np.float64, 4096, "ref") is None
+
+
+def test_tuned_plan_prints_block_shape():
+    """pretty() surfaces the chosen block on KernelCall nodes."""
+    from repro.core.kernelplan import autotune
+    from repro.core.pretty import pretty
+
+    obj, _ = _q6_like_obj(1024)
+    prog = build_program(obj)
+    shapes = {k: tuple(np.asarray(v[2]).shape) for k, v in prog.inputs.items()}
+    opt = optimize(prog.expr, stats={}, input_shapes=shapes)
+    planned = kp.plan_kernels(opt, input_shapes=shapes, stats={})
+    tuned = autotune.tune_plan(planned, impl="ref")
+    text = pretty(tuned)
+    assert "kernel[filter_reduce_sum]@{block=" in text
+
+
+# ---------------------------------------------------------------------------
+# multi-aggregate fusion: one kernel launch for a struct of mergers
+# ---------------------------------------------------------------------------
+
+
+def test_multi_agg_fused_matches_per_aggregate_kernel():
+    from repro.kernels import ops as kops
+
+    vals = rng.rand(3, 5000)
+    pred = rng.rand(5000) > 0.4
+    fused = np.asarray(kops.filter_reduce_sum_multi(
+        vals, pred, impl="interpret"))
+    single = np.array([
+        np.asarray(kops.filter_reduce_sum(vals[a], pred, impl="interpret"))
+        for a in range(3)
+    ])
+    np.testing.assert_allclose(fused, single, rtol=1e-12)
+    np.testing.assert_allclose(fused, vals[:, pred].sum(axis=1), rtol=1e-10)
+
+
+def test_weldrel_multi_agg_is_one_kernel_call_and_parity():
+    """Three aggregates over the same filtered scan: ONE filter_reduce
+    launch (shared predicate mask + column loads), identical results to
+    the jnp lowering and to the forced per-aggregate path."""
+    from repro.frames import weldrel
+
+    n = 4096
+    c = {"a": rng.rand(n), "b": rng.rand(n), "p": rng.rand(n)}
+    t = weldrel.Table(c)
+
+    def agg(kernelize, st=None):
+        q = weldrel.Query(t).filter(t.col("p") < 0.5)
+        return q.agg({"x": (t.col("a"), "+"),
+                      "y": (t.col("b"), "+"),
+                      "z": (t.col("a") * t.col("b"), "+")},
+                     kernelize=kernelize, collect_stats=st)
+
+    st: dict = {}
+    r1 = agg(True, st)
+    assert st["kernelize.filter_reduce_sum"] == 1  # one call, three aggs
+    r0 = agg(False)
+    for key in ("x", "y", "z"):
+        np.testing.assert_allclose(r1[key], r0[key], rtol=1e-10)
+    # forced per-aggregate path (multi=False) agrees with the fused one
+    mask = c["p"] < 0.5
+    np.testing.assert_allclose(r1["x"], c["a"][mask].sum(), rtol=1e-10)
+    np.testing.assert_allclose(r1["z"], (c["a"] * c["b"])[mask].sum(),
+                               rtol=1e-10)
+
+
+def test_multi_agg_forced_per_aggregate_path_parity():
+    """The adapter's multi=False ablation param takes the per-aggregate
+    path and must agree with the fused kernel."""
+    from repro.core.backend.values import WVec
+    from repro.core.kernelplan import registry as kreg
+
+    n = 3000
+    a, b = rng.rand(n), rng.rand(n)
+    i = ir.Ident("i", wt.I64)
+    x = ir.Ident("x", wt.Struct((wt.F64, wt.F64)))
+    fns = [
+        ir.Lambda((i, x), ir.GetField(x, 0)),
+        ir.Lambda((i, x), ir.GetField(x, 1)),
+        ir.Lambda((i, x), ir.BinOp("<", ir.GetField(x, 0),
+                                   ir.Literal(0.5, wt.F64))),
+    ]
+
+    def run(multi):
+        import jax.numpy as jnp
+        from repro.core.backend.jaxgen import Emitter
+
+        em = Emitter({}, None, kernel_impl="ref")
+        staged = [em._stage_elem_fn(f, {}) for f in fns]
+        return kreg.get("filter_reduce_sum").execute(
+            [WVec(jnp.asarray(a)), WVec(jnp.asarray(b))],
+            {"n_aggs": 2, "has_pred": True, "struct": True, "multi": multi},
+            staged, "ref",
+        )
+
+    fused = [np.asarray(v) for v in run(True)]
+    per_agg = [np.asarray(v) for v in run(False)]
+    np.testing.assert_allclose(fused, per_agg, rtol=1e-12)
+    mask = a < 0.5
+    np.testing.assert_allclose(fused[0], a[mask].sum(), rtol=1e-10)
+    np.testing.assert_allclose(fused[1], b[mask].sum(), rtol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# memory accounting: kernel padding/scratch feeds the memory_limit budget
+# ---------------------------------------------------------------------------
+
+
+def test_kernel_footprint_charged_to_memory_limit():
+    from repro.core.backend.jaxgen import WeldMemoryError
+    from repro.core.runtime import clear_cache
+
+    obj, want = _q6_like_obj(8192)
+    clear_cache()
+    # generous limit: fine (and routed)
+    st: dict = {}
+    r = Evaluate(obj, kernelize=True, memory_limit=1 << 22, collect_stats=st)
+    assert st["kernelize.filter_reduce_sum"] == 1
+    np.testing.assert_allclose(r.value, want, rtol=1e-10)
+    # tight limit: the kernelized plan's staging/padding must trip it...
+    with pytest.raises(WeldMemoryError, match="kernel"):
+        Evaluate(obj, kernelize=True, memory_limit=16 * 1024)
+    # ...while the jnp-only lowering (no kernel scratch) stays within
+    r0 = Evaluate(obj, kernelize=False, memory_limit=16 * 1024)
+    np.testing.assert_allclose(r0.value, want, rtol=1e-10)

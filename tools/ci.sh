@@ -25,3 +25,9 @@ if [[ -n "$MARK" ]]; then
 else
     python -m pytest -x -q "$@"
 fi
+
+echo "== kernelplan smoke ablation (cost-gate regression check) =="
+# asserts every auto-routed workload stays within tolerance of the jnp
+# baseline (and that the group-by route still wins), so a cost-gate
+# regression fails CI instead of landing silently
+python -m benchmarks.bench_kernelplan --smoke
