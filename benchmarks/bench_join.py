@@ -1,0 +1,137 @@
+"""Hash-join ablation: generic jnp lowering vs. the two-kernel hash plan.
+
+A fact-to-dimension (m:1) inner join — the Spark SQL workload the paper's
+§6 port leans on — timed three ways over the SAME fused Weld program:
+
+* ``kernelize="off"``   — generic lowering (vectorized binary-search
+  probe + sort-based dictmerger build);
+* ``kernelize="auto"``  — the default: the roofline cost gate decides
+  per matched loop (build -> ``dict_hash_build``, probes ->
+  ``hash_probe``) whether the kernel route can win;
+* ``kernelize="always"``— every match routed unconditionally.
+
+Every configuration is validated against a NumPy oracle before timing,
+and ``--smoke`` (run from tools/ci.sh) asserts the expected routing
+decisions: at the large config BOTH the open-addressing hash build and
+the one-hot probe kernels must be selected under auto, while the tiny
+config must be cost-gated back to the jnp lowering — so a routing
+regression fails CI instead of landing silently.
+
+On this CPU container the kernels resolve to their ref (pure-jnp) paths;
+the TPU target flips ``kops.DEFAULT_IMPL`` to "pallas" and the same plan
+drives the real kernels.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.frames import weldrel
+
+from .common import Suite, time_fn
+
+
+def make_join_data(n: int, k: int, seed: int = 3):
+    rng = np.random.RandomState(seed)
+    lcols = {
+        "key": rng.randint(0, 2 * k, n).astype(np.int64),  # ~50% match
+        "qty": rng.rand(n) * 40.0,
+        "price": rng.rand(n) * 100.0,
+    }
+    rcols = {
+        "key": np.arange(k, dtype=np.int64),
+        "rate": rng.rand(k),
+    }
+    return lcols, rcols
+
+
+def np_join_revenue(lcols, rcols):
+    """Oracle: join on key, revenue = sum(price * rate over matches)."""
+    sel = np.isin(lcols["key"], rcols["key"])
+    idx = np.searchsorted(rcols["key"], lcols["key"][sel])
+    return (lcols["price"][sel] * rcols["rate"][idx]).sum(), int(sel.sum())
+
+
+def weld_join(lcols, rcols, kernelize, collect_stats=None):
+    t = weldrel.Table(lcols, eager=False)
+    r = weldrel.Table(rcols, eager=False)
+    return weldrel.Query(t).join(r, on="key", kernelize=kernelize,
+                                 collect_stats=collect_stats)
+
+
+def _validate(lcols, rcols, kernelize):
+    out = weld_join(lcols, rcols, kernelize)
+    want_rev, want_rows = np_join_revenue(lcols, rcols)
+    price = weldrel._host(out.cols["price"])
+    rate = weldrel._host(out.cols["rate"])
+    assert price.shape[0] == want_rows, (price.shape, want_rows)
+    got = float((price * rate).sum())
+    assert abs(got - want_rev) < 1e-6 * max(abs(want_rev), 1), \
+        (got, want_rev, kernelize)
+
+
+def run(emit, n=1_000_000, smoke=False, tol=0.35):
+    s = Suite(emit)
+    k = max(n // 20, 64)
+
+    # -- large config: both kernels must route under auto ------------------
+    lcols, rcols = make_join_data(n, k)
+    st: dict = {}
+    weld_join(lcols, rcols, "auto", collect_stats=st)
+    if smoke:
+        routed = st.get("kernelplan", {}).get("routed", {})
+        assert st.get("kernelize.dict_hash_build", 0) >= 1, \
+            f"auto must route the hash build at n={n}: {routed}"
+        assert st.get("kernelize.hash_probe", 0) >= 1, \
+            f"auto must route the probe kernels at n={n}: {routed}"
+    for kz in ("off", "auto", "always"):
+        _validate(lcols, rcols, kz)
+
+    us_off = time_fn(lambda: weld_join(lcols, rcols, "off"))
+    s.record("join/inner_jnp", us_off, baseline_of="kj")
+    us_auto = time_fn(lambda: weld_join(lcols, rcols, "auto"))
+    s.record("join/inner_auto", us_auto, vs="kj")
+    us_always = time_fn(lambda: weld_join(lcols, rcols, "always"))
+    s.record("join/inner_kernelized", us_always, vs="kj")
+
+    # -- tiny config: the cost gate must keep the jnp lowering -------------
+    tl, tr = make_join_data(256, 32, seed=5)
+    st2: dict = {}
+    weld_join(tl, tr, "auto", collect_stats=st2)
+    if smoke:
+        assert st2.get("kernelize.matched", 0) == 0, \
+            f"auto must gate the tiny join: {st2.get('kernelplan')}"
+    for kz in ("off", "auto"):
+        _validate(tl, tr, kz)
+    s.record("join/tiny_auto_gated", time_fn(lambda: weld_join(tl, tr, "auto")))
+
+    if smoke and us_auto > us_off * (1.0 + tol):
+        # re-measure once so shared-CI timing jitter can't fail the gate
+        us_auto2 = time_fn(lambda: weld_join(lcols, rcols, "auto"))
+        us_off2 = time_fn(lambda: weld_join(lcols, rcols, "off"))
+        assert min(us_auto / us_off, us_auto2 / us_off2) <= 1.0 + tol, (
+            f"auto-mode join slower than jnp beyond tol={tol}: "
+            f"{us_auto / us_off:.2f}x (re-measured "
+            f"{us_auto2 / us_off2:.2f}x)"
+        )
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced size + routing assertions (CI gate)")
+    ap.add_argument("--n", type=int, default=None)
+    ap.add_argument("--tol", type=float, default=0.35,
+                    help="max allowed auto/jnp slowdown in --smoke")
+    args = ap.parse_args()
+    n = args.n or (300_000 if args.smoke else 1_000_000)
+    print("name,us_per_call,derived")
+    run(lambda line: print(line, flush=True), n=n, smoke=args.smoke,
+        tol=args.tol)
+    if args.smoke:
+        print("# join smoke ablation OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,7 @@ MODULES = [
     ("fig8e_pagerank", "benchmarks.bench_pagerank"),
     ("fig10_ablations", "benchmarks.bench_ablations"),
     ("kernelplan_ablation", "benchmarks.bench_kernelplan"),
+    ("join_hash", "benchmarks.bench_join"),
     ("fig11_vecmerger", "benchmarks.bench_vecmerger"),
     ("compile_times", "benchmarks.bench_compile_times"),
     ("fused_adamw", "benchmarks.bench_fused_adamw"),

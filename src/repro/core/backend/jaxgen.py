@@ -325,10 +325,14 @@ def _masked_reduce(bt: wt.Merger, value, mask):
         "+": jnp.sum, "*": jnp.prod, "min": jnp.min, "max": jnp.max,
     }[bt.op]
 
-    def red(x):
-        return fn(x, axis=0) if hasattr(x, "shape") and x.ndim >= 1 else x
+    def red(x, iv):
+        if hasattr(x, "shape") and x.ndim >= 1:
+            if x.shape[0] == 0:  # empty loop: min/max have no jnp identity
+                return jnp.asarray(iv)
+            return fn(x, axis=0)
+        return x
 
-    return jax.tree_util.tree_map(red, value)
+    return jax.tree_util.tree_map(red, value, ident)
 
 
 def _compact(vals, mask) -> WVec:
@@ -339,10 +343,14 @@ def _compact(vals, mask) -> WVec:
 
 
 def _pack_keys(keys):
-    """Pack a (possibly struct) key into one i64 for sorting.  Int fields
-    are bit-packed; floats are bit-cast (order-preserving for the grouping
+    """Pack a (possibly struct) key into one i64 for sorting.  A single
+    int column keeps its full 64-bit value (injective — join keys must
+    not conflate); multi-field struct keys are bit-packed 32 bits per
+    field and floats are bit-cast (order-preserving for the grouping
     use case — equality only matters, not order)."""
     cols = list(keys) if isinstance(keys, tuple) else [keys]
+    if len(cols) == 1 and not jnp.issubdtype(cols[0].dtype, jnp.floating):
+        return cols[0].astype(jnp.int64)
     packed = jnp.zeros(_lead(keys), dtype=jnp.int64)
     for c in cols:
         if jnp.issubdtype(c.dtype, jnp.floating):
@@ -353,6 +361,40 @@ def _pack_keys(keys):
             c = c.astype(jnp.int64)
         packed = packed * jnp.int64(1 << 32) + (c & jnp.int64(0xFFFFFFFF))
     return packed
+
+
+def _dict_find(d: WDict, key):
+    """Locate `key` (scalar, (n,) column, or tuple thereof for struct
+    keys) in a dict's sorted-front-packed key columns.
+
+    Returns ``(pos, found, scalar)`` — clipped slot positions, a hit
+    mask, and whether the input was a single key.  Works batched, which
+    is what lets a probe loop (hash-join) lower as whole-column gathers
+    instead of a per-element vmap.  Parked slots (>= count) are
+    neutralized to +inf before the binary search: dicts produced under a
+    filter mask carry arbitrary key bits there.  A poisoned dict
+    (negative count, see the kernelized group-by overflow guard) matches
+    nothing."""
+    packed_keys = _pack_keys(d.keys)
+    cap = packed_keys.shape[0]
+    valid_n = jnp.maximum(jnp.asarray(d.count, jnp.int64), 0)
+    big = jnp.iinfo(jnp.int64).max
+    kt = (
+        tuple(jnp.asarray(a) for a in key)
+        if isinstance(key, tuple) else jnp.asarray(key)
+    )
+    lead = kt[0] if isinstance(kt, tuple) else kt
+    scalar = lead.ndim == 0
+    if scalar:
+        kt = jax.tree_util.tree_map(lambda a: a[None], kt)
+    q = _pack_keys(kt)
+    if cap == 0:  # empty build side (static): nothing can match
+        zeros = jnp.zeros(q.shape, jnp.int64)
+        return zeros, zeros.astype(bool), scalar
+    table = jnp.where(jnp.arange(cap) < valid_n, packed_keys, big)
+    pos = jnp.clip(jnp.searchsorted(table, q), 0, cap - 1)
+    found = (table[pos] == q) & (pos < valid_n)
+    return pos, found, scalar
 
 
 _UNARY_JAX = {
@@ -546,28 +588,27 @@ class Emitter:
         if isinstance(coll, WVec):
             return _gather_struct(coll.data, idx)  # gather (vectorized ok)
         if isinstance(coll, WDict):
-            packed = _pack_keys(coll.keys)
-            want = _pack_keys(
-                tuple(jnp.asarray(a)[None] for a in idx)
-                if isinstance(idx, tuple) else jnp.asarray(idx)[None]
-            )
-            hit = (packed == want) & (
-                jnp.arange(packed.shape[0]) < coll.count
-            )
-            pos = jnp.argmax(hit)
-            return _gather_struct(coll.vals, pos)
+            # scalar OR whole-column probe (vectorized loop bodies bind
+            # the key to a column; missing keys yield an arbitrary slot's
+            # value — guard with KeyExists, as the frames do)
+            pos, found, scalar = _dict_find(coll, idx)
+
+            def gather(a):
+                if a.shape[0] == 0:  # empty dict: type-correct zeros
+                    return jnp.zeros(pos.shape, a.dtype)
+                return a[pos]
+
+            out = jax.tree_util.tree_map(gather, coll.vals)
+            if scalar:
+                out = jax.tree_util.tree_map(lambda a: a[0], out)
+            return out
         raise WeldCompileError("lookup on unsupported value")
 
     def _ev_KeyExists(self, x: ir.KeyExists, env, ctx):
         d = self.ev(x.expr, env, ctx)
         k = self.ev(x.key, env, ctx)
-        packed = _pack_keys(d.keys)
-        want = _pack_keys(
-            tuple(jnp.asarray(a)[None] for a in k) if isinstance(k, tuple)
-            else jnp.asarray(k)[None]
-        )
-        hit = (packed == want) & (jnp.arange(packed.shape[0]) < d.count)
-        return jnp.any(hit)
+        pos, found, scalar = _dict_find(d, k)
+        return found[0] if scalar else found
 
     def _ev_CUDF(self, x: ir.CUDF, env, ctx):
         if ctx is not None and any(

@@ -36,6 +36,15 @@ class WVec:
 
     def to_numpy(self):
         """Host-side decode: slice off padding."""
+        if self.count is not None and int(self.count) < 0:
+            # kernel-planned producers flag unrepresentable inputs by
+            # negating the count (same convention as WDict overflow)
+            raise RuntimeError(
+                "kernelized producer flagged this vector as poisoned "
+                "(e.g. a hash-join probe against an overflowed dict); "
+                "rerun with kernelize=False or raise the builder capacity"
+            )
+
         def cut(a):
             a = np.asarray(a)
             return a if self.count is None else a[: int(self.count)]

@@ -31,6 +31,7 @@ from __future__ import annotations
 import json
 import os
 import time
+import warnings
 from typing import Dict, Iterable, Optional, Tuple
 
 import numpy as np
@@ -62,22 +63,41 @@ def cache_path() -> str:
 def _load() -> Dict[str, dict]:
     global _cache
     if _cache is None:
+        path = cache_path()
         try:
-            with open(cache_path()) as f:
+            with open(path) as f:
                 _cache = json.load(f)
-        except (OSError, ValueError):
+            if not isinstance(_cache, dict):
+                raise ValueError("cache root is not an object")
+        except OSError:
+            _cache = {}  # no cache yet: normal first run
+        except ValueError:
+            # corrupt/truncated JSON (e.g. a crashed writer before the
+            # save became atomic) must not break the compile — start
+            # empty and re-tune; the next _save overwrites the bad file
+            warnings.warn(
+                f"autotune cache {path} is corrupt; ignoring it and "
+                "re-tuning from scratch",
+                RuntimeWarning, stacklevel=2,
+            )
             _cache = {}
     return _cache
 
 
 def _save() -> None:
     path = cache_path()
+    tmp = f"{path}.{os.getpid()}.tmp"
     try:
         os.makedirs(os.path.dirname(path), exist_ok=True)
-        with open(path, "w") as f:
+        with open(tmp, "w") as f:
             json.dump(_cache, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)  # atomic: readers never see a partial file
     except OSError:
-        pass  # tuning still applies in-process; persistence is best-effort
+        try:
+            os.remove(tmp)
+        except OSError:
+            pass
+        # tuning still applies in-process; persistence is best-effort
 
 
 def clear_cache(disk: bool = True) -> None:

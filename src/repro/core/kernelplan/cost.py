@@ -70,6 +70,16 @@ SORT_BYTES_PER_ROW = 24.0
 #: fusion islands; per-op slack on the jnp map-chain estimate.
 MAP_CHAIN_SLACK_PER_OP = 0.10
 
+#: the one-hot segment kernels' VMEM accumulator bound (segment_reduce
+#: MAX_K): keyed accumulation beyond it serves the ref scatter instead.
+SEGMENT_TILE_K = 4096
+
+#: a vectorized binary search (the generic dict-probe lowering) issues
+#: log2(K) dependent random loads per row; each achieves this many
+#: streaming-pass equivalents (gentler than full scatter: the upper tree
+#: levels stay cache/VMEM resident).
+BSEARCH_PENALTY = 2.0
+
 
 @dataclass(frozen=True)
 class CostEstimate:
@@ -179,6 +189,53 @@ def cost_dict_group(meta: dict) -> CostEstimate:
     kernel_s = _roofline_s(k_bytes, k_flops) + 2 * LAUNCH_OVERHEAD_S
     j_bytes = n * SORT_BYTES_PER_ROW * max(log2(max(n, 2)), 1.0)
     jnp_s = _roofline_s(j_bytes, n)
+    return _decide(kernel_s, jnp_s, f"n={n} K={k} pad={np_ - n}")
+
+
+def cost_hash_build(meta: dict) -> CostEstimate:
+    """Open-addressing dict build (hash-to-slot + one-hot accumulation +
+    compaction) vs. the generic sort-based dictmerger lowering.  The
+    serial insert chain is random-access bound; the sort pays
+    n*log2(n) passes — the kernel wins once n clears the launch and
+    probe-chain overheads."""
+    n, k = meta.get("n"), meta.get("k")
+    if not n or not k:
+        return REJECT_UNKNOWN
+    e = meta.get("elem_bytes", 8)
+    nv = max(meta.get("n_vals", 1), 1)
+    block = meta.get("block", 256)
+    np_ = _pad(n, block)
+    # serial slot probes (key + slot traffic, random access) + table
+    # init/sort + per-column staged values through the segment kernels
+    k_bytes = np_ * (8 + 4) * SCATTER_PENALTY + 4 * k * 8 + n * nv * e
+    if k <= SEGMENT_TILE_K:
+        k_flops = 2.0 * np_ * k * nv  # one-hot MXU accumulation
+    else:
+        k_flops = float(n)  # kops serves the ref scatter instead
+        k_bytes += n * nv * e * SCATTER_PENALTY
+    kernel_s = _roofline_s(k_bytes, k_flops) + 2 * LAUNCH_OVERHEAD_S
+    j_bytes = n * SORT_BYTES_PER_ROW * max(log2(max(n, 2)), 1.0)
+    jnp_s = _roofline_s(j_bytes, n)
+    return _decide(kernel_s, jnp_s, f"n={n} K={k} vals={nv} pad={np_ - n}")
+
+
+def cost_hash_probe(meta: dict) -> CostEstimate:
+    """One-hot MXU membership probe vs. the generic vectorized binary
+    search: the kernel streams the query block against a VMEM key tile
+    (n*K compares), the jnp lowering pays log2(K) dependent random
+    loads per row."""
+    n, k = meta.get("n"), meta.get("k")
+    if not n or not k:
+        return REJECT_UNKNOWN
+    e = meta.get("elem_bytes", 8)
+    block = meta.get("block", 512)
+    np_ = _pad(n, block)
+    k_bytes = np_ * (8 + 4 + 1 + e) + k * 8
+    k_flops = 1.0 * np_ * k
+    kernel_s = _roofline_s(k_bytes, k_flops) + LAUNCH_OVERHEAD_S
+    lgk = max(log2(max(k, 2)), 1.0)
+    j_bytes = n * 8 * lgk * BSEARCH_PENALTY + n * e
+    jnp_s = _roofline_s(j_bytes, n * lgk)
     return _decide(kernel_s, jnp_s, f"n={n} K={k} pad={np_ - n}")
 
 

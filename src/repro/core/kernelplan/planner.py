@@ -73,11 +73,16 @@ def _is_ident(e: ir.Expr, name: str) -> bool:
     return isinstance(e, ir.Ident) and e.name == name
 
 
+#: kernels whose vector result is padded (count-carrying), NOT dense.
+_PADDED_RESULT_KERNELS = frozenset({"hash_probe"})
+
+
 def _dense_expr(e: ir.Expr, dense: Shapes) -> bool:
     if isinstance(e, ir.Ident):
         return e.name in dense
     if isinstance(e, ir.KernelCall):
-        return isinstance(e.ret_ty, wt.Vec)
+        return (isinstance(e.ret_ty, wt.Vec)
+                and e.kernel not in _PADDED_RESULT_KERNELS)
     return False
 
 
@@ -331,6 +336,167 @@ def _match_dict_group(loop: ir.For, dense: Shapes) -> Optional[ir.KernelCall]:
     )
 
 
+def _match_hash_build(loop: ir.For, dense: Shapes) -> Optional[ir.KernelCall]:
+    """Dictmerger build via the open-addressing hash route: int keys of
+    ANY value (no dense [0, capacity) requirement), scalar or
+    struct-of-scalars values.  Matched for probed dicts (hash-join build
+    side) and as the fallback when the dense segment route declines."""
+    spec = reg.available("dict_hash_build")
+    if spec is None:
+        return None
+    nb = loop.builder
+    if not (
+        isinstance(nb, ir.NewBuilder)
+        and isinstance(nb.ty, wt.DictMerger)
+        and nb.ty.op == "+"
+    ):
+        return None
+    kt, vt = nb.ty.key, nb.ty.val
+    if not (isinstance(kt, wt.Scalar) and kt.is_int):
+        return None
+    val_tys = vt.fields if isinstance(vt, wt.Struct) else (vt,)
+    if not all(_scalar_kind_ok(t, spec) for t in val_tys):
+        return None
+    if not isinstance(nb.arg, ir.Literal):
+        return None  # capacity must be a static literal
+    cap = int(nb.arg.value)
+    if spec.max_segments is not None and cap > spec.max_segments:
+        return None
+    b, i, x = loop.func.params
+    body = loop.func.body
+    cond: Optional[ir.Expr] = None
+    if (
+        isinstance(body, ir.If)
+        and isinstance(body.on_true, ir.Merge)
+        and _is_ident(body.on_false, b.name)
+    ):
+        cond, body = body.cond, body.on_true
+    if not (isinstance(body, ir.Merge) and _is_ident(body.builder, b.name)):
+        return None
+    key_e, val_e = _destructure_pair(body.value)
+    struct_val = isinstance(vt, wt.Struct)
+    if struct_val:
+        if not (isinstance(val_e, ir.MakeStruct)
+                and len(val_e.items) == len(val_tys)):
+            return None
+        val_exprs = list(val_e.items)
+    else:
+        val_exprs = [val_e]
+    per_elem = {i.name, x.name}
+    for e2 in [key_e] + val_exprs:
+        if not _elementwise_ok(e2, {b.name}, per_elem):
+            return None
+    if cond is not None and not _elementwise_ok(cond, {b.name}, per_elem):
+        return None
+    fns = [ir.Lambda((i, x), key_e)]
+    fns += [ir.Lambda((i, x), v) for v in val_exprs]
+    if cond is not None:
+        fns.append(ir.Lambda((i, x), cond))
+    return ir.KernelCall(
+        kernel=spec.name,
+        args=tuple(it.data for it in loop.iters),
+        ret_ty=wt.DictType(kt, vt),
+        params=(("capacity", cap), ("key_np", str(kt.np_dtype.__name__)),
+                ("n_vals", len(val_exprs)), ("struct_val", struct_val),
+                ("has_pred", cond is not None)),
+        fns=tuple(fns),
+    )
+
+
+def _split_probe_cond(cond: ir.Expr, dname_ok) -> Optional[Tuple[
+        ir.KeyExists, Optional[ir.Expr]]]:
+    """Split a probe loop's condition into (KeyExists(dict, k), pred?).
+    Accepts `keyexists(d, k)` or a single `&&` with the keyexists on
+    either side (the shape weldrel's filtered join emits)."""
+    if isinstance(cond, ir.KeyExists):
+        return (cond, None) if dname_ok(cond.expr) else None
+    if isinstance(cond, ir.BinOp) and cond.op == "&&":
+        for ke, pred in ((cond.left, cond.right), (cond.right, cond.left)):
+            if isinstance(ke, ir.KeyExists) and dname_ok(ke.expr):
+                return ke, pred
+    return None
+
+
+def _match_hash_probe(loop: ir.For, dense: Shapes) -> Optional[ir.KernelCall]:
+    """Gather-style dict probe: filter rows to key matches and emit
+    either a looked-up value (right/build column) or an elementwise
+    expression over the probe row (left column).
+
+        result(for(V.., vecbuilder,
+                   (b,i,x) => if([p &&] keyexists(d, k),
+                              merge(b, lookup(d,k)[.j] | f(x)), b)))
+
+    The dict is a let-bound value (kernelized or generic — both arrive
+    as a WDict at execution time)."""
+    spec = reg.available("hash_probe")
+    if spec is None:
+        return None
+    nb = loop.builder
+    if not (
+        isinstance(nb, ir.NewBuilder)
+        and isinstance(nb.ty, wt.VecBuilder)
+        and _scalar_kind_ok(nb.ty.elem, spec)
+    ):
+        return None
+    b, i, x = loop.func.params
+    body = loop.func.body
+    if not (
+        isinstance(body, ir.If)
+        and isinstance(body.on_true, ir.Merge)
+        and _is_ident(body.on_true.builder, b.name)
+        and _is_ident(body.on_false, b.name)
+    ):
+        return None
+
+    def dname_ok(e: ir.Expr) -> bool:
+        return isinstance(e, ir.Ident) and isinstance(e.ty, wt.DictType)
+
+    split = _split_probe_cond(body.cond, dname_ok)
+    if split is None:
+        return None
+    ke, pred = split
+    d_id = ke.expr
+    key_e = ke.key
+    kt = d_id.ty.key
+    if not (isinstance(kt, wt.Scalar) and kt.is_int):
+        return None
+    per_elem = {i.name, x.name}
+    banned = {b.name, d_id.name}
+    if not _elementwise_ok(key_e, banned, per_elem):
+        return None
+    if pred is not None and not _elementwise_ok(pred, banned, per_elem):
+        return None
+
+    val = body.on_true.value
+    field = -1
+    gather = False
+    if isinstance(val, ir.GetField) and isinstance(val.expr, ir.Lookup):
+        lk, field = val.expr, val.index
+        gather = True
+    elif isinstance(val, ir.Lookup):
+        lk = val
+        gather = True
+    if gather:
+        if not (_is_ident(lk.expr, d_id.name)
+                and ir.canon_key(lk.index) == ir.canon_key(key_e)):
+            return None
+        fns = [ir.Lambda((i, x), key_e)]
+    else:
+        if not _elementwise_ok(val, banned, per_elem):
+            return None
+        fns = [ir.Lambda((i, x), key_e), ir.Lambda((i, x), val)]
+    if pred is not None:
+        fns.append(ir.Lambda((i, x), pred))
+    return ir.KernelCall(
+        kernel=spec.name,
+        args=(d_id,) + tuple(it.data for it in loop.iters),
+        ret_ty=wt.Vec(nb.ty.elem),
+        params=(("gather", gather), ("field", field),
+                ("has_pred", pred is not None)),
+        fns=tuple(fns),
+    )
+
+
 def _match_map_chain(loop: ir.For, dense: Shapes) -> Optional[ir.KernelCall]:
     spec = reg.available("map_elementwise")
     if spec is None:
@@ -364,7 +530,8 @@ def _match_map_chain(loop: ir.For, dense: Shapes) -> Optional[ir.KernelCall]:
     )
 
 
-def _match_loop(e: ir.Result, dense: Shapes) -> Optional[ir.KernelCall]:
+def _match_loop(e: ir.Result, dense: Shapes,
+                probed: bool = False) -> Optional[ir.KernelCall]:
     loop = e.builder
     if not isinstance(loop, ir.For) or not loop.iters:
         return None
@@ -379,9 +546,16 @@ def _match_loop(e: ir.Result, dense: Shapes) -> Optional[ir.KernelCall]:
         if isinstance(nb.ty, wt.VecMerger):
             return _match_vecmerger(loop, dense)
         if isinstance(nb.ty, wt.DictMerger):
-            return _match_dict_group(loop, dense)
+            if probed:
+                # a probed dict (join build side) must preserve exact
+                # keys: only the hash route is sound, never the dense
+                # [0, capacity) segment route
+                return _match_hash_build(loop, dense)
+            return (_match_dict_group(loop, dense)
+                    or _match_hash_build(loop, dense))
         if isinstance(nb.ty, wt.VecBuilder):
-            return _match_map_chain(loop, dense)
+            return (_match_map_chain(loop, dense)
+                    or _match_hash_probe(loop, dense))
     if isinstance(nb, ir.MakeStruct):
         return _match_filter_reduce(loop, dense)
     return None
@@ -460,7 +634,8 @@ def _min_block(spec: reg.KernelSpec, key: str) -> Optional[int]:
     return min(cands) if cands else None
 
 
-def _call_meta(kc: ir.KernelCall, dense: Shapes) -> dict:
+def _call_meta(kc: ir.KernelCall, dense: Shapes,
+               dict_caps: Optional[Dict[str, int]] = None) -> dict:
     """Static description of a matched call for cost.py / autotune.py."""
     spec = reg.available(kc.kernel)
     params = dict(kc.params)
@@ -485,6 +660,21 @@ def _call_meta(kc: ir.KernelCall, dense: Shapes) -> dict:
             (v for v in (_len_of(a, dense) for a in kc.args) if v), None
         )
         meta["k"] = params.get("capacity")
+        meta["elem_bytes"] = _elem_bytes(kc.ret_ty)
+    elif kc.kernel == "dict_hash_build":
+        meta["n"] = next(
+            (v for v in (_len_of(a, dense) for a in kc.args) if v), None
+        )
+        meta["k"] = params.get("capacity")
+        meta["n_vals"] = params.get("n_vals", 1)
+        meta["elem_bytes"] = _elem_bytes(kc.ret_ty)
+    elif kc.kernel == "hash_probe":
+        meta["n"] = next(
+            (v for v in (_len_of(a, dense) for a in kc.args[1:]) if v), None
+        )
+        d = kc.args[0]
+        meta["k"] = (dict_caps or {}).get(
+            d.name if isinstance(d, ir.Ident) else "")
         meta["elem_bytes"] = _elem_bytes(kc.ret_ty)
     elif kc.kernel in ("matmul", "matvec"):
         a = _shape_of(kc.args[0], dense)
@@ -549,9 +739,21 @@ def plan_kernels(
         k: tuple(v) if v is not None else None
         for k, v in (input_shapes or {}).items()
     }
+    #: let-bound dict values (kernelized or generic) -> static capacity,
+    #: which prices and autotunes the probe side of a hash join.
+    dict_caps: Dict[str, int] = {}
 
     def consider(kc: ir.KernelCall, orig: ir.Expr) -> ir.Expr:
-        meta = _call_meta(kc, dense)
+        meta = _call_meta(kc, dense, dict_caps)
+        if kc.kernel == "hash_probe":
+            # the one-hot tile is block x capacity: an unknown or
+            # oversized dict cannot take the kernel even under "always"
+            spec = reg.available(kc.kernel)
+            k = meta.get("k")
+            if k is None or (spec is not None
+                             and spec.max_segments is not None
+                             and k > spec.max_segments):
+                return orig
         if mode == "auto":
             est = _cost.estimate(reg.get(kc.kernel), meta)
             kplan["costs"].append({"kernel": kc.kernel, **est.as_stats()})
@@ -582,13 +784,32 @@ def plan_kernels(
             fns=kc.fns,
         )
 
+    def rec_let_value(v: ir.Expr, probed: bool) -> ir.Expr:
+        """Plan a let-bound value.  A dict build whose result is probed
+        downstream (Lookup/KeyExists — the hash-join build side) may
+        ONLY take the hash route: the dense segment route would poison
+        sparse keys the generic lowering handles fine."""
+        if probed and isinstance(v, ir.Result) \
+                and isinstance(v.builder, ir.For) \
+                and isinstance(v.builder.builder, ir.NewBuilder) \
+                and isinstance(v.builder.builder.ty, wt.DictMerger):
+            v2 = v.map_children(rec)  # plan nested subtrees only
+            kc = _match_loop(v2, dense, probed=True)
+            if kc is not None:
+                return consider(kc, v2)
+            return v2
+        return rec(v)
+
     def rec(x: ir.Expr) -> ir.Expr:
         if isinstance(x, ir.Lambda):
             return x  # loop bodies are off-limits
         if isinstance(x, ir.Let):
-            v = rec(x.value)
+            v = rec_let_value(x.value, _probed_as_dict(x.name, x.body))
             if _value_dense(v, dense):
                 dense[x.name] = _shape_of(v, dense)
+            cap = _dict_cap_of(v)
+            if cap is not None:
+                dict_caps[x.name] = cap
             return ir.Let(x.name, v, rec(x.body))
         x = x.map_children(rec)
         if isinstance(x, ir.Result):
@@ -602,3 +823,25 @@ def plan_kernels(
         return x
 
     return rec(e)
+
+
+def _probed_as_dict(name: str, body: ir.Expr) -> bool:
+    """Does `body` consume `name` through dict probes (Lookup/KeyExists)?"""
+    return any(
+        isinstance(n, (ir.Lookup, ir.KeyExists)) and _is_ident(n.expr, name)
+        for n in ir.walk(body)
+    )
+
+
+def _dict_cap_of(v: ir.Expr) -> Optional[int]:
+    """Static capacity of a let-bound dict value, kernelized or not."""
+    if isinstance(v, ir.KernelCall) and v.kernel in (
+            "dict_group_sum", "dict_hash_build"):
+        cap = dict(v.params).get("capacity")
+        return int(cap) if cap is not None else None
+    if isinstance(v, ir.Result) and isinstance(v.builder, ir.For):
+        nb = v.builder.builder
+        if isinstance(nb, ir.NewBuilder) and isinstance(nb.ty, wt.DictMerger) \
+                and isinstance(nb.arg, ir.Literal):
+            return int(nb.arg.value)
+    return None

@@ -36,10 +36,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...kernels import filter_reduce as _fr
+from ...kernels import hash_probe as _hp
+from ...kernels import hash_table as _ht
 from ...kernels import map_chain as _mc
 from ...kernels import ops as kops
 from ...kernels import segment_reduce as _sr
 from ...kernels import tiled_matmul as _tm
+from ..backend.jaxgen import _pack_keys
 from ..backend.values import WDict, WVec
 from . import cost as _cost
 
@@ -265,6 +268,113 @@ def _exec_dict_group_sum(args, params, fns, impl):
     return WDict(keys_out, vals_out, count)
 
 
+def _exec_dict_hash_build(args, params, fns, impl):
+    """Dictmerger build with arbitrary (sparse) int keys: open-addressing
+    hash-to-slot kernel, then per-column segment accumulation over the
+    slot ids, then sort-based compaction into the backend's
+    sorted-front-packed WDict layout.
+
+    Key space is the same packed-i64 space the generic lowering compares
+    in (jaxgen ``_pack_keys``), so probing a hash-built dict and a
+    generic dict is indistinguishable.  Overflow (more distinct keys than
+    the builder capacity, or a key colliding with the reserved EMPTY
+    sentinel) poisons the result with the same negative-count convention
+    as the dense group-by route."""
+    arrays = [_dense_data(a, "hash build") for a in args]
+    n = arrays[0].shape[0]
+    idx = jnp.arange(n, dtype=jnp.int64)
+    elem = _elem_of(arrays)
+    cap = int(params["capacity"])
+    nv = int(params.get("n_vals", 1))
+    block = params.get("block")
+    keys_raw = _as_col(fns[0](idx, elem), n).astype(jnp.int64)
+    vals = [_as_col(fns[1 + j](idx, elem), n) for j in range(nv)]
+    if params.get("has_pred"):
+        mask = _as_col(fns[1 + nv](idx, elem), n).astype(bool)
+    else:
+        mask = jnp.ones((n,), dtype=bool)
+    packed = _pack_keys(keys_raw)
+    sentinel_clash = jnp.any(mask & (packed == _ht.EMPTY))
+    pk = jnp.where(mask, packed, _ht.EMPTY)
+    ctab = _ht.table_size(cap)
+    slots, table, used = kops.hash_to_slot(pk, ctab, impl=impl, block=block)
+    overflow = (used > cap) | sentinel_clash
+    # table slot -> compact position in ascending packed order (matches
+    # the generic keyed finalize, so lookups/decodes are layout-identical)
+    big = jnp.iinfo(jnp.int64).max
+    tsort = jnp.where(table == _ht.EMPTY, big, table)
+    order = jnp.argsort(tsort)
+    rank = jnp.zeros((ctab,), jnp.int32).at[order].set(
+        jnp.arange(ctab, dtype=jnp.int32))
+    cslots = jnp.where(slots < ctab, rank[jnp.clip(slots, 0, ctab - 1)],
+                       jnp.int32(cap))
+    cslots = jnp.where(cslots < cap, cslots, jnp.int32(cap))  # parked/overflow
+    # recover raw output keys (packing may have dropped high bits)
+    key_np = np.dtype(params.get("key_np", "int64"))
+    keys_src = jnp.where(mask, keys_raw, jnp.iinfo(jnp.int64).min)
+    keys_out = jax.ops.segment_max(keys_src, cslots, num_segments=cap)
+    outs = []
+    for v in vals:
+        vm = jnp.where(mask, v, jnp.zeros((), v.dtype))
+        outs.append(kops.segment_sum(cslots, vm, num_segments=cap,
+                                     impl=impl))
+    count = jnp.minimum(used.astype(jnp.int64), cap)
+    count = jnp.where(overflow, -count - 1, count)
+    keys_out = keys_out.astype(key_np)
+    keys_out = jnp.where(overflow, jnp.full_like(keys_out, -1), keys_out)
+    poisoned = []
+    for v in outs:
+        if jnp.issubdtype(v.dtype, jnp.floating):
+            v = jnp.where(overflow, jnp.full_like(v, jnp.nan), v)
+        poisoned.append(v)
+    vals_out = tuple(poisoned) if params.get("struct_val") else poisoned[0]
+    return WDict(keys_out, vals_out, count)
+
+
+def _exec_hash_probe(args, params, fns, impl):
+    """Probe a dict with per-row keys; keep matching rows (front-packed)
+    and emit either the looked-up value column (``gather``) or a staged
+    elementwise expression over the probe row.  The positional probe
+    kernel serves every value dtype — the gather itself is a plain jnp
+    indexing outside the kernel."""
+    d = args[0]
+    if not isinstance(d, WDict):
+        raise KernelPlanError("hash_probe: expected a dict value")
+    arrays = [_dense_data(a, "hash probe") for a in args[1:]]
+    n = arrays[0].shape[0]
+    idx = jnp.arange(n, dtype=jnp.int64)
+    elem = _elem_of(arrays)
+    keys_q = _pack_keys(_as_col(fns[0](idx, elem), n).astype(jnp.int64))
+    packed_t = _pack_keys(d.keys)
+    cap = packed_t.shape[0]
+    cnt = jnp.maximum(jnp.asarray(d.count, jnp.int64), 0)
+    if cap == 0:
+        pos = jnp.zeros((n,), jnp.int32)
+        found = jnp.zeros((n,), dtype=bool)
+    else:
+        big = jnp.iinfo(jnp.int64).max
+        neut = jnp.where(jnp.arange(cap) < cnt, packed_t, big)
+        pos, found = kops.dict_probe(neut, cnt, keys_q, impl=impl,
+                                     block=params.get("block"))
+    gather = bool(params.get("gather"))
+    if params.get("has_pred"):
+        mask = _as_col(fns[1 if gather else 2](idx, elem), n).astype(bool)
+        found = found & mask
+    if gather:
+        field = int(params.get("field", -1))
+        vcol = d.vals[field] if isinstance(d.vals, tuple) else d.vals
+        if cap == 0 or vcol.shape[0] == 0:
+            out = jnp.zeros((n,), vcol.dtype)
+        else:
+            out = vcol[jnp.clip(pos, 0, vcol.shape[0] - 1)]
+    else:
+        out = _as_col(fns[1](idx, elem), n)
+    order = jnp.argsort(~found, stable=True)  # front-pack kept rows
+    count = jnp.where(jnp.asarray(d.count, jnp.int64) < 0,
+                      jnp.int64(-1), found.sum().astype(jnp.int64))
+    return WVec(out[order], count=count)
+
+
 def _tiles(params) -> dict:
     return {k: params.get(k) for k in ("bm", "bn", "bk")}
 
@@ -333,6 +443,29 @@ def _fp_dict_group(arg_shapes, itemsize, params):
     return (n + pad) * (4 + 2 * itemsize + 1) + cap * (3 * itemsize + 8)
 
 
+def _fp_hash_build(arg_shapes, itemsize, params):
+    n = arg_shapes[0][0] if arg_shapes and arg_shapes[0] else 0
+    cap = int(params.get("capacity", 0))
+    ctab = _ht.table_size(cap) if cap else 16
+    pad = _pad_of(n, params.get("block") or _ht.BLOCK_N)
+    nv = int(params.get("n_vals", 1))
+    # staged packed keys + slots + per-column staged values, the VMEM
+    # table + rank permutation, and the compacted key/value columns
+    return ((n + pad) * (8 + 4 + nv * itemsize)
+            + ctab * (8 + 8) + cap * (nv * itemsize + 8))
+
+
+def _fp_hash_probe(arg_shapes, itemsize, params):
+    n = arg_shapes[1][0] if len(arg_shapes) > 1 and arg_shapes[1] else 0
+    block = params.get("block") or _hp.BLOCK_N
+    pad = _pad_of(n, block)
+    cap = int(params.get("k", 0))
+    # staged packed queries + pos/found columns + the compacted output,
+    # plus the neutralized key table and the block x cap one-hot tile
+    return ((n + pad) * (8 + 4 + 1 + itemsize) + n * itemsize
+            + cap * 8 + block * cap * 5)
+
+
 def _fp_matmul(arg_shapes, itemsize, params):
     if len(arg_shapes) < 2 or not arg_shapes[0] or not arg_shapes[1]:
         return 0
@@ -393,6 +526,35 @@ def _bench_dict_group(meta, params, impl):
         jax.block_until_ready(kops.segment_sum_vectors(
             seg, vals, num_segments=min(k, _sr.MAX_K), impl=impl,
             block=params.get("block")))
+
+    return go
+
+
+def _bench_hash_build(meta, params, impl):
+    # the insert chain is serial: cap the synthetic size so first-touch
+    # tuning stays cheap (relative block ordering stabilizes well below
+    # real workload sizes)
+    n = min(int(meta["n"]), 8192)
+    k = max(int(meta.get("k") or 256), 1)
+    keys = (jnp.arange(n, dtype=jnp.int64) % k) * 7 + 3
+    ctab = _ht.table_size(k)
+
+    def go():
+        jax.block_until_ready(kops.hash_to_slot(
+            keys, ctab, impl=impl, block=params.get("block")))
+
+    return go
+
+
+def _bench_hash_probe(meta, params, impl):
+    n = int(meta["n"])
+    k = max(int(meta.get("k") or 256), 1)
+    table = jnp.arange(k, dtype=jnp.int64) * 3
+    queries = (jnp.arange(n, dtype=jnp.int64) % (2 * k)) * 3  # ~50% hits
+
+    def go():
+        jax.block_until_ready(kops.dict_probe(
+            table, k, queries, impl=impl, block=params.get("block")))
 
     return go
 
@@ -476,6 +638,41 @@ register(KernelSpec(
     tune_defaults={"block": 256},
     make_bench=_bench_dict_group,
     footprint=_fp_dict_group,
+))
+
+register(KernelSpec(
+    name="dict_hash_build",
+    entry="repro.kernels.ops:hash_to_slot",
+    pattern="dict_hash_build",
+    builder="dictmerger[+]",
+    elem_kinds=("f32", "f64", "i32", "i64"),
+    description="open-addressing hash build for sparse/non-dense int "
+                "keys (hash-join build side; also the group-by fallback "
+                "beyond the dense segment route's capacity)",
+    max_segments=_ht.MAX_CAP,
+    execute=_exec_dict_hash_build,
+    cost=_cost.cost_hash_build,
+    tune_space={"block": _ht.BLOCK_CANDIDATES},
+    tune_defaults={"block": _ht.BLOCK_N},
+    make_bench=_bench_hash_build,
+    footprint=_fp_hash_build,
+))
+
+register(KernelSpec(
+    name="hash_probe",
+    entry="repro.kernels.ops:dict_probe",
+    pattern="hash_probe",
+    builder="vecbuilder",
+    elem_kinds=("f32", "f64", "i32", "i64"),
+    description="one-hot MXU dict probe: filter rows to key matches and "
+                "gather build-side values (hash-join probe side)",
+    max_segments=_ht.MAX_CAP,
+    execute=_exec_hash_probe,
+    cost=_cost.cost_hash_probe,
+    tune_space={"block": _hp.BLOCK_CANDIDATES},
+    tune_defaults={"block": _hp.BLOCK_N},
+    make_bench=_bench_hash_probe,
+    footprint=_fp_hash_probe,
 ))
 
 register(KernelSpec(

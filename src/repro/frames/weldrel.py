@@ -60,9 +60,13 @@ class Query:
                 v = col._eager
                 if m is not None:
                     v = v[m]
+                # empty/fully-filtered input reduces to the merger
+                # identity of the op, matching the lazy path (0 for "+",
+                # 1 for "*", +/-inf-like extremes for min/max)
                 out[name] = {
                     "+": np.sum, "min": np.min, "max": np.max, "*": np.prod,
-                }[op](v) if v.size else 0.0
+                }[op](v) if v.size else wt.merge_identity(
+                    op, wt.dtype_to_weld(v.dtype))
             return out
 
         names = list(exprs)
@@ -132,13 +136,20 @@ class Query:
         fusion) — ``kernelize=True`` is accepted for API symmetry but
         currently always falls back to the generic sort-based path."""
         if self.table.eager:
+            # same contract as the lazy path below: anything but "+"
+            # must fail loudly instead of silently summing
+            ops = {vals[n][1] for n in vals} | {"+"}
+            assert ops == {"+"}, "grouped aggregates support sum/count"
             m = self.pred._eager if self.pred is not None else slice(None)
             karrs = [k._eager[m] for k in keys]
             varrs = [vals[n][0]._eager[m] for n in vals]
             packed = list(zip(*karrs))
             out: dict = {}
             for row_idx, kt in enumerate(packed):
+                # single-key groups use the bare scalar, like the lazy
+                # path's dict decode — not a 1-tuple
                 kt = tuple(x.item() for x in kt)
+                kt = kt[0] if len(kt) == 1 else kt
                 slotv = out.setdefault(kt, [0.0] * len(varrs) + [0])
                 for j, v in enumerate(varrs):
                     slotv[j] += v[row_idx]
@@ -199,6 +210,201 @@ class Query:
         obj = NewWeldObject(deps, ir.Result(loop))
         return Evaluate(obj, kernelize=kernelize,
                         kernel_impl=kernel_impl).value
+
+    # -- hash join ---------------------------------------------------------------
+
+    def join(
+        self,
+        other: "Table",
+        on: str,
+        right_on: Optional[str] = None,
+        how: str = "inner",
+        suffix: str = "_r",
+        capacity: Optional[int] = None,
+        kernelize=None,
+        kernel_impl=None,
+        collect_stats: Optional[dict] = None,
+    ) -> "Table":
+        """Hash-join this query's (filtered) rows against `other` on an
+        equality key; evaluation point returning a new materialized
+        :class:`Table`.
+
+        `other` is the BUILD side and must have unique keys (an m:1 /
+        fact-to-dimension join, pandas ``validate="m:1"``); duplicate or
+        missing keys on the probe side are fine — inner semantics drop
+        unmatched probe rows.  Output columns are every left column plus
+        every right column except the key (``suffix`` disambiguates
+        collisions).
+
+        Lazily the whole join is ONE fused program: a dictmerger build
+        pass over the right side, then per output column a probe loop
+        ``if(keyexists(d, k), merge(b, lookup(d, k) | left_col), b)``.
+        Under ``kernelize`` the planner lowers it as a two-kernel plan —
+        an open-addressing hash build (covering sparse/non-dense int
+        keys) and a one-hot MXU gather probe (``repro.core.kernelplan``).
+        """
+        if how != "inner":
+            raise NotImplementedError(f"join how={how!r} (inner only)")
+        if not isinstance(other, Table):
+            raise TypeError("join build side must be a weldrel.Table")
+        rkey = right_on or on
+        rk_host = np.asarray(_host(other.cols[rkey]))
+        if np.unique(rk_host).size != rk_host.size:
+            raise ValueError(
+                "join requires unique build-side keys (m:1); aggregate "
+                "the right side first"
+            )
+        names_l = list(self.table.cols)
+        names_r = [c for c in other.cols if c != rkey]
+        out_names = names_l + [
+            c + suffix if c in names_l else c for c in names_r
+        ]
+        cap = int(capacity if capacity is not None else max(rk_host.size, 1))
+        if cap < rk_host.size:
+            # an undersized dict truncates (generic) or poisons (kernel)
+            # the build — fail loudly before either can happen
+            raise ValueError(
+                f"join capacity {cap} < {rk_host.size} build-side keys"
+            )
+
+        if self.table.eager:
+            m = (self.pred._eager if self.pred is not None
+                 else np.ones(len(_host(self.table.col(on))), bool))
+            lk = self.table.col(on)._eager
+            if rk_host.size:
+                order = np.argsort(rk_host, kind="stable")
+                rks = rk_host[order]
+                pos = np.clip(np.searchsorted(rks, lk), 0, rks.size - 1)
+                found = rks[pos] == lk
+            else:
+                order = pos = np.zeros(lk.shape[0], dtype=np.int64)
+                found = np.zeros(lk.shape[0], dtype=bool)
+            mask = m & found
+            out = {c: self.table.col(c)._eager[mask] for c in names_l}
+            if names_r:
+                gidx = order[pos[mask]] if rk_host.size else pos[:0]
+                for c, name in zip(names_r, out_names[len(names_l):]):
+                    out[name] = _host(other.cols[c])[gidx]
+            return Table(out, eager=True)
+
+        # -- lazy: one fused program (build + all probes) ----------------------
+        lcols = {c: _as_lazy(self.table.cols[c]) for c in names_l}
+        rcols = {c: _as_lazy(other.cols[c]) for c in [rkey] + names_r}
+        kt = rcols[rkey].weld_elem_ty
+        m = len(names_r)
+
+        # build side: dict[key, {v1..vm}] (or dict[key, v] / dict[key, 1])
+        r_objs = [rcols[rkey].obj] + [rcols[c].obj for c in names_r]
+        r_ids = [ir.Ident(o.obj_id, o.weld_type()) for o in r_objs]
+        b_elem = (
+            wt.Struct(tuple(_ety(k, r_ids) for k in range(len(r_ids))))
+            if len(r_ids) > 1 else _ety(0, r_ids)
+        )
+        vt: wt.WeldType = (
+            wt.Struct(tuple(_ety(k, r_ids) for k in range(1, len(r_ids))))
+            if m > 1 else (_ety(1, r_ids) if m == 1 else wt.I64)
+        )
+        bt = wt.DictMerger(kt, vt, "+")
+        b = ir.Ident(ir.fresh("b"), bt)
+        i = ir.Ident(ir.fresh("i"), wt.I64)
+        x = ir.Ident(ir.fresh("x"), b_elem)
+        kf = ir.GetField(x, 0) if len(r_ids) > 1 else x
+        if m > 1:
+            vf: ir.Expr = ir.MakeStruct(
+                tuple(ir.GetField(x, k) for k in range(1, len(r_ids)))
+            )
+        elif m == 1:
+            vf = ir.GetField(x, 1)
+        else:
+            vf = ir.Literal(1, wt.I64)
+        build = ir.For(
+            tuple(ir.Iter(idn) for idn in r_ids),
+            ir.NewBuilder(bt, arg=ir.Literal(cap, wt.I64)),
+            ir.Lambda((b, i, x), ir.Merge(b, ir.MakeStruct((kf, vf)))),
+        )
+        dict_obj = NewWeldObject(r_objs, ir.Result(build))
+        d_id = ir.Ident(dict_obj.obj_id, dict_obj.weld_type())
+
+        lk_obj = lcols[on].obj
+        pred_obj = self.pred.obj if self.pred is not None else None
+
+        def probe(val_of, elem_ty_of, iters_extra):
+            """One output column: filter left rows to key matches and
+            merge `val_of(x)` — the planner's hash_probe pattern."""
+            ids2 = [ir.Ident(lk_obj.obj_id, lk_obj.weld_type())]
+            ids2 += [ir.Ident(o.obj_id, o.weld_type()) for o in iters_extra]
+            if pred_obj is not None:
+                ids2.append(ir.Ident(pred_obj.obj_id, pred_obj.weld_type()))
+            elem = (
+                wt.Struct(tuple(_ety(k, ids2) for k in range(len(ids2))))
+                if len(ids2) > 1 else _ety(0, ids2)
+            )
+            b2 = ir.Ident(ir.fresh("b"), wt.VecBuilder(elem_ty_of))
+            i2 = ir.Ident(ir.fresh("i"), wt.I64)
+            x2 = ir.Ident(ir.fresh("x"), elem)
+
+            def field(k: int) -> ir.Expr:
+                return ir.GetField(x2, k) if len(ids2) > 1 else x2
+
+            cond: ir.Expr = ir.KeyExists(d_id, field(0))
+            if pred_obj is not None:
+                cond = ir.BinOp("&&", field(len(ids2) - 1), cond)
+            body = ir.If(
+                cond, ir.Merge(b2, val_of(field)), b2
+            )
+            return ir.Result(ir.For(
+                tuple(ir.Iter(idn) for idn in ids2),
+                ir.NewBuilder(b2.ty),
+                ir.Lambda((b2, i2, x2), body),
+            ))
+
+        probes: List[ir.Expr] = []
+        deps: List[WeldObject] = []
+        seen_dep: Dict[str, WeldObject] = {}
+
+        def dep(o: WeldObject) -> None:
+            if o.obj_id not in seen_dep:
+                seen_dep[o.obj_id] = o
+                deps.append(o)
+
+        dep(lk_obj)
+        if pred_obj is not None:
+            dep(pred_obj)
+        dep(dict_obj)
+        for c in names_l:
+            col = lcols[c]
+            if col.obj.obj_id == lk_obj.obj_id:
+                probes.append(probe(
+                    lambda f: f(0), col.weld_elem_ty, []))
+            else:
+                dep(col.obj)
+                probes.append(probe(
+                    lambda f: f(1), col.weld_elem_ty, [col.obj]))
+        for j, c in enumerate(names_r):
+            elem_ty = rcols[c].weld_elem_ty
+            if m > 1:
+                probes.append(probe(
+                    lambda f, j=j: ir.GetField(
+                        ir.Lookup(d_id, f(0)), j),
+                    elem_ty, []))
+            else:
+                probes.append(probe(
+                    lambda f: ir.Lookup(d_id, f(0)), elem_ty, []))
+
+        obj = NewWeldObject(deps, ir.MakeStruct(tuple(probes)))
+        res = Evaluate(obj, kernelize=kernelize, kernel_impl=kernel_impl,
+                       collect_stats=collect_stats)
+        arrays = [np.asarray(v) for v in res.value]
+        return Table(dict(zip(out_names, arrays)), eager=False)
+
+
+def _host(col: weldnp.ndarray) -> np.ndarray:
+    """The numpy buffer behind a table column (eager or lazy)."""
+    return col._eager if col.is_eager else np.asarray(col.obj.data)
+
+
+def _as_lazy(col: weldnp.ndarray) -> weldnp.ndarray:
+    return col if col.obj is not None else weldnp.array(col._eager)
 
 
 def _ety(k: int, ids: List[ir.Expr]) -> wt.Scalar:

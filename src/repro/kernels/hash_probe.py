@@ -1,0 +1,80 @@
+"""Dictionary probe kernel — the gather side of the hash-join plan.
+
+Given a dict in the backend's sorted-front-packed column layout
+(``WDict``: keys ascending for the first ``count`` slots), find each
+query key's slot and whether it exists.  The TPU-native strategy mirrors
+``segment_reduce``: instead of a divergent binary search per lane, each
+query block builds a **one-hot membership matrix** against the whole
+VMEM-resident key tile
+
+    hits[B, C] = (queries[:, None] == table[None, :]) & (iota_C < count)
+
+and reduces it on the VPU — ``found = any(hits, axis=1)``,
+``pos = argmax(hits, axis=1)`` (keys are unique, so at most one lane
+matches).  C is bounded by the dict capacity (<= ``hash_table.MAX_CAP``)
+so the comparison tile fits VMEM alongside the query block.
+
+The value gather itself happens outside the kernel (``vals[pos]``): the
+positions serve any value dtype/struct without specializing the kernel.
+
+Contract (shared with ``ref.dict_probe``): queries and table keys live
+in the packed key space; returns ``(pos, found)`` with ``pos`` int32,
+zeroed where not found.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 512
+#: autotune grid for the query block: the hits tile is block x capacity,
+#: so small blocks keep large-capacity dicts inside VMEM.
+BLOCK_CANDIDATES = (128, 256, 512, 1024)
+
+
+def _kernel(q_ref, keys_ref, cnt_ref, pos_ref, found_ref, *, cap: int):
+    q = q_ref[...]                               # (B,)
+    keys = keys_ref[...]                         # (C,)
+    cnt = cnt_ref[0, 0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (q.shape[0], cap), 1)
+    hits = (q[:, None] == keys[None, :]) & (iota < cnt)
+    found = jnp.any(hits, axis=1)
+    pos = jnp.argmax(hits, axis=1).astype(jnp.int32)
+    found_ref[...] = found
+    pos_ref[...] = jnp.where(found, pos, jnp.int32(0))
+
+
+def dict_probe(table_keys: jax.Array, count, queries: jax.Array, *,
+               block: int = BLOCK_N, interpret: bool = True):
+    """pos/found per query against sorted-front-packed dict keys."""
+    cap = table_keys.shape[0]
+    n = queries.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), jnp.int32), jnp.zeros((0,), bool)
+    npad = (block - n % block) % block
+    if npad:
+        queries = jnp.pad(queries, (0, npad))
+    grid = (queries.shape[0] // block,)
+    cnt = jnp.asarray(count, jnp.int32).reshape(1, 1)
+    pos, found = pl.pallas_call(
+        functools.partial(_kernel, cap=cap),
+        out_shape=(
+            jax.ShapeDtypeStruct((queries.shape[0],), jnp.int32),
+            jax.ShapeDtypeStruct((queries.shape[0],), jnp.bool_),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((cap,), lambda i: (0,)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ),
+        interpret=interpret,
+    )(queries.astype(jnp.int64), table_keys.astype(jnp.int64), cnt)
+    return pos[:n], found[:n]

@@ -1,0 +1,150 @@
+"""Open-addressing hash-to-slot kernel — dictmerger builds with sparse keys.
+
+The dense group-by route (``segment_reduce``) requires int keys in
+``[0, capacity)``; this kernel lifts that restriction.  It assigns every
+input key a *slot* in a VMEM-resident open-addressing table (linear
+probing, Fibonacci hashing), so rows with equal keys share a slot and
+distinct keys get distinct slots.  Downstream value accumulation is then
+an ordinary segment reduction over the slot ids — the existing one-hot
+MXU ``segment_sum`` kernels — followed by a sort-based compaction into
+the backend's sorted-front-packed dict layout.
+
+TPU adaptation: inserts are inherently serial (a later row must observe
+an earlier row's insert), so the kernel walks each row block with a
+``fori_loop`` while the grid streams blocks sequentially — the table
+lives in the output ref and persists across grid steps, exactly like the
+running accumulator in ``filter_reduce``.  The slot id per input row is
+emitted block-wise so the (parallel) segment reduction can consume it.
+
+Slot numbering is implementation-defined: the Pallas kernel yields hash
+positions, the jnp oracle (``ref.hash_to_slot``) yields ascending-key
+compact ids.  Callers must only rely on the slots/table contract below,
+which is what ``kernelplan.registry`` normalizes into a sorted dict.
+
+Contract (shared with ``ref.hash_to_slot``):
+
+* ``keys`` are i64 (packed key space; see jaxgen ``_pack_keys``); rows
+  equal to ``EMPTY`` are padding/masked and get slot ``cap_table``;
+* returns ``(slots, table_keys, used)`` with ``slots[i]`` in
+  ``[0, cap_table]`` (``cap_table`` = parked), ``table_keys[slot]`` the
+  key occupying a slot (``EMPTY`` when free), and ``used`` the number of
+  distinct keys inserted.  A full table drops rows but then
+  ``used == cap_table``, which callers size (``cap_table >= 2*capacity``)
+  so overflow is always detectable as ``used > capacity``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+#: sentinel for "no key": reserved, never a valid packed key in practice
+#: (single-column int keys pack into [0, 2^32); struct keys would need a
+#: full 64-bit collision with INT64_MIN).
+EMPTY = int(np.iinfo(np.int64).min)
+
+#: largest dict capacity the hash route serves; the table itself is
+#: 2*capacity rounded up to a power of two (load factor <= 0.5), so the
+#: VMEM key tile tops out at 2^17 * 8 B = 1 MiB.
+MAX_CAP = 65536
+
+#: Fibonacci multiplicative hashing constant (golden-ratio reciprocal).
+_GOLD = np.uint64(0x9E3779B97F4A7C15)
+
+BLOCK_N = 256
+#: autotune grid for the row block: bigger blocks amortize grid steps,
+#: smaller ones bound the per-step serial insert chain.
+BLOCK_CANDIDATES = (128, 256, 512, 1024)
+
+
+def table_size(capacity: int) -> int:
+    """Power-of-two open-addressing table for `capacity` distinct keys."""
+    c = 16
+    while c < 2 * capacity:
+        c <<= 1
+    return c
+
+
+def _hash0(k, cap_table: int):
+    """Initial probe position: high bits of the Fibonacci product."""
+    lg = int(cap_table).bit_length() - 1
+    ku = k.astype(jnp.uint64) * _GOLD
+    return (ku >> jnp.uint64(64 - lg)).astype(jnp.int32)
+
+
+def _kernel(keys_ref, slots_ref, table_ref, used_ref, *, cap_table: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        table_ref[...] = jnp.full_like(table_ref, EMPTY)
+        used_ref[...] = jnp.zeros_like(used_ref)
+
+    keys = keys_ref[...]
+    block = keys.shape[0]
+    mask = jnp.int32(cap_table - 1)
+
+    def insert(j, used):
+        k = keys[j]
+        valid = k != EMPTY
+        h0 = _hash0(k, cap_table)
+
+        def probe_cond(s):
+            t, slot, done = s
+            return jnp.logical_not(done) & (t < cap_table)
+
+        def probe_body(s):
+            t, slot, done = s
+            cur = pl.load(table_ref, (pl.ds(slot, 1),))[0]
+            hit = (cur == k) | (cur == EMPTY)
+            nxt = jnp.where(hit, slot, (slot + 1) & mask)
+            return t + 1, nxt, hit
+
+        _, slot, done = jax.lax.while_loop(
+            probe_cond, probe_body, (jnp.int32(0), h0, ~valid)
+        )
+        cur = pl.load(table_ref, (pl.ds(slot, 1),))[0]
+        do_store = valid & done & (cur == EMPTY)
+        pl.store(table_ref, (pl.ds(slot, 1),),
+                 jnp.where(do_store, k, cur)[None])
+        final = jnp.where(valid & done, slot, jnp.int32(cap_table))
+        pl.store(slots_ref, (pl.ds(j, 1),), final[None])
+        return used + jnp.where(do_store, jnp.int32(1), jnp.int32(0))
+
+    used = jax.lax.fori_loop(0, block, insert, jnp.int32(0))
+    used_ref[...] += used[None, None]
+
+
+def hash_to_slot(keys: jax.Array, cap_table: int, *, block: int = BLOCK_N,
+                 interpret: bool = True):
+    """Assign an open-addressing slot to every key; see module contract."""
+    assert cap_table & (cap_table - 1) == 0, "table size must be pow2"
+    n = keys.shape[0]
+    if n == 0:
+        return (jnp.zeros((0,), jnp.int32),
+                jnp.full((cap_table,), EMPTY, jnp.int64),
+                jnp.zeros((), jnp.int32))
+    npad = (block - n % block) % block
+    if npad:
+        keys = jnp.pad(keys, (0, npad), constant_values=EMPTY)
+    grid = (keys.shape[0] // block,)
+    slots, table, used = pl.pallas_call(
+        functools.partial(_kernel, cap_table=cap_table),
+        out_shape=(
+            jax.ShapeDtypeStruct((keys.shape[0],), jnp.int32),
+            jax.ShapeDtypeStruct((cap_table,), jnp.int64),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=(
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((cap_table,), lambda i: (0,)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ),
+        interpret=interpret,
+    )(keys.astype(jnp.int64))
+    return slots[:n], table, used[0, 0]

@@ -25,6 +25,8 @@ import jax
 from . import filter_reduce as _fr
 from . import flash_attention as _fa
 from . import fused_adamw as _aw
+from . import hash_probe as _hp
+from . import hash_table as _ht
 from . import map_chain as _mc
 from . import ref as _ref
 from . import segment_reduce as _sr
@@ -125,6 +127,42 @@ def segment_sum_vectors(seg_ids, vals, num_segments: int,
         impl = "ref"
     return _ssv(seg_ids, vals, num_segments=num_segments, impl=impl,
                 block=block or 256)
+
+
+# -- dict build / probe (hash-join route) -----------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cap_table", "impl", "block"))
+def _hts(keys, cap_table, impl, block):
+    if impl == "ref":
+        return _ref.hash_to_slot(keys, cap_table)
+    return _ht.hash_to_slot(keys, cap_table, block=block,
+                            interpret=(impl == "interpret"))
+
+
+def hash_to_slot(keys, cap_table: int, impl: Optional[Impl] = None,
+                 block: Optional[int] = None):
+    """Open-addressing slot assignment for i64 (packed) keys; rows equal
+    to ``hash_table.EMPTY`` park at slot ``cap_table``.  Returns
+    ``(slots, table_keys, used)`` — see kernels/hash_table.py."""
+    return _hts(keys, cap_table=cap_table, impl=_resolve(impl),
+                block=block or _ht.BLOCK_N)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block"))
+def _dp(table_keys, count, queries, impl, block):
+    if impl == "ref":
+        return _ref.dict_probe(table_keys, count, queries)
+    return _hp.dict_probe(table_keys, count, queries, block=block,
+                          interpret=(impl == "interpret"))
+
+
+def dict_probe(table_keys, count, queries, impl: Optional[Impl] = None,
+               block: Optional[int] = None):
+    """(pos, found) per query against a sorted-front-packed dict key
+    column; ``pos`` is zeroed where not found."""
+    return _dp(table_keys, count, queries, impl=_resolve(impl),
+               block=block or _hp.BLOCK_N)
 
 
 # -- fused adamw ----------------------------------------------------------------

@@ -30,6 +30,55 @@ def segment_sum(seg_ids, vals, num_segments):
     return jax.ops.segment_sum(vals, seg_ids, num_segments=num_segments)
 
 
+def hash_to_slot(keys, cap_table):
+    """Sort-based oracle for the open-addressing slot assignment: rows
+    with equal keys share a slot, distinct keys get distinct slots.
+    Slot numbering is ascending-key compact ids (the Pallas kernel uses
+    hash positions instead — only the slots/table CONTRACT is shared,
+    see kernels/hash_table.py)."""
+    from .hash_table import EMPTY
+
+    n = keys.shape[0]
+    if n == 0:
+        return (jnp.zeros((0,), jnp.int32),
+                jnp.full((cap_table,), EMPTY, jnp.int64),
+                jnp.zeros((), jnp.int32))
+    keys = keys.astype(jnp.int64)
+    valid = keys != EMPTY
+    big = jnp.iinfo(jnp.int64).max
+    pk = jnp.where(valid, keys, big)
+    order = jnp.argsort(pk, stable=True)
+    sk = pk[order]
+    sval = valid[order]
+    is_new = jnp.concatenate([sval[:1], (sk[1:] != sk[:-1]) & sval[1:]])
+    seg = jnp.cumsum(is_new.astype(jnp.int32)) - 1
+    seg = jnp.where(sval & (seg < cap_table), seg, cap_table)
+    slots = jnp.zeros((n,), jnp.int32).at[order].set(seg)
+    used = is_new.sum().astype(jnp.int32)
+    table = jnp.full((cap_table,), EMPTY, jnp.int64).at[
+        jnp.where(is_new, seg, cap_table)
+    ].set(jnp.where(is_new, sk, EMPTY), mode="drop")
+    return slots, table, used
+
+
+def dict_probe(table_keys, count, queries):
+    """Binary-search oracle for the one-hot membership probe: table keys
+    are sorted ascending for the first `count` slots (parked slots are
+    neutralized here so a stale tail cannot break the search)."""
+    cap = table_keys.shape[0]
+    n = queries.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), jnp.int32), jnp.zeros((0,), bool)
+    big = jnp.iinfo(jnp.int64).max
+    cnt = jnp.asarray(count, jnp.int32)
+    neut = jnp.where(jnp.arange(cap) < cnt, table_keys.astype(jnp.int64), big)
+    q = queries.astype(jnp.int64)
+    pos = jnp.searchsorted(neut, q).astype(jnp.int32)
+    posc = jnp.clip(pos, 0, cap - 1)
+    found = (neut[posc] == q) & (posc < cnt)
+    return jnp.where(found, posc, jnp.int32(0)), found
+
+
 def segment_sum_vectors(seg_ids, vals, num_segments):
     return jax.ops.segment_sum(vals, seg_ids, num_segments=num_segments)
 

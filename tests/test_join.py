@@ -1,0 +1,406 @@
+"""Hash-join correctness and routing: weldrel.Query.join against a NumPy
+oracle on the eager, lazy-generic, and kernelized paths; kernel-level
+ref/interpret parity for the open-addressing build and the one-hot
+probe; planner routing decisions (probed dicts take the hash route, the
+dense group-by route is untouched, the cost gate rejects tiny inputs)."""
+import numpy as np
+import pytest
+
+from repro.frames import weldrel
+
+rng = np.random.RandomState(13)
+
+
+def np_join(lcols, rcols, on, m=None):
+    """m:1 inner-join oracle; right keys must be unique."""
+    lk, rk = lcols[on], rcols[on]
+    mask = np.ones(lk.shape[0], bool) if m is None else m
+    order = np.argsort(rk, kind="stable")
+    rks = rk[order]
+    if rks.size:
+        pos = np.clip(np.searchsorted(rks, lk), 0, rks.size - 1)
+        found = rks[pos] == lk
+    else:
+        found = np.zeros(lk.shape[0], bool)
+    sel = mask & found
+    out = {c: v[sel] for c, v in lcols.items()}
+    if rks.size:
+        gidx = order[pos[sel]]
+        for c, v in rcols.items():
+            if c != on:
+                out[c] = v[gidx]
+    else:
+        for c, v in rcols.items():
+            if c != on:
+                out[c] = v[:0]
+    return out
+
+
+def _got(table):
+    return {c: np.asarray(weldrel._host(table.cols[c])) for c in table.cols}
+
+
+def _check(table, want):
+    got = _got(table)
+    assert set(got) == set(want)
+    for c in want:
+        np.testing.assert_allclose(got[c], want[c], rtol=1e-12)
+
+
+def _data(n=1500, k=64, key_lo=0, key_hi=100, scale=1):
+    lcols = {"key": (rng.randint(key_lo, key_hi, n) * scale).astype(np.int64),
+             "lv": rng.rand(n)}
+    rcols = {"key": (np.arange(k) * scale).astype(np.int64),
+             "rv": rng.rand(k),
+             "rw": rng.randint(0, 9, k).astype(np.int64)}
+    return lcols, rcols
+
+
+# ---------------------------------------------------------------------------
+# oracle parity on all three execution paths
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["eager", "off", "always", "auto"])
+def test_join_matches_numpy_oracle(mode):
+    lcols, rcols = _data()
+    want = np_join(lcols, rcols, "key")
+    if mode == "eager":
+        t = weldrel.Table(lcols, eager=True)
+        r = weldrel.Table(rcols, eager=True)
+        out = weldrel.Query(t).join(r, on="key")
+    else:
+        t = weldrel.Table(lcols, eager=False)
+        r = weldrel.Table(rcols, eager=False)
+        out = weldrel.Query(t).join(r, on="key", kernelize=mode)
+    _check(out, want)
+
+
+def test_join_kernelized_routes_and_matches():
+    lcols, rcols = _data()
+    t = weldrel.Table(lcols, eager=False)
+    r = weldrel.Table(rcols, eager=False)
+    st: dict = {}
+    out = weldrel.Query(t).join(r, on="key", kernelize="always",
+                                collect_stats=st)
+    assert st["kernelize.dict_hash_build"] == 1
+    assert st["kernelize.hash_probe"] == 4  # key, lv, rv, rw
+    _check(out, np_join(lcols, rcols, "key"))
+
+
+def test_join_with_filter_predicate():
+    lcols, rcols = _data()
+    for eager in (False, True):
+        t = weldrel.Table(lcols, eager=eager)
+        r = weldrel.Table(rcols, eager=eager)
+        q = weldrel.Query(t).filter(t.col("lv") > 0.5)
+        kw = {} if eager else {"kernelize": "always"}
+        out = q.join(r, on="key", **kw)
+        _check(out, np_join(lcols, rcols, "key", m=lcols["lv"] > 0.5))
+
+
+def test_join_sparse_keys_kernelized():
+    """Keys far outside any dense [0, capacity) range: the dense group-by
+    route would poison these — the hash route must handle them."""
+    lcols, rcols = _data(scale=1_000_003)
+    lcols["key"] -= 5  # include negative-ish offsets of the lattice
+    rcols["key"] -= 5
+    t = weldrel.Table(lcols, eager=False)
+    r = weldrel.Table(rcols, eager=False)
+    st: dict = {}
+    out = weldrel.Query(t).join(r, on="key", kernelize="always",
+                                collect_stats=st)
+    assert st["kernelize.dict_hash_build"] == 1
+    _check(out, np_join(lcols, rcols, "key"))
+
+
+def test_join_duplicate_probe_keys_and_misses():
+    lcols = {"key": np.array([3, 3, 3, 99, 5, 3], np.int64),
+             "lv": np.arange(6.0)}
+    rcols = {"key": np.array([5, 3], np.int64), "rv": np.array([0.5, 0.25])}
+    want = np_join(lcols, rcols, "key")
+    for mode in ("eager", "off", "always"):
+        if mode == "eager":
+            out = weldrel.Query(weldrel.Table(lcols, eager=True)).join(
+                weldrel.Table(rcols, eager=True), on="key")
+        else:
+            out = weldrel.Query(weldrel.Table(lcols, eager=False)).join(
+                weldrel.Table(rcols, eager=False), on="key", kernelize=mode)
+        _check(out, want)
+
+
+@pytest.mark.parametrize("which", ["left", "right", "both"])
+def test_join_empty_sides(which):
+    lcols, rcols = _data(n=200, k=16)
+    if which in ("left", "both"):
+        lcols = {c: v[:0] for c, v in lcols.items()}
+    if which in ("right", "both"):
+        rcols = {c: v[:0] for c, v in rcols.items()}
+    want = np_join(lcols, rcols, "key")
+    for mode in ("eager", "off", "always"):
+        if mode == "eager":
+            out = weldrel.Query(weldrel.Table(lcols, eager=True)).join(
+                weldrel.Table(rcols, eager=True), on="key")
+        else:
+            out = weldrel.Query(weldrel.Table(lcols, eager=False)).join(
+                weldrel.Table(rcols, eager=False), on="key", kernelize=mode)
+        got = _got(out)
+        assert all(got[c].size == 0 for c in got)
+        assert set(got) == set(want)
+
+
+@pytest.mark.parametrize("eager", [True, False])
+def test_join_duplicate_build_keys_raise(eager):
+    t = weldrel.Table({"key": np.array([1, 2], np.int64)}, eager=eager)
+    r = weldrel.Table({"key": np.array([7, 7], np.int64),
+                       "rv": np.zeros(2)}, eager=eager)
+    with pytest.raises(ValueError, match="unique build-side keys"):
+        weldrel.Query(t).join(r, on="key")
+
+
+def test_join_suffix_and_right_on():
+    lcols = {"k": np.array([1, 2, 3], np.int64), "v": np.arange(3.0)}
+    rcols = {"rk": np.array([2, 3], np.int64), "v": np.array([9.0, 8.0])}
+    t = weldrel.Table(lcols, eager=False)
+    r = weldrel.Table(rcols, eager=False)
+    out = weldrel.Query(t).join(r, on="k", right_on="rk", kernelize="off")
+    got = _got(out)
+    assert set(got) == {"k", "v", "v_r"}
+    np.testing.assert_array_equal(got["k"], [2, 3])
+    np.testing.assert_allclose(got["v_r"], [9.0, 8.0])
+
+
+def test_join_interpret_impl_parity():
+    lcols, rcols = _data(n=300, k=16)
+    t = weldrel.Table(lcols, eager=False)
+    r = weldrel.Table(rcols, eager=False)
+    a = weldrel.Query(t).join(r, on="key", kernelize="always",
+                              kernel_impl="ref")
+    b = weldrel.Query(t).join(r, on="key", kernelize="always",
+                              kernel_impl="interpret")
+    for c in a.cols:
+        np.testing.assert_allclose(_got(a)[c], _got(b)[c], rtol=1e-12)
+
+
+def test_join_rejects_unsupported_shapes():
+    t = weldrel.Table({"k": np.array([1], np.int64)})
+    r = weldrel.Table({"k": np.array([1], np.int64)})
+    with pytest.raises(NotImplementedError):
+        weldrel.Query(t).join(r, on="k", how="left")
+    with pytest.raises(TypeError):
+        weldrel.Query(t).join(weldrel.Query(r), on="k")
+
+
+def test_join_keys_beyond_32_bits_do_not_conflate():
+    """Single int key columns pack full-width: keys that agree in the
+    low 32 bits (e.g. 1 vs 2^32+1) must not be conflated on any path."""
+    lcols = {"key": np.array([1, 2 ** 32 + 1, 5], np.int64),
+             "lv": np.arange(3.0)}
+    rcols = {"key": np.array([2 ** 32 + 1], np.int64),
+             "rv": np.array([7.0])}
+    want = np_join(lcols, rcols, "key")
+    assert want["key"].tolist() == [2 ** 32 + 1]
+    for mode in ("eager", "off", "always"):
+        if mode == "eager":
+            out = weldrel.Query(weldrel.Table(lcols, eager=True)).join(
+                weldrel.Table(rcols, eager=True), on="key")
+        else:
+            out = weldrel.Query(weldrel.Table(lcols, eager=False)).join(
+                weldrel.Table(rcols, eager=False), on="key", kernelize=mode)
+        _check(out, want)
+
+
+@pytest.mark.parametrize("eager", [True, False])
+def test_join_undersized_capacity_raises(eager):
+    lcols = {"key": np.arange(10, dtype=np.int64)}
+    rcols = {"key": np.arange(8, dtype=np.int64), "rv": rng.rand(8)}
+    t = weldrel.Table(lcols, eager=eager)
+    r = weldrel.Table(rcols, eager=eager)
+    with pytest.raises(ValueError, match="capacity"):
+        weldrel.Query(t).join(r, on="key", capacity=4)
+
+
+# ---------------------------------------------------------------------------
+# routing decisions
+# ---------------------------------------------------------------------------
+
+
+def test_probe_not_routed_beyond_vmem_capacity():
+    """A build side beyond the hash kernels' capacity bound must keep
+    BOTH sides on the generic lowering under kernelize='always' — the
+    probe's one-hot tile cannot exceed its VMEM budget either."""
+    from repro.kernels.hash_table import MAX_CAP
+
+    k = MAX_CAP + 512
+    n = 4096
+    lcols = {"key": rng.randint(0, k, n).astype(np.int64), "lv": rng.rand(n)}
+    rcols = {"key": np.arange(k, dtype=np.int64), "rv": rng.rand(k)}
+    t = weldrel.Table(lcols, eager=False)
+    r = weldrel.Table(rcols, eager=False)
+    st: dict = {}
+    out = weldrel.Query(t).join(r, on="key", kernelize="always",
+                                collect_stats=st)
+    assert st.get("kernelize.dict_hash_build", 0) == 0, st.get("kernelplan")
+    assert st.get("kernelize.hash_probe", 0) == 0, st.get("kernelplan")
+    _check(out, np_join(lcols, rcols, "key"))
+
+
+def test_join_auto_routes_large_and_rejects_tiny():
+    n, k = 300_000, 20_000
+    lcols = {"key": rng.randint(0, 2 * k, n).astype(np.int64),
+             "lv": rng.rand(n)}
+    rcols = {"key": np.arange(k, dtype=np.int64), "rv": rng.rand(k)}
+    t = weldrel.Table(lcols, eager=False)
+    r = weldrel.Table(rcols, eager=False)
+    st: dict = {}
+    out = weldrel.Query(t).join(r, on="key", kernelize="auto",
+                                collect_stats=st)
+    assert st.get("kernelize.dict_hash_build", 0) == 1, st.get("kernelplan")
+    assert st.get("kernelize.hash_probe", 0) >= 1, st.get("kernelplan")
+    _check(out, np_join(lcols, rcols, "key"))
+    # tiny inputs: padding + launch overhead dominate -> gate keeps jnp
+    lcols2, rcols2 = _data(n=100, k=8)
+    st2: dict = {}
+    out2 = weldrel.Query(weldrel.Table(lcols2, eager=False)).join(
+        weldrel.Table(rcols2, eager=False), on="key", kernelize="auto",
+        collect_stats=st2)
+    assert st2["kernelize.matched"] == 0, st2.get("kernelplan")
+    assert st2["kernelplan"]["rejected"].get("hash_probe", 0) >= 1
+    _check(out2, np_join(lcols2, rcols2, "key"))
+
+
+def test_groupby_hash_route_beyond_dense_capacity():
+    """Capacities beyond the dense segment tile (4096) used to fall back
+    to the generic sort path; the hash route now serves them."""
+    from repro.frames import welddf
+
+    n = 50_000
+    key = rng.randint(0, 20_000, n).astype(np.int64)
+    val = rng.rand(n)
+    df = welddf.DataFrame({"k": key, "v": val})
+    st: dict = {}
+    d1 = df.groupby_sum("k", "v", capacity=32768, kernelize=True,
+                        collect_stats=st)
+    assert st["kernelize.dict_hash_build"] == 1
+    d0 = df.groupby_sum("k", "v", capacity=32768, kernelize=False)
+    assert set(d1) == set(d0)
+    for kk in d0:
+        np.testing.assert_allclose(d1[kk], d0[kk], rtol=1e-10)
+
+
+def test_dense_groupby_route_unchanged():
+    """Probing is what selects the hash build; a plain in-range group-by
+    must still take the dense segment route."""
+    from repro.frames import welddf
+
+    key = rng.randint(0, 50, 4096).astype(np.int64)
+    val = rng.rand(4096)
+    df = welddf.DataFrame({"k": key, "v": val})
+    st: dict = {}
+    df.groupby_sum("k", "v", capacity=64, kernelize=True, collect_stats=st)
+    assert st.get("kernelize.dict_group_sum", 0) == 1
+    assert st.get("kernelize.dict_hash_build", 0) == 0
+
+
+def test_hash_build_sparse_keys_decode_correctly():
+    """Sparse keys through the hash route: capacity 4097 skips the dense
+    route (tile bound 4096) and lands on dict_hash_build; the decoded
+    dict must agree with the generic lowering."""
+    from repro.core import ir, macros as M
+    from repro.core.lazy import Evaluate, NewWeldObject
+
+    keys = NewWeldObject(np.arange(100, dtype=np.int64) * 11, None)
+    vals = NewWeldObject(rng.rand(100), None)
+    kid = ir.Ident(keys.obj_id, keys.weld_type())
+    vid = ir.Ident(vals.obj_id, vals.weld_type())
+    d = M.groupby_agg(kid, vid, "+", capacity=4097)
+    obj = NewWeldObject([keys, vals], d)
+    st: dict = {}
+    out = Evaluate(obj, kernelize="always", collect_stats=st)
+    assert st.get("kernelize.dict_hash_build", 0) == 1
+    assert len(out.value) == 100
+    want = Evaluate(obj, kernelize=False).value
+    assert set(out.value) == set(want)
+    for kk in want:
+        np.testing.assert_allclose(out.value[kk], want[kk], rtol=1e-10)
+
+
+def test_hash_build_overflow_raises_on_decode():
+    from repro.core import ir, macros as M
+    from repro.core.lazy import Evaluate, NewWeldObject
+
+    keys = NewWeldObject(np.arange(8000, dtype=np.int64) * 3, None)
+    vals = NewWeldObject(rng.rand(8000), None)
+    kid = ir.Ident(keys.obj_id, keys.weld_type())
+    vid = ir.Ident(vals.obj_id, vals.weld_type())
+    d = M.groupby_agg(kid, vid, "+", capacity=4097)  # 8000 distinct > 4097
+    obj = NewWeldObject([keys, vals], d)
+    with pytest.raises(RuntimeError):
+        Evaluate(obj, kernelize="always")
+
+
+# ---------------------------------------------------------------------------
+# kernel-level parity: ref oracle vs interpreted Pallas kernels
+# ---------------------------------------------------------------------------
+
+
+def test_hash_to_slot_contract_both_impls():
+    from repro.kernels import ops as kops
+    from repro.kernels.hash_table import EMPTY, table_size
+
+    keys = np.concatenate([
+        rng.randint(-50, 50, 300).astype(np.int64) * 999_983,
+        np.array([EMPTY] * 5, np.int64),
+    ])
+    rng.shuffle(keys)
+    C = table_size(128)
+    for impl in ("ref", "interpret"):
+        slots, table, used = map(np.asarray, kops.hash_to_slot(
+            np.asarray(keys), C, impl=impl))
+        valid = keys != EMPTY
+        assert used == np.unique(keys[valid]).size
+        assert (slots[~valid] == C).all()
+        assert (table[slots[valid]] == keys[valid]).all()
+        # distinct keys -> distinct slots
+        uniq = {}
+        for kk, s in zip(keys[valid], slots[valid]):
+            assert uniq.setdefault(kk, s) == s
+        assert len(set(uniq.values())) == len(uniq)
+
+
+def test_dict_probe_parity_both_impls():
+    from repro.kernels import ops as kops
+
+    cap, count = 64, 40
+    table = np.sort(rng.choice(10_000, count, replace=False)).astype(np.int64)
+    table = np.concatenate([table, np.full(cap - count, 77_777, np.int64)])
+    big = np.iinfo(np.int64).max
+    neut = np.where(np.arange(cap) < count, table, big)
+    queries = rng.randint(0, 10_000, 500).astype(np.int64)
+    got = {}
+    for impl in ("ref", "interpret"):
+        pos, found = map(np.asarray, kops.dict_probe(
+            neut, count, queries, impl=impl))
+        got[impl] = (pos, found)
+        want_found = np.isin(queries, table[:count])
+        np.testing.assert_array_equal(found, want_found)
+        np.testing.assert_array_equal(
+            table[pos[found]], queries[found])
+        assert (pos[~found] == 0).all()
+    np.testing.assert_array_equal(got["ref"][0], got["interpret"][0])
+
+
+def test_composed_dict_build_parity_ref_vs_interpret():
+    """The full build pipeline (hash/sort -> segment -> compaction) must
+    produce identical sorted dicts from both slot-assignment impls."""
+    lcols = {"key": rng.randint(0, 40, 400).astype(np.int64),
+             "lv": rng.rand(400)}
+    rcols = {"key": np.arange(40, dtype=np.int64), "rv": rng.rand(40)}
+    t = weldrel.Table(lcols, eager=False)
+    r = weldrel.Table(rcols, eager=False)
+    a = weldrel.Query(t).join(r, on="key", kernelize="always",
+                              kernel_impl="ref")
+    b = weldrel.Query(t).join(r, on="key", kernelize="always",
+                              kernel_impl="interpret")
+    for c in a.cols:
+        np.testing.assert_allclose(_got(a)[c], _got(b)[c], rtol=1e-12)

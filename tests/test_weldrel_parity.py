@@ -1,0 +1,142 @@
+"""Eager <-> lazy parity for weldrel, plus regression tests for the
+eager-path bugs this PR fixes (wrong empty-input agg identities, silent
+op-ignoring group_agg) and the autotune cache robustness fixes."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.frames import weldrel
+
+rng = np.random.RandomState(7)
+
+OPS = ("+", "*", "min", "max")
+
+
+def _tables(cols):
+    return (weldrel.Table(cols, eager=True), weldrel.Table(cols, eager=False))
+
+
+def _agg_all_ops(t, **kw):
+    q = weldrel.Query(t)
+    return q.agg({op: (t.col("v"), op) for op in OPS}, **kw)
+
+
+# ---------------------------------------------------------------------------
+# agg: empty input / fully-filtered input reduce to the merger identity
+# on BOTH paths (the eager path used to return 0.0 for every op)
+# ---------------------------------------------------------------------------
+
+
+def test_agg_empty_input_identities_match():
+    te, tl = _tables({"v": np.zeros(0)})
+    re_ = _agg_all_ops(te)
+    rl = _agg_all_ops(tl, kernelize=False)
+    assert re_["+"] == rl["+"] == 0.0
+    assert re_["*"] == rl["*"] == 1.0
+    assert re_["min"] == rl["min"] == np.finfo(np.float64).max
+    assert re_["max"] == rl["max"] == np.finfo(np.float64).min
+
+
+def test_agg_all_false_predicate_parity():
+    v = rng.rand(64)
+    te, tl = _tables({"v": v})
+    re_ = weldrel.Query(te).filter(te.col("v") > 2.0).agg(
+        {op: (te.col("v"), op) for op in OPS})
+    rl = weldrel.Query(tl).filter(tl.col("v") > 2.0).agg(
+        {op: (tl.col("v"), op) for op in OPS}, kernelize=False)
+    for op in OPS:
+        np.testing.assert_allclose(re_[op], rl[op])
+    assert re_["*"] == 1.0  # not the old hardwired 0.0
+
+
+def test_agg_single_and_multi_column_parity():
+    a, b, p = rng.rand(257), rng.rand(257), rng.rand(257)
+    te, tl = _tables({"a": a, "b": b, "p": p})
+
+    def q(t, **kw):
+        return weldrel.Query(t).filter(t.col("p") < 0.5).agg(
+            {"s": (t.col("a"), "+"),
+             "m": (t.col("b"), "min"),
+             "x": (t.col("a") * t.col("b"), "max"),
+             "pr": (t.col("b"), "*")}, **kw)
+
+    re_ = q(te)
+    rl = q(tl, kernelize=False)
+    rk = q(tl, kernelize=True)
+    for k in re_:
+        np.testing.assert_allclose(re_[k], rl[k], rtol=1e-10)
+        np.testing.assert_allclose(re_[k], rk[k], rtol=1e-10)
+    mask = p < 0.5
+    np.testing.assert_allclose(re_["s"], a[mask].sum(), rtol=1e-10)
+    np.testing.assert_allclose(re_["m"], b[mask].min(), rtol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# group_agg: the eager path must enforce the same "+"-only contract as
+# the lazy path instead of silently summing whatever op was requested
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("eager", [True, False])
+def test_group_agg_non_plus_op_raises(eager):
+    t = weldrel.Table({"k": np.array([1, 1, 2], np.int64),
+                       "v": np.array([1.0, 2.0, 3.0])}, eager=eager)
+    with pytest.raises(AssertionError, match="sum/count"):
+        weldrel.Query(t).group_agg([t.col("k")], {"v": (t.col("v"), "max")})
+
+
+def test_group_agg_sum_parity():
+    k = rng.randint(0, 8, 200).astype(np.int64)
+    v = rng.rand(200)
+    te, tl = _tables({"k": k, "v": v})
+    ge = weldrel.Query(te).group_agg([te.col("k")], {"v": (te.col("v"), "+")})
+    gl = weldrel.Query(tl).group_agg([tl.col("k")], {"v": (tl.col("v"), "+")},
+                                     capacity=64)
+    assert set(ge) == set(gl)
+    for key in ge:
+        np.testing.assert_allclose(ge[key][0], gl[key][0], rtol=1e-10)
+        assert ge[key][1] == gl[key][1]  # implicit count
+
+
+# ---------------------------------------------------------------------------
+# autotune cache: atomic writes, corrupt files tolerated with a warning
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def tuner(tmp_path, monkeypatch):
+    from repro.core.kernelplan import autotune
+
+    monkeypatch.setenv(autotune.ENV_CACHE, str(tmp_path / "autotune.json"))
+    autotune.clear_cache(disk=False)
+    autotune._cache = None
+    yield autotune
+    autotune.clear_cache(disk=False)
+
+
+def test_autotune_corrupt_cache_warns_and_recovers(tuner):
+    with open(tuner.cache_path(), "w") as f:
+        f.write('{"filter_reduce_sum|float64|2048|interp')  # truncated write
+    with pytest.warns(RuntimeWarning, match="corrupt"):
+        assert tuner._load() == {}
+    # tuning proceeds and the next save replaces the bad file atomically
+    from repro.core import kernelplan as kp
+
+    spec = kp.get("filter_reduce_sum")
+    params, cached = tuner.tune(spec, {"n": 1500, "dtype": np.float64},
+                                impl="interpret")
+    assert params["block"] in spec.tune_space["block"] and not cached
+    disk = json.load(open(tuner.cache_path()))
+    assert any(k.startswith("filter_reduce_sum|") for k in disk)
+
+
+def test_autotune_save_is_atomic_no_temp_left(tuner):
+    from repro.core import kernelplan as kp
+
+    spec = kp.get("filter_reduce_sum")
+    tuner.tune(spec, {"n": 1200, "dtype": np.float64}, impl="interpret")
+    d = os.path.dirname(tuner.cache_path())
+    assert not [f for f in os.listdir(d) if f.endswith(".tmp")]
+    json.load(open(tuner.cache_path()))  # valid JSON on disk

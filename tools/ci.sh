@@ -31,3 +31,8 @@ echo "== kernelplan smoke ablation (cost-gate regression check) =="
 # baseline (and that the group-by route still wins), so a cost-gate
 # regression fails CI instead of landing silently
 python -m benchmarks.bench_kernelplan --smoke
+
+echo "== join smoke ablation (hash-build/probe routing check) =="
+# asserts the hash-join build+probe kernels route under auto at the
+# large config and are cost-gated at the tiny one
+python -m benchmarks.bench_join --smoke
