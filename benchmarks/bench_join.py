@@ -1,7 +1,10 @@
 """Hash-join ablation: generic jnp lowering vs. the two-kernel hash plan.
 
-A fact-to-dimension (m:1) inner join — the Spark SQL workload the paper's
-§6 port leans on — timed three ways over the SAME fused Weld program:
+A fact-to-dimension (m:1) join — the Spark SQL workload the paper's
+§6 port leans on — timed three ways over the SAME fused Weld program,
+plus left/anti/multi-key variants that must each take exactly ONE
+horizontally fused probe launch (all output columns share one
+membership kernel):
 
 * ``kernelize="off"``   — generic lowering (vectorized binary-search
   probe + sort-based dictmerger build);
@@ -51,10 +54,11 @@ def np_join_revenue(lcols, rcols):
     return (lcols["price"][sel] * rcols["rate"][idx]).sum(), int(sel.sum())
 
 
-def weld_join(lcols, rcols, kernelize, collect_stats=None):
+def weld_join(lcols, rcols, kernelize, how="inner", on="key",
+              collect_stats=None):
     t = weldrel.Table(lcols, eager=False)
     r = weldrel.Table(rcols, eager=False)
-    return weldrel.Query(t).join(r, on="key", kernelize=kernelize,
+    return weldrel.Query(t).join(r, on=on, how=how, kernelize=kernelize,
                                  collect_stats=collect_stats)
 
 
@@ -81,8 +85,11 @@ def run(emit, n=1_000_000, smoke=False, tol=0.35):
         routed = st.get("kernelplan", {}).get("routed", {})
         assert st.get("kernelize.dict_hash_build", 0) >= 1, \
             f"auto must route the hash build at n={n}: {routed}"
-        assert st.get("kernelize.hash_probe", 0) >= 1, \
-            f"auto must route the probe kernels at n={n}: {routed}"
+        # the 4 output columns (key, qty, price, rate) share ONE
+        # horizontally fused probe launch — N probes would be a
+        # fusion regression
+        assert st.get("kernelize.hash_probe", 0) == 1, \
+            f"auto must route ONE fused probe at n={n}: {routed}"
     for kz in ("off", "auto", "always"):
         _validate(lcols, rcols, kz)
 
@@ -92,6 +99,46 @@ def run(emit, n=1_000_000, smoke=False, tol=0.35):
     s.record("join/inner_auto", us_auto, vs="kj")
     us_always = time_fn(lambda: weld_join(lcols, rcols, "always"))
     s.record("join/inner_kernelized", us_always, vs="kj")
+
+    # -- left / anti / multi-key: one fused probe each, oracle-checked -----
+    sel = np.isin(lcols["key"], rcols["key"])
+    for how, want_rows in (("left", lcols["key"].shape[0]),
+                           ("anti", int((~sel).sum()))):
+        sth: dict = {}
+        out = weld_join(lcols, rcols, "always", how=how, collect_stats=sth)
+        rows = weldrel._host(out.cols["key"]).shape[0]
+        assert rows == want_rows, (how, rows, want_rows)
+        if how == "left":
+            rate = weldrel._host(out.cols["rate"])
+            assert int(np.isnan(rate).sum()) == int((~sel).sum()), how
+        if smoke:
+            assert sth.get("kernelize.hash_probe", 0) == 1, \
+                f"{how} join must take ONE fused probe: {sth.get('kernelplan')}"
+        us_h = time_fn(lambda: weld_join(lcols, rcols, "always", how=how))
+        s.record(f"join/{how}_kernelized", us_h, vs="kj")
+
+    mlcols = {"key": lcols["key"] % 1000, "key2": lcols["key"] % 7,
+              "price": lcols["price"]}
+    mrcols = {"key": np.arange(min(k, 1000), dtype=np.int64) ,
+              "key2": (np.arange(min(k, 1000)) % 7).astype(np.int64),
+              "rate": rcols["rate"][:min(k, 1000)]}
+    stm: dict = {}
+    outm = weld_join(mlcols, mrcols, "always", on=["key", "key2"],
+                     collect_stats=stm)
+    if smoke:
+        assert stm.get("kernelize.dict_hash_build", 0) == 1, \
+            f"multi-key build must route: {stm.get('kernelplan')}"
+        assert stm.get("kernelize.hash_probe", 0) == 1, \
+            f"multi-key join must take ONE fused probe: {stm.get('kernelplan')}"
+    # multi-key oracle: packed tuples
+    lt = set(zip(mrcols["key"].tolist(), mrcols["key2"].tolist()))
+    wantm = sum(1 for a, b in zip(mlcols["key"].tolist(),
+                                  mlcols["key2"].tolist()) if (a, b) in lt)
+    rowsm = weldrel._host(outm.cols["price"]).shape[0]
+    assert rowsm == wantm, (rowsm, wantm)
+    s.record("join/multikey_kernelized",
+             time_fn(lambda: weld_join(mlcols, mrcols, "always",
+                                       on=["key", "key2"])))
 
     # -- tiny config: the cost gate must keep the jnp lowering -------------
     tl, tr = make_join_data(256, 32, seed=5)

@@ -354,6 +354,11 @@ def _pack_keys(keys):
     packed = jnp.zeros(_lead(keys), dtype=jnp.int64)
     for c in cols:
         if jnp.issubdtype(c.dtype, jnp.floating):
+            # normalize -0.0 to +0.0 BEFORE the bitcast: IEEE equality
+            # says they match, the bit patterns do not (mirrored in
+            # weldrel._pack_host — the two packings must stay
+            # byte-identical)
+            c = jnp.where(c == 0, jnp.zeros_like(c), c)
             c = jax.lax.bitcast_convert_type(
                 c.astype(jnp.float32), jnp.int32
             ).astype(jnp.int64)
@@ -589,8 +594,10 @@ class Emitter:
             return _gather_struct(coll.data, idx)  # gather (vectorized ok)
         if isinstance(coll, WDict):
             # scalar OR whole-column probe (vectorized loop bodies bind
-            # the key to a column; missing keys yield an arbitrary slot's
-            # value — guard with KeyExists, as the frames do)
+            # the key to a column).  With a `default` the miss mask from
+            # the SAME find selects the fill — one probe pass, no second
+            # search; without one, missing keys yield an arbitrary slot's
+            # value — guard with KeyExists, as the frames do.
             pos, found, scalar = _dict_find(coll, idx)
 
             def gather(a):
@@ -599,6 +606,9 @@ class Emitter:
                 return a[pos]
 
             out = jax.tree_util.tree_map(gather, coll.vals)
+            if x.default is not None:
+                dflt = self.ev(x.default, env, ctx)
+                out = _select_struct(found, out, dflt)
             if scalar:
                 out = jax.tree_util.tree_map(lambda a: a[0], out)
             return out

@@ -217,7 +217,10 @@ def interpret(e: ir.Expr, env: Dict[str, object] | None = None):
             c = rec(x.expr, env)
             i = rec(x.index, env)
             if isinstance(c, dict):
-                return c[_hashable(i)]
+                k = _hashable(i)
+                if x.default is not None and k not in c:
+                    return rec(x.default, env)
+                return c[k]
             return c[int(i)]
         if isinstance(x, ir.KeyExists):
             return _hashable(rec(x.key, env)) in rec(x.expr, env)

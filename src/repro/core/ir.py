@@ -169,10 +169,16 @@ class Len(Expr):
 
 @dataclass(frozen=True)
 class Lookup(Expr):
-    """vec[i] or dict[k]."""
+    """vec[i] or dict[k].
+
+    Dict lookups may carry a miss ``default``: ``lookup(d, k, v)`` yields
+    the stored value when ``k`` exists and ``v`` otherwise — the
+    single-probe form of ``if(keyexists(d,k), lookup(d,k), v)`` that
+    left joins lower through (one hash probe, no second pass)."""
 
     expr: Expr
     index: Expr
+    default: Optional[Expr] = None
 
 
 @dataclass(frozen=True)
@@ -505,12 +511,20 @@ def typeof(e: Expr, env: Optional[Dict[str, WeldType]] = None) -> WeldType:
             ct = rec(x.expr, env)
             it = rec(x.index, env)
             if isinstance(ct, wt.Vec):
+                if x.default is not None:
+                    raise WeldTypeError("vec lookup takes no default")
                 if not (isinstance(it, wt.Scalar) and it.is_int):
                     raise WeldTypeError("vec lookup index must be int")
                 return ct.elem
             if isinstance(ct, wt.DictType):
                 if it != ct.key:
                     raise WeldTypeError("dict lookup key type mismatch")
+                if x.default is not None:
+                    dt = rec(x.default, env)
+                    if dt != ct.val:
+                        raise WeldTypeError(
+                            f"dict lookup default {dt} != value type {ct.val}"
+                        )
                 return ct.val
             raise WeldTypeError(f"lookup on {ct}")
         if isinstance(x, KeyExists):

@@ -203,11 +203,15 @@ def cost_hash_build(meta: dict) -> CostEstimate:
         return REJECT_UNKNOWN
     e = meta.get("elem_bytes", 8)
     nv = max(meta.get("n_vals", 1), 1)
+    nk = max(meta.get("n_keys", 1), 1)
     block = meta.get("block", 256)
     np_ = _pad(n, block)
     # serial slot probes (key + slot traffic, random access) + table
-    # init/sort + per-column staged values through the segment kernels
-    k_bytes = np_ * (8 + 4) * SCATTER_PENALTY + 4 * k * 8 + n * nv * e
+    # init/sort + per-column staged values through the segment kernels;
+    # multi-column keys stream one extra staged i64 column each beyond
+    # the packed stream already charged
+    k_bytes = (np_ * (8 + 4) * SCATTER_PENALTY + 4 * k * 8 + n * nv * e
+               + n * (nk - 1) * 8)
     if k <= SEGMENT_TILE_K:
         k_flops = 2.0 * np_ * k * nv  # one-hot MXU accumulation
     else:
@@ -216,27 +220,32 @@ def cost_hash_build(meta: dict) -> CostEstimate:
     kernel_s = _roofline_s(k_bytes, k_flops) + 2 * LAUNCH_OVERHEAD_S
     j_bytes = n * SORT_BYTES_PER_ROW * max(log2(max(n, 2)), 1.0)
     jnp_s = _roofline_s(j_bytes, n)
-    return _decide(kernel_s, jnp_s, f"n={n} K={k} vals={nv} pad={np_ - n}")
+    return _decide(kernel_s, jnp_s,
+                   f"n={n} K={k} keys={nk} vals={nv} pad={np_ - n}")
 
 
 def cost_hash_probe(meta: dict) -> CostEstimate:
     """One-hot MXU membership probe vs. the generic vectorized binary
     search: the kernel streams the query block against a VMEM key tile
-    (n*K compares), the jnp lowering pays log2(K) dependent random
-    loads per row."""
+    (n*K compares, ONCE for every output column of a fused probe), the
+    jnp lowering pays log2(K) dependent random loads per row plus a
+    per-column streaming pass."""
     n, k = meta.get("n"), meta.get("k")
     if not n or not k:
         return REJECT_UNKNOWN
+    cols = max(meta.get("cols", 1), 1)
     e = meta.get("elem_bytes", 8)
     block = meta.get("block", 512)
     np_ = _pad(n, block)
-    k_bytes = np_ * (8 + 4 + 1 + e) + k * 8
+    # one membership tile + per-column gather/compaction traffic
+    k_bytes = np_ * (8 + 4 + 1 + cols * e) + k * 8
     k_flops = 1.0 * np_ * k
     kernel_s = _roofline_s(k_bytes, k_flops) + LAUNCH_OVERHEAD_S
     lgk = max(log2(max(k, 2)), 1.0)
-    j_bytes = n * 8 * lgk * BSEARCH_PENALTY + n * e
+    j_bytes = n * 8 * lgk * BSEARCH_PENALTY + n * cols * e
     jnp_s = _roofline_s(j_bytes, n * lgk)
-    return _decide(kernel_s, jnp_s, f"n={n} K={k} pad={np_ - n}")
+    return _decide(kernel_s, jnp_s,
+                   f"n={n} K={k} cols={cols} pad={np_ - n}")
 
 
 def cost_matmul(meta: dict) -> CostEstimate:

@@ -14,6 +14,9 @@ pattern-matches the fused loop shapes the optimizer produces —
   (the tiling pass raises dot loops to these)           → tiled_matmul
 * ``result(for(V.., vecbuilder, merge(b, f(x))))`` with a nontrivial
   elementwise body                                      → map_elementwise
+* ``result(for(V.., {vecbuilder..}, if(cond, {merge(b.$k, ..)..}, b)))``
+  probing a let-bound dict (weldrel's horizontally fused join
+  probe: inner/left/anti, scalar or struct keys)        → hash_probe
 
 — and replaces each matched subtree with an ``ir.KernelCall`` node
 carrying the iter sources as args and the per-element bodies as staged
@@ -131,7 +134,7 @@ def _elementwise_ok(e: ir.Expr, banned: set, per_elem: set,
                 return False
             if x.expr.name in per_elem or x.expr.name in banned:
                 return False
-            return rec(x.index)
+            return rec(x.index) and (x.default is None or rec(x.default))
         return all(rec(c) for c in x.children())
 
     return rec(e)
@@ -338,9 +341,11 @@ def _match_dict_group(loop: ir.For, dense: Shapes) -> Optional[ir.KernelCall]:
 
 def _match_hash_build(loop: ir.For, dense: Shapes) -> Optional[ir.KernelCall]:
     """Dictmerger build via the open-addressing hash route: int keys of
-    ANY value (no dense [0, capacity) requirement), scalar or
-    struct-of-scalars values.  Matched for probed dicts (hash-join build
-    side) and as the fallback when the dense segment route declines."""
+    ANY value (no dense [0, capacity) requirement) — scalar OR a struct
+    of int columns (multi-column join keys, packed 32 bits per column
+    into the shared 64-bit key space) — with scalar or struct-of-scalars
+    values.  Matched for probed dicts (hash-join build side) and as the
+    fallback when the dense segment route declines."""
     spec = reg.available("dict_hash_build")
     if spec is None:
         return None
@@ -352,7 +357,8 @@ def _match_hash_build(loop: ir.For, dense: Shapes) -> Optional[ir.KernelCall]:
     ):
         return None
     kt, vt = nb.ty.key, nb.ty.val
-    if not (isinstance(kt, wt.Scalar) and kt.is_int):
+    key_tys = kt.fields if isinstance(kt, wt.Struct) else (kt,)
+    if not all(isinstance(t, wt.Scalar) and t.is_int for t in key_tys):
         return None
     val_tys = vt.fields if isinstance(vt, wt.Struct) else (vt,)
     if not all(_scalar_kind_ok(t, spec) for t in val_tys):
@@ -374,6 +380,13 @@ def _match_hash_build(loop: ir.For, dense: Shapes) -> Optional[ir.KernelCall]:
     if not (isinstance(body, ir.Merge) and _is_ident(body.builder, b.name)):
         return None
     key_e, val_e = _destructure_pair(body.value)
+    if isinstance(kt, wt.Struct):
+        if not (isinstance(key_e, ir.MakeStruct)
+                and len(key_e.items) == len(key_tys)):
+            return None
+        key_exprs = list(key_e.items)
+    else:
+        key_exprs = [key_e]
     struct_val = isinstance(vt, wt.Struct)
     if struct_val:
         if not (isinstance(val_e, ir.MakeStruct)
@@ -383,12 +396,12 @@ def _match_hash_build(loop: ir.For, dense: Shapes) -> Optional[ir.KernelCall]:
     else:
         val_exprs = [val_e]
     per_elem = {i.name, x.name}
-    for e2 in [key_e] + val_exprs:
+    for e2 in key_exprs + val_exprs:
         if not _elementwise_ok(e2, {b.name}, per_elem):
             return None
     if cond is not None and not _elementwise_ok(cond, {b.name}, per_elem):
         return None
-    fns = [ir.Lambda((i, x), key_e)]
+    fns = [ir.Lambda((i, x), k) for k in key_exprs]
     fns += [ir.Lambda((i, x), v) for v in val_exprs]
     if cond is not None:
         fns.append(ir.Lambda((i, x), cond))
@@ -396,7 +409,9 @@ def _match_hash_build(loop: ir.For, dense: Shapes) -> Optional[ir.KernelCall]:
         kernel=spec.name,
         args=tuple(it.data for it in loop.iters),
         ret_ty=wt.DictType(kt, vt),
-        params=(("capacity", cap), ("key_np", str(kt.np_dtype.__name__)),
+        params=(("capacity", cap), ("n_keys", len(key_exprs)),
+                ("key_nps", tuple(
+                    str(t.np_dtype.__name__) for t in key_tys)),
                 ("n_vals", len(val_exprs)), ("struct_val", struct_val),
                 ("has_pred", cond is not None)),
         fns=tuple(fns),
@@ -404,16 +419,30 @@ def _match_hash_build(loop: ir.For, dense: Shapes) -> Optional[ir.KernelCall]:
 
 
 def _split_probe_cond(cond: ir.Expr, dname_ok) -> Optional[Tuple[
-        ir.KeyExists, Optional[ir.Expr]]]:
-    """Split a probe loop's condition into (KeyExists(dict, k), pred?).
-    Accepts `keyexists(d, k)` or a single `&&` with the keyexists on
-    either side (the shape weldrel's filtered join emits)."""
-    if isinstance(cond, ir.KeyExists):
-        return (cond, None) if dname_ok(cond.expr) else None
+        ir.KeyExists, Optional[ir.Expr], bool]]:
+    """Split a probe loop's condition into (KeyExists(dict, k), pred?,
+    negated).  Accepts `keyexists(d, k)`, its negation (anti joins), or
+    a single `&&` with the (possibly negated) keyexists on either side
+    (the shapes weldrel's filtered joins emit)."""
+
+    def as_ke(e: ir.Expr):
+        if isinstance(e, ir.KeyExists) and dname_ok(e.expr):
+            return e, False
+        if (isinstance(e, ir.UnaryOp) and e.op == "not"
+                and isinstance(e.expr, ir.KeyExists)
+                and dname_ok(e.expr.expr)):
+            return e.expr, True
+        return None
+
+    hit = as_ke(cond)
+    if hit is not None:
+        return hit[0], None, hit[1]
     if isinstance(cond, ir.BinOp) and cond.op == "&&":
-        for ke, pred in ((cond.left, cond.right), (cond.right, cond.left)):
-            if isinstance(ke, ir.KeyExists) and dname_ok(ke.expr):
-                return ke, pred
+        for side, pred in ((cond.left, cond.right),
+                           (cond.right, cond.left)):
+            hit = as_ke(side)
+            if hit is not None:
+                return hit[0], pred, hit[1]
     return None
 
 
@@ -454,7 +483,9 @@ def _match_hash_probe(loop: ir.For, dense: Shapes) -> Optional[ir.KernelCall]:
     split = _split_probe_cond(body.cond, dname_ok)
     if split is None:
         return None
-    ke, pred = split
+    ke, pred, negated = split
+    if negated:
+        return None  # anti probes arrive in the fused struct form only
     d_id = ke.expr
     key_e = ke.key
     kt = d_id.ty.key
@@ -492,6 +523,144 @@ def _match_hash_probe(loop: ir.For, dense: Shapes) -> Optional[ir.KernelCall]:
         args=(d_id,) + tuple(it.data for it in loop.iters),
         ret_ty=wt.Vec(nb.ty.elem),
         params=(("gather", gather), ("field", field),
+                ("has_pred", pred is not None)),
+        fns=tuple(fns),
+    )
+
+
+def _match_hash_probe_fused(loop: ir.For,
+                            dense: Shapes) -> Optional[ir.KernelCall]:
+    """Horizontally fused join probe: ONE loop merging every output
+    column into a struct of vecbuilders (the form weldrel's join emits),
+    so an N-column join takes ONE ``hash_probe`` launch instead of N.
+
+        result(for(V.., {vecbuilder..},
+               (b,i,x) => if(cond, {merge(b.$k, v_k)..}, b)))
+
+    ``cond``/values encode the join flavor:
+
+    * inner — cond carries ``keyexists(d, k)``; right columns gather
+      ``lookup(d, k)[.j]``;
+    * left  — no keyexists in cond (an optional elementwise predicate
+      only); right columns gather ``lookup(d, k, fill)[.j]`` — the
+      single-probe miss form;
+    * anti  — cond carries ``not(keyexists(d, k))``; left columns only.
+
+    Keys may be scalar ints or a struct of int columns (packed in the
+    adapter exactly like the dict build side)."""
+    spec = reg.available("hash_probe")
+    if spec is None:
+        return None
+    nb = loop.builder
+    if not (isinstance(nb, ir.MakeStruct) and nb.items and all(
+            isinstance(p, ir.NewBuilder) and isinstance(p.ty, wt.VecBuilder)
+            and _scalar_kind_ok(p.ty.elem, spec) for p in nb.items)):
+        return None
+    b, i, x = loop.func.params
+    body = loop.func.body
+    cond: Optional[ir.Expr] = None
+    if isinstance(body, ir.If):
+        if not _is_ident(body.on_false, b.name):
+            return None
+        cond, body = body.cond, body.on_true
+    if not (isinstance(body, ir.MakeStruct)
+            and len(body.items) == len(nb.items)):
+        return None
+    vals: List[ir.Expr] = []
+    for k, item in enumerate(body.items):
+        if not (
+            isinstance(item, ir.Merge)
+            and isinstance(item.builder, ir.GetField)
+            and item.builder.index == k
+            and _is_ident(item.builder.expr, b.name)
+        ):
+            return None
+        vals.append(item.value)
+
+    def dname_ok(e: ir.Expr) -> bool:
+        return isinstance(e, ir.Ident) and isinstance(e.ty, wt.DictType)
+
+    d_id: Optional[ir.Ident] = None
+    key_e: Optional[ir.Expr] = None
+    pred: Optional[ir.Expr] = None
+    if cond is not None:
+        split = _split_probe_cond(cond, dname_ok)
+        if split is not None:
+            ke, pred, negated = split
+            d_id, key_e = ke.expr, ke.key
+            how = "anti" if negated else "inner"
+        else:
+            pred, how = cond, "left"
+    else:
+        how = "left"
+
+    # classify output columns; left joins discover the dict/key from the
+    # gathers (their condition carries no keyexists)
+    cols: List[Tuple[str, int]] = []
+    fills: List[object] = []
+    exprs: List[ir.Expr] = []
+    for v in vals:
+        lk, fld = v, -1
+        if isinstance(lk, ir.GetField) and isinstance(lk.expr, ir.Lookup):
+            lk, fld = lk.expr, lk.index
+        if isinstance(lk, ir.Lookup) and dname_ok(lk.expr):
+            if how == "anti":
+                return None  # anti joins carry no build-side columns
+            if d_id is None:
+                d_id, key_e = lk.expr, lk.index
+            if not (_is_ident(lk.expr, d_id.name)
+                    and ir.canon_key(lk.index) == ir.canon_key(key_e)):
+                return None  # every gather must share ONE dict + key
+            if how == "left":
+                dflt = lk.default
+                if dflt is None:
+                    return None
+                f = dflt.items[fld] if isinstance(dflt, ir.MakeStruct) \
+                    else dflt
+                if not isinstance(f, ir.Literal):
+                    return None
+                fills.append(f.value)
+            else:
+                if lk.default is not None:
+                    return None
+                fills.append(None)
+            cols.append(("gather", fld))
+        else:
+            cols.append(("expr", len(exprs)))
+            exprs.append(v)
+            fills.append(None)
+    if d_id is None:
+        return None  # no dict anywhere: a plain filter, not a probe
+    kt = d_id.ty.key
+    if isinstance(kt, wt.Struct):
+        if not all(isinstance(f, wt.Scalar) and f.is_int
+                   for f in kt.fields):
+            return None
+        if not (isinstance(key_e, ir.MakeStruct)
+                and len(key_e.items) == len(kt.fields)):
+            return None
+        key_parts = list(key_e.items)
+    elif isinstance(kt, wt.Scalar) and kt.is_int:
+        key_parts = [key_e]
+    else:
+        return None
+    per_elem = {i.name, x.name}
+    banned = {b.name, d_id.name}
+    for e2 in key_parts + exprs:
+        if not _elementwise_ok(e2, banned, per_elem):
+            return None
+    if pred is not None and not _elementwise_ok(pred, banned, per_elem):
+        return None
+    fns = [ir.Lambda((i, x), p) for p in key_parts]
+    fns += [ir.Lambda((i, x), v) for v in exprs]
+    if pred is not None:
+        fns.append(ir.Lambda((i, x), pred))
+    return ir.KernelCall(
+        kernel=spec.name,
+        args=(d_id,) + tuple(it.data for it in loop.iters),
+        ret_ty=wt.Struct(tuple(wt.Vec(p.ty.elem) for p in nb.items)),
+        params=(("how", how), ("n_keys", len(key_parts)),
+                ("cols", tuple(cols)), ("fills", tuple(fills)),
                 ("has_pred", pred is not None)),
         fns=tuple(fns),
     )
@@ -557,7 +726,8 @@ def _match_loop(e: ir.Result, dense: Shapes,
             return (_match_map_chain(loop, dense)
                     or _match_hash_probe(loop, dense))
     if isinstance(nb, ir.MakeStruct):
-        return _match_filter_reduce(loop, dense)
+        return (_match_filter_reduce(loop, dense)
+                or _match_hash_probe_fused(loop, dense))
     return None
 
 
@@ -667,6 +837,7 @@ def _call_meta(kc: ir.KernelCall, dense: Shapes,
         )
         meta["k"] = params.get("capacity")
         meta["n_vals"] = params.get("n_vals", 1)
+        meta["n_keys"] = params.get("n_keys", 1)
         meta["elem_bytes"] = _elem_bytes(kc.ret_ty)
     elif kc.kernel == "hash_probe":
         meta["n"] = next(
@@ -675,6 +846,9 @@ def _call_meta(kc: ir.KernelCall, dense: Shapes,
         d = kc.args[0]
         meta["k"] = (dict_caps or {}).get(
             d.name if isinstance(d, ir.Ident) else "")
+        # fused probes carry every output column through ONE launch; the
+        # cost model prices the shared membership tile against them all
+        meta["cols"] = max(len(params.get("cols", ())), 1)
         meta["elem_bytes"] = _elem_bytes(kc.ret_ty)
     elif kc.kernel in ("matmul", "matvec"):
         a = _shape_of(kc.args[0], dense)

@@ -285,15 +285,18 @@ def _exec_dict_hash_build(args, params, fns, impl):
     idx = jnp.arange(n, dtype=jnp.int64)
     elem = _elem_of(arrays)
     cap = int(params["capacity"])
+    nk = int(params.get("n_keys", 1))
     nv = int(params.get("n_vals", 1))
     block = params.get("block")
-    keys_raw = _as_col(fns[0](idx, elem), n).astype(jnp.int64)
-    vals = [_as_col(fns[1 + j](idx, elem), n) for j in range(nv)]
+    key_cols = [
+        _as_col(fns[j](idx, elem), n).astype(jnp.int64) for j in range(nk)
+    ]
+    vals = [_as_col(fns[nk + j](idx, elem), n) for j in range(nv)]
     if params.get("has_pred"):
-        mask = _as_col(fns[1 + nv](idx, elem), n).astype(bool)
+        mask = _as_col(fns[nk + nv](idx, elem), n).astype(bool)
     else:
         mask = jnp.ones((n,), dtype=bool)
-    packed = _pack_keys(keys_raw)
+    packed = _pack_keys(tuple(key_cols) if nk > 1 else key_cols[0])
     sentinel_clash = jnp.any(mask & (packed == _ht.EMPTY))
     pk = jnp.where(mask, packed, _ht.EMPTY)
     ctab = _ht.table_size(cap)
@@ -309,10 +312,14 @@ def _exec_dict_hash_build(args, params, fns, impl):
     cslots = jnp.where(slots < ctab, rank[jnp.clip(slots, 0, ctab - 1)],
                        jnp.int32(cap))
     cslots = jnp.where(cslots < cap, cslots, jnp.int32(cap))  # parked/overflow
-    # recover raw output keys (packing may have dropped high bits)
-    key_np = np.dtype(params.get("key_np", "int64"))
-    keys_src = jnp.where(mask, keys_raw, jnp.iinfo(jnp.int64).min)
-    keys_out = jax.ops.segment_max(keys_src, cslots, num_segments=cap)
+    # recover raw output key columns (packing may have dropped high
+    # bits); every row in a slot shares one key, so segment_max per
+    # field reads it back
+    key_nps = params.get("key_nps") or (params.get("key_np", "int64"),)
+    key_outs = []
+    for kc in key_cols:
+        src = jnp.where(mask, kc, jnp.iinfo(jnp.int64).min)
+        key_outs.append(jax.ops.segment_max(src, cslots, num_segments=cap))
     outs = []
     for v in vals:
         vm = jnp.where(mask, v, jnp.zeros((), v.dtype))
@@ -320,8 +327,11 @@ def _exec_dict_hash_build(args, params, fns, impl):
                                      impl=impl))
     count = jnp.minimum(used.astype(jnp.int64), cap)
     count = jnp.where(overflow, -count - 1, count)
-    keys_out = keys_out.astype(key_np)
-    keys_out = jnp.where(overflow, jnp.full_like(keys_out, -1), keys_out)
+    keys_fin = []
+    for ko, knp in zip(key_outs, key_nps):
+        ko = ko.astype(np.dtype(knp))
+        keys_fin.append(jnp.where(overflow, jnp.full_like(ko, -1), ko))
+    keys_out = tuple(keys_fin) if nk > 1 else keys_fin[0]
     poisoned = []
     for v in outs:
         if jnp.issubdtype(v.dtype, jnp.floating):
@@ -331,12 +341,11 @@ def _exec_dict_hash_build(args, params, fns, impl):
     return WDict(keys_out, vals_out, count)
 
 
-def _exec_hash_probe(args, params, fns, impl):
-    """Probe a dict with per-row keys; keep matching rows (front-packed)
-    and emit either the looked-up value column (``gather``) or a staged
-    elementwise expression over the probe row.  The positional probe
-    kernel serves every value dtype — the gather itself is a plain jnp
-    indexing outside the kernel."""
+def _probe_membership(args, params, fns, impl, nk):
+    """Shared prologue of the hash_probe adapters: stage the probe-side
+    columns, pack the (possibly multi-column) query keys into the i64
+    key space, neutralize the dict's parked slots, and run ONE
+    membership kernel.  Returns ``(n, idx, elem, pos, found, cap)``."""
     d = args[0]
     if not isinstance(d, WDict):
         raise KernelPlanError("hash_probe: expected a dict value")
@@ -344,7 +353,10 @@ def _exec_hash_probe(args, params, fns, impl):
     n = arrays[0].shape[0]
     idx = jnp.arange(n, dtype=jnp.int64)
     elem = _elem_of(arrays)
-    keys_q = _pack_keys(_as_col(fns[0](idx, elem), n).astype(jnp.int64))
+    key_cols = [
+        _as_col(fns[j](idx, elem), n).astype(jnp.int64) for j in range(nk)
+    ]
+    keys_q = _pack_keys(tuple(key_cols) if nk > 1 else key_cols[0])
     packed_t = _pack_keys(d.keys)
     cap = packed_t.shape[0]
     cnt = jnp.maximum(jnp.asarray(d.count, jnp.int64), 0)
@@ -356,6 +368,24 @@ def _exec_hash_probe(args, params, fns, impl):
         neut = jnp.where(jnp.arange(cap) < cnt, packed_t, big)
         pos, found = kops.dict_probe(neut, cnt, keys_q, impl=impl,
                                      block=params.get("block"))
+    return n, idx, elem, pos, found, cap
+
+
+def _exec_hash_probe(args, params, fns, impl):
+    """Probe a dict with per-row keys; keep matching rows (front-packed)
+    and emit either the looked-up value column (``gather``) or a staged
+    elementwise expression over the probe row.  The positional probe
+    kernel serves every value dtype — the gather itself is a plain jnp
+    indexing outside the kernel.
+
+    Fused calls (``cols`` in params — weldrel's horizontally fused join
+    probe) dispatch to :func:`_exec_hash_probe_fused`: ONE membership
+    kernel launch shared by every output column."""
+    if "cols" in params:
+        return _exec_hash_probe_fused(args, params, fns, impl)
+    d = args[0]
+    n, idx, elem, pos, found, cap = _probe_membership(
+        args, params, fns, impl, nk=1)
     gather = bool(params.get("gather"))
     if params.get("has_pred"):
         mask = _as_col(fns[1 if gather else 2](idx, elem), n).astype(bool)
@@ -373,6 +403,52 @@ def _exec_hash_probe(args, params, fns, impl):
     count = jnp.where(jnp.asarray(d.count, jnp.int64) < 0,
                       jnp.int64(-1), found.sum().astype(jnp.int64))
     return WVec(out[order], count=count)
+
+
+def _exec_hash_probe_fused(args, params, fns, impl):
+    """Horizontally fused join probe: ONE ``dict_probe`` launch computes
+    the found-mask/positions for the (possibly multi-column, packed)
+    keys, then EVERY output column reuses them — build-side columns as
+    plain gathers, probe-side columns as staged expressions, and all
+    columns sharing a single front-pack sort.
+
+    ``how`` selects the row semantics: ``inner`` keeps found rows,
+    ``anti`` keeps misses (left columns only), and ``left`` keeps every
+    row — misses in gathered columns fill from the per-column ``fills``
+    (the planner lifts them off the ``lookup(d, k, fill)`` defaults)
+    instead of front-packing, so no second probe pass exists anywhere."""
+    d = args[0]
+    how = params["how"]
+    nk = int(params.get("n_keys", 1))
+    n, idx, elem, pos, found, cap = _probe_membership(
+        args, params, fns, impl, nk=nk)
+    mask = None
+    if params.get("has_pred"):
+        mask = _as_col(fns[-1](idx, elem), n).astype(bool)
+    outs = []
+    for (kind, j), fill in zip(params["cols"], params["fills"]):
+        if kind == "expr":
+            col = _as_col(fns[nk + j](idx, elem), n)
+        else:
+            vcol = d.vals[j] if isinstance(d.vals, tuple) else d.vals
+            if cap == 0 or vcol.shape[0] == 0:
+                col = jnp.zeros((n,), vcol.dtype)
+            else:
+                col = vcol[jnp.clip(pos, 0, vcol.shape[0] - 1)]
+            if how == "left":
+                col = jnp.where(found, col, jnp.asarray(fill, vcol.dtype))
+        outs.append(col)
+    keep = {"inner": found, "anti": ~found, "left": None}[how]
+    if mask is not None:
+        keep = mask if keep is None else keep & mask
+    poisoned = jnp.asarray(d.count, jnp.int64) < 0
+    if keep is None:  # left join, no predicate: every row survives
+        count = jnp.where(poisoned, jnp.int64(-1), jnp.int64(n))
+        return tuple(WVec(c, count=count) for c in outs)
+    order = jnp.argsort(~keep, stable=True)  # ONE shared front-pack
+    count = jnp.where(poisoned, jnp.int64(-1),
+                      keep.sum().astype(jnp.int64))
+    return tuple(WVec(c[order], count=count) for c in outs)
 
 
 def _tiles(params) -> dict:
@@ -460,9 +536,11 @@ def _fp_hash_probe(arg_shapes, itemsize, params):
     block = params.get("block") or _hp.BLOCK_N
     pad = _pad_of(n, block)
     cap = int(params.get("k", 0))
-    # staged packed queries + pos/found columns + the compacted output,
-    # plus the neutralized key table and the block x cap one-hot tile
-    return ((n + pad) * (8 + 4 + 1 + itemsize) + n * itemsize
+    cols = max(len(params.get("cols", ())), 1)
+    # staged packed queries + pos/found columns + the (per output
+    # column) gathered/compacted outputs, plus the neutralized key
+    # table and the block x cap one-hot tile — shared across columns
+    return ((n + pad) * (8 + 4 + 1 + cols * itemsize) + n * cols * itemsize
             + cap * 8 + block * cap * 5)
 
 
@@ -647,8 +725,9 @@ register(KernelSpec(
     builder="dictmerger[+]",
     elem_kinds=("f32", "f64", "i32", "i64"),
     description="open-addressing hash build for sparse/non-dense int "
-                "keys (hash-join build side; also the group-by fallback "
-                "beyond the dense segment route's capacity)",
+                "keys, scalar or multi-column struct (hash-join build "
+                "side; also the group-by fallback beyond the dense "
+                "segment route's capacity)",
     max_segments=_ht.MAX_CAP,
     execute=_exec_dict_hash_build,
     cost=_cost.cost_hash_build,
@@ -664,8 +743,9 @@ register(KernelSpec(
     pattern="hash_probe",
     builder="vecbuilder",
     elem_kinds=("f32", "f64", "i32", "i64"),
-    description="one-hot MXU dict probe: filter rows to key matches and "
-                "gather build-side values (hash-join probe side)",
+    description="one-hot MXU dict probe: one membership launch shared "
+                "by every join output column (inner filter / left "
+                "fill-on-miss / anti), gathers outside the kernel",
     max_segments=_ht.MAX_CAP,
     execute=_exec_hash_probe,
     cost=_cost.cost_hash_probe,

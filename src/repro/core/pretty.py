@@ -35,6 +35,8 @@ def pretty(e: "ir.Expr", indent: int = 0) -> str:
     if isinstance(e, ir.Len):
         return f"len({p(e.expr)})"
     if isinstance(e, ir.Lookup):
+        if e.default is not None:
+            return f"lookup({p(e.expr)}, {p(e.index)}, {p(e.default)})"
         return f"lookup({p(e.expr)}, {p(e.index)})"
     if isinstance(e, ir.KeyExists):
         return f"keyexists({p(e.expr)}, {p(e.key)})"

@@ -143,6 +143,13 @@ class Query:
             m = self.pred._eager if self.pred is not None else slice(None)
             karrs = [k._eager[m] for k in keys]
             varrs = [vals[n][0]._eager[m] for n in vals]
+            # per-dtype merger identities: an int value column accumulates
+            # as ints and decodes as ints, exactly like the lazy dict path
+            # (the old [0.0]*n seed floated every aggregate)
+            idents = [
+                wt.merge_identity("+", wt.dtype_to_weld(v.dtype))
+                for v in varrs
+            ]
             packed = list(zip(*karrs))
             out: dict = {}
             for row_idx, kt in enumerate(packed):
@@ -150,11 +157,15 @@ class Query:
                 # path's dict decode — not a 1-tuple
                 kt = tuple(x.item() for x in kt)
                 kt = kt[0] if len(kt) == 1 else kt
-                slotv = out.setdefault(kt, [0.0] * len(varrs) + [0])
+                slotv = out.setdefault(kt, list(idents) + [0])
                 for j, v in enumerate(varrs):
                     slotv[j] += v[row_idx]
                 slotv[-1] += 1
-            return {k: tuple(v) for k, v in out.items()}
+            return {
+                k: tuple(x.item() if isinstance(x, np.generic) else x
+                         for x in v)
+                for k, v in out.items()
+            }
 
         names = list(vals)
         deps: List[WeldObject] = []
@@ -216,8 +227,8 @@ class Query:
     def join(
         self,
         other: "Table",
-        on: str,
-        right_on: Optional[str] = None,
+        on,
+        right_on=None,
         how: str = "inner",
         suffix: str = "_r",
         capacity: Optional[int] = None,
@@ -225,140 +236,150 @@ class Query:
         kernel_impl=None,
         collect_stats: Optional[dict] = None,
     ) -> "Table":
-        """Hash-join this query's (filtered) rows against `other` on an
-        equality key; evaluation point returning a new materialized
-        :class:`Table`.
+        """Hash-join this query's (filtered) rows against `other` on one
+        or two equality keys; evaluation point returning a new
+        materialized :class:`Table`.
+
+        ``on`` (and optionally ``right_on``) is a column name or a list
+        of up to two names — multi-column keys share the backend's packed
+        64-bit key space (32 bits per column; out-of-range int keys
+        raise).  ``how`` selects the join semantics:
+
+        * ``"inner"`` — keep probe rows whose key exists on the build
+          side (unmatched rows drop);
+        * ``"left"``  — keep every probe row; right columns fill misses
+          with a per-dtype default (NaN for floats, 0 for ints, False
+          for bools — sentinel fills, NOT pandas' float upcast);
+        * ``"anti"``  — keep probe rows whose key does NOT exist; the
+          output has only left columns.
 
         `other` is the BUILD side and must have unique keys (an m:1 /
         fact-to-dimension join, pandas ``validate="m:1"``); duplicate or
-        missing keys on the probe side are fine — inner semantics drop
-        unmatched probe rows.  Output columns are every left column plus
-        every right column except the key (``suffix`` disambiguates
-        collisions).
+        missing keys on the probe side are fine.  NaN join keys raise on
+        every path (the one NaN semantics all three paths share).
+        Output columns are every left column plus every right column
+        except the key; a post-``suffix`` name collision raises instead
+        of silently overwriting.
 
         Lazily the whole join is ONE fused program: a dictmerger build
-        pass over the right side, then per output column a probe loop
-        ``if(keyexists(d, k), merge(b, lookup(d, k) | left_col), b)``.
-        Under ``kernelize`` the planner lowers it as a two-kernel plan —
-        an open-addressing hash build (covering sparse/non-dense int
-        keys) and a one-hot MXU gather probe (``repro.core.kernelplan``).
+        pass over the right side, then ONE horizontally-fused probe loop
+        merging every output column into a struct of vecbuilders —
+        misses lower through ``lookup(d, k, default)`` (a single probe,
+        no second pass).  Under ``kernelize`` the planner lowers build +
+        probe as a two-kernel plan — an open-addressing hash build and a
+        one-hot MXU probe shared by ALL output columns, so an N-column
+        join launches one build and one probe (``repro.core.kernelplan``).
         """
-        if how != "inner":
-            raise NotImplementedError(f"join how={how!r} (inner only)")
+        if how not in ("inner", "left", "anti"):
+            raise NotImplementedError(
+                f"join how={how!r} (inner/left/anti; m:n joins pending)"
+            )
         if not isinstance(other, Table):
             raise TypeError("join build side must be a weldrel.Table")
-        rkey = right_on or on
-        rk_host = np.asarray(_host(other.cols[rkey]))
-        if np.unique(rk_host).size != rk_host.size:
+        on_l = [on] if isinstance(on, str) else list(on)
+        on_r = (
+            ([right_on] if isinstance(right_on, str) else list(right_on))
+            if right_on is not None else on_l
+        )
+        if not on_l or len(on_l) != len(on_r):
+            raise ValueError(
+                "join on/right_on must name the same number (>=1) of "
+                "key columns"
+            )
+        if len(on_l) > 2:
+            raise ValueError(
+                "join supports at most 2 key columns (the packed-key "
+                "space is 64-bit: 32 bits per column)"
+            )
+        nk = len(on_l)
+        lk_host = [np.asarray(_host(self.table.cols[c])) for c in on_l]
+        rk_host = [np.asarray(_host(other.cols[c])) for c in on_r]
+        _check_join_keys(lk_host, rk_host, multi=nk > 1)
+        # float keys compare through the f32 bitcast of the packed key
+        # space on EVERY path (the dict paths have no alternative), so
+        # the eager compare and the m:1 uniqueness check must use the
+        # same packing — f64 build keys distinct only beyond f32
+        # precision raise here instead of silently summing in the dict
+        do_pack = nk > 1 or any(
+            np.issubdtype(c.dtype, np.floating)
+            for c in (lk_host[0], rk_host[0])
+        )
+        rk_packed = _pack_host(rk_host) if do_pack else rk_host[0]
+        if np.unique(rk_packed).size != rk_packed.size:
             raise ValueError(
                 "join requires unique build-side keys (m:1); aggregate "
                 "the right side first"
             )
         names_l = list(self.table.cols)
-        names_r = [c for c in other.cols if c != rkey]
-        out_names = names_l + [
-            c + suffix if c in names_l else c for c in names_r
-        ]
-        cap = int(capacity if capacity is not None else max(rk_host.size, 1))
-        if cap < rk_host.size:
+        names_r = (
+            [] if how == "anti"
+            else [c for c in other.cols if c not in on_r]
+        )
+        renamed_r = [c + suffix if c in names_l else c for c in names_r]
+        out_names = names_l + renamed_r
+        if len(set(out_names)) != len(out_names):
+            seen: Dict[str, int] = {}
+            for c in out_names:
+                seen[c] = seen.get(c, 0) + 1
+            dups = sorted(c for c, k in seen.items() if k > 1)
+            raise ValueError(
+                f"join output name collision after suffix {suffix!r}: "
+                f"{dups}; rename columns or pick another suffix"
+            )
+        m = len(names_r)
+        cap = int(capacity if capacity is not None else max(rk_packed.size, 1))
+        if cap < rk_packed.size:
             # an undersized dict truncates (generic) or poisons (kernel)
             # the build — fail loudly before either can happen
             raise ValueError(
-                f"join capacity {cap} < {rk_host.size} build-side keys"
+                f"join capacity {cap} < {rk_packed.size} build-side keys"
             )
 
         if self.table.eager:
-            m = (self.pred._eager if self.pred is not None
-                 else np.ones(len(_host(self.table.col(on))), bool))
-            lk = self.table.col(on)._eager
-            if rk_host.size:
-                order = np.argsort(rk_host, kind="stable")
-                rks = rk_host[order]
+            n_l = lk_host[0].shape[0]
+            mrows = (self.pred._eager if self.pred is not None
+                     else np.ones(n_l, bool))
+            lk = _pack_host(lk_host) if do_pack else lk_host[0]
+            rk = rk_packed
+            if rk.size:
+                order = np.argsort(rk, kind="stable")
+                rks = rk[order]
                 pos = np.clip(np.searchsorted(rks, lk), 0, rks.size - 1)
                 found = rks[pos] == lk
             else:
-                order = pos = np.zeros(lk.shape[0], dtype=np.int64)
-                found = np.zeros(lk.shape[0], dtype=bool)
-            mask = m & found
+                order = pos = np.zeros(n_l, dtype=np.int64)
+                found = np.zeros(n_l, dtype=bool)
+            mask = {
+                "inner": mrows & found,
+                "left": mrows,
+                "anti": mrows & ~found,
+            }[how]
             out = {c: self.table.col(c)._eager[mask] for c in names_l}
             if names_r:
-                gidx = order[pos[mask]] if rk_host.size else pos[:0]
-                for c, name in zip(names_r, out_names[len(names_l):]):
-                    out[name] = _host(other.cols[c])[gidx]
+                fsel = found[mask]
+                gidx = order[pos[mask]] if rk.size else None
+                for c, name in zip(names_r, renamed_r):
+                    rcol = np.asarray(_host(other.cols[c]))
+                    fill = rcol.dtype.type(_fill_of(rcol.dtype))
+                    if rk.size:
+                        v = rcol[gidx]
+                        if how == "left":
+                            v = np.where(fsel, v, fill)
+                    else:
+                        v = np.full(int(mask.sum()), fill, rcol.dtype)
+                    out[name] = v
             return Table(out, eager=True)
 
-        # -- lazy: one fused program (build + all probes) ----------------------
+        # -- lazy: one fused program (build + ONE fused probe) -----------------
         lcols = {c: _as_lazy(self.table.cols[c]) for c in names_l}
-        rcols = {c: _as_lazy(other.cols[c]) for c in [rkey] + names_r}
-        kt = rcols[rkey].weld_elem_ty
-        m = len(names_r)
-
-        # build side: dict[key, {v1..vm}] (or dict[key, v] / dict[key, 1])
-        r_objs = [rcols[rkey].obj] + [rcols[c].obj for c in names_r]
-        r_ids = [ir.Ident(o.obj_id, o.weld_type()) for o in r_objs]
-        b_elem = (
-            wt.Struct(tuple(_ety(k, r_ids) for k in range(len(r_ids))))
-            if len(r_ids) > 1 else _ety(0, r_ids)
+        rkey_cols = [_as_lazy(other.cols[c]) for c in on_r]
+        rcols = {c: _as_lazy(other.cols[c]) for c in names_r}
+        kt: wt.WeldType = (
+            wt.Struct(tuple(c.weld_elem_ty for c in rkey_cols))
+            if nk > 1 else rkey_cols[0].weld_elem_ty
         )
-        vt: wt.WeldType = (
-            wt.Struct(tuple(_ety(k, r_ids) for k in range(1, len(r_ids))))
-            if m > 1 else (_ety(1, r_ids) if m == 1 else wt.I64)
-        )
-        bt = wt.DictMerger(kt, vt, "+")
-        b = ir.Ident(ir.fresh("b"), bt)
-        i = ir.Ident(ir.fresh("i"), wt.I64)
-        x = ir.Ident(ir.fresh("x"), b_elem)
-        kf = ir.GetField(x, 0) if len(r_ids) > 1 else x
-        if m > 1:
-            vf: ir.Expr = ir.MakeStruct(
-                tuple(ir.GetField(x, k) for k in range(1, len(r_ids)))
-            )
-        elif m == 1:
-            vf = ir.GetField(x, 1)
-        else:
-            vf = ir.Literal(1, wt.I64)
-        build = ir.For(
-            tuple(ir.Iter(idn) for idn in r_ids),
-            ir.NewBuilder(bt, arg=ir.Literal(cap, wt.I64)),
-            ir.Lambda((b, i, x), ir.Merge(b, ir.MakeStruct((kf, vf)))),
-        )
-        dict_obj = NewWeldObject(r_objs, ir.Result(build))
-        d_id = ir.Ident(dict_obj.obj_id, dict_obj.weld_type())
+        need_dict = m > 0 or how in ("inner", "anti")
 
-        lk_obj = lcols[on].obj
-        pred_obj = self.pred.obj if self.pred is not None else None
-
-        def probe(val_of, elem_ty_of, iters_extra):
-            """One output column: filter left rows to key matches and
-            merge `val_of(x)` — the planner's hash_probe pattern."""
-            ids2 = [ir.Ident(lk_obj.obj_id, lk_obj.weld_type())]
-            ids2 += [ir.Ident(o.obj_id, o.weld_type()) for o in iters_extra]
-            if pred_obj is not None:
-                ids2.append(ir.Ident(pred_obj.obj_id, pred_obj.weld_type()))
-            elem = (
-                wt.Struct(tuple(_ety(k, ids2) for k in range(len(ids2))))
-                if len(ids2) > 1 else _ety(0, ids2)
-            )
-            b2 = ir.Ident(ir.fresh("b"), wt.VecBuilder(elem_ty_of))
-            i2 = ir.Ident(ir.fresh("i"), wt.I64)
-            x2 = ir.Ident(ir.fresh("x"), elem)
-
-            def field(k: int) -> ir.Expr:
-                return ir.GetField(x2, k) if len(ids2) > 1 else x2
-
-            cond: ir.Expr = ir.KeyExists(d_id, field(0))
-            if pred_obj is not None:
-                cond = ir.BinOp("&&", field(len(ids2) - 1), cond)
-            body = ir.If(
-                cond, ir.Merge(b2, val_of(field)), b2
-            )
-            return ir.Result(ir.For(
-                tuple(ir.Iter(idn) for idn in ids2),
-                ir.NewBuilder(b2.ty),
-                ir.Lambda((b2, i2, x2), body),
-            ))
-
-        probes: List[ir.Expr] = []
         deps: List[WeldObject] = []
         seen_dep: Dict[str, WeldObject] = {}
 
@@ -367,31 +388,132 @@ class Query:
                 seen_dep[o.obj_id] = o
                 deps.append(o)
 
-        dep(lk_obj)
-        if pred_obj is not None:
-            dep(pred_obj)
-        dep(dict_obj)
-        for c in names_l:
-            col = lcols[c]
-            if col.obj.obj_id == lk_obj.obj_id:
-                probes.append(probe(
-                    lambda f: f(0), col.weld_elem_ty, []))
-            else:
-                dep(col.obj)
-                probes.append(probe(
-                    lambda f: f(1), col.weld_elem_ty, [col.obj]))
-        for j, c in enumerate(names_r):
-            elem_ty = rcols[c].weld_elem_ty
-            if m > 1:
-                probes.append(probe(
-                    lambda f, j=j: ir.GetField(
-                        ir.Lookup(d_id, f(0)), j),
-                    elem_ty, []))
-            else:
-                probes.append(probe(
-                    lambda f: ir.Lookup(d_id, f(0)), elem_ty, []))
+        # bool value columns cannot ride the "+"-dictmerger directly —
+        # they build as i8 and cast back to bool at the probe (build
+        # keys are unique, so the stored i8 is always 0/1)
+        rval_tys = [rcols[c].weld_elem_ty for c in names_r]
+        enc_tys = [wt.I8 if t == wt.Bool else t for t in rval_tys]
 
-        obj = NewWeldObject(deps, ir.MakeStruct(tuple(probes)))
+        d_id: Optional[ir.Ident] = None
+        if need_dict:
+            # build side: dict[key, {v1..vm}] (or dict[key, v] /
+            # dict[key, 1]); multi-column keys merge a struct key
+            r_objs = [c.obj for c in rkey_cols] + \
+                [rcols[c].obj for c in names_r]
+            r_ids = [ir.Ident(o.obj_id, o.weld_type()) for o in r_objs]
+            b_elem = (
+                wt.Struct(tuple(_ety(k, r_ids) for k in range(len(r_ids))))
+                if len(r_ids) > 1 else _ety(0, r_ids)
+            )
+            vt: wt.WeldType = (
+                wt.Struct(tuple(enc_tys))
+                if m > 1 else (enc_tys[0] if m == 1 else wt.I64)
+            )
+            bt = wt.DictMerger(kt, vt, "+")
+            b = ir.Ident(ir.fresh("b"), bt)
+            i = ir.Ident(ir.fresh("i"), wt.I64)
+            x = ir.Ident(ir.fresh("x"), b_elem)
+
+            def rfield(k: int) -> ir.Expr:
+                return ir.GetField(x, k) if len(r_ids) > 1 else x
+
+            def renc(j: int) -> ir.Expr:
+                f = rfield(nk + j)
+                return ir.Cast(f, wt.I8) if rval_tys[j] == wt.Bool else f
+
+            kf: ir.Expr = (
+                ir.MakeStruct(tuple(rfield(k) for k in range(nk)))
+                if nk > 1 else rfield(0)
+            )
+            if m > 1:
+                vf: ir.Expr = ir.MakeStruct(
+                    tuple(renc(j) for j in range(m))
+                )
+            elif m == 1:
+                vf = renc(0)
+            else:
+                vf = ir.Literal(1, wt.I64)
+            build = ir.For(
+                tuple(ir.Iter(idn) for idn in r_ids),
+                ir.NewBuilder(bt, arg=ir.Literal(cap, wt.I64)),
+                ir.Lambda((b, i, x), ir.Merge(b, ir.MakeStruct((kf, vf)))),
+            )
+            dict_obj = NewWeldObject(r_objs, ir.Result(build))
+            d_id = ir.Ident(dict_obj.obj_id, dict_obj.weld_type())
+            dep(dict_obj)
+
+        pred_obj = self.pred.obj if self.pred is not None else None
+
+        # ONE probe pass: every output column merges into its own
+        # vecbuilder inside a single loop over the probe side — the
+        # horizontally-fused form the planner routes as one hash_probe
+        iter_objs: List[WeldObject] = []
+        slots: Dict[str, int] = {}
+
+        def slot(o: WeldObject) -> int:
+            if o.obj_id not in slots:
+                slots[o.obj_id] = len(iter_objs)
+                iter_objs.append(o)
+            return slots[o.obj_id]
+
+        key_slots = [slot(lcols[c].obj) for c in on_l]
+        col_slots = [slot(lcols[c].obj) for c in names_l]
+        pred_slot = slot(pred_obj) if pred_obj is not None else None
+        for o in iter_objs:
+            dep(o)
+        ids2 = [ir.Ident(o.obj_id, o.weld_type()) for o in iter_objs]
+        elem = (
+            wt.Struct(tuple(_ety(k, ids2) for k in range(len(ids2))))
+            if len(ids2) > 1 else _ety(0, ids2)
+        )
+        out_tys = [lcols[c].weld_elem_ty for c in names_l] + \
+            [rcols[c].weld_elem_ty for c in names_r]
+        builders = tuple(wt.VecBuilder(t) for t in out_tys)
+        b2 = ir.Ident(ir.fresh("b"), wt.StructBuilder(builders))
+        i2 = ir.Ident(ir.fresh("i"), wt.I64)
+        x2 = ir.Ident(ir.fresh("x"), elem)
+
+        def field(k: int) -> ir.Expr:
+            return ir.GetField(x2, k) if len(ids2) > 1 else x2
+
+        key_expr: ir.Expr = (
+            ir.MakeStruct(tuple(field(s) for s in key_slots))
+            if nk > 1 else field(key_slots[0])
+        )
+        vals: List[ir.Expr] = [field(s) for s in col_slots]
+        if m:
+            fill_dflt: Optional[ir.Expr] = None
+            if how == "left":
+                fills = tuple(
+                    ir.Literal(_fill_of(np.dtype(t.np_dtype)), t)
+                    for t in enc_tys
+                )
+                fill_dflt = ir.MakeStruct(fills) if m > 1 else fills[0]
+            look = ir.Lookup(d_id, key_expr, fill_dflt)
+            for j in range(m):
+                v: ir.Expr = ir.GetField(look, j) if m > 1 else look
+                if rval_tys[j] == wt.Bool:
+                    v = ir.Cast(v, wt.Bool)
+                vals.append(v)
+        merged = ir.MakeStruct(tuple(
+            ir.Merge(ir.GetField(b2, k), v) for k, v in enumerate(vals)
+        ))
+        cond: Optional[ir.Expr] = None
+        if how == "inner":
+            cond = ir.KeyExists(d_id, key_expr)
+        elif how == "anti":
+            cond = ir.UnaryOp("not", ir.KeyExists(d_id, key_expr))
+        if pred_slot is not None:
+            pf = field(pred_slot)
+            cond = pf if cond is None else ir.BinOp("&&", pf, cond)
+        body: ir.Expr = merged if cond is None else ir.If(cond, merged, b2)
+        loop = ir.For(
+            tuple(ir.Iter(idn) for idn in ids2),
+            ir.MakeStruct(tuple(ir.NewBuilder(bt2) for bt2 in builders)),
+            ir.Lambda((b2, i2, x2), body),
+        )
+
+        obj = NewWeldObject(deps, ir.Result(loop))
         res = Evaluate(obj, kernelize=kernelize, kernel_impl=kernel_impl,
                        collect_stats=collect_stats)
         arrays = [np.asarray(v) for v in res.value]
@@ -401,6 +523,66 @@ class Query:
 def _host(col: weldnp.ndarray) -> np.ndarray:
     """The numpy buffer behind a table column (eager or lazy)."""
     return col._eager if col.is_eager else np.asarray(col.obj.data)
+
+
+def _fill_of(dt) -> object:
+    """Per-dtype miss fill for left joins: NaN for floats, 0 for ints,
+    False for bools (a sentinel fill, NOT pandas' float upcast)."""
+    dt = np.dtype(dt)
+    if np.issubdtype(dt, np.floating):
+        return float("nan")
+    if dt == np.dtype(np.bool_):
+        return False
+    return 0
+
+
+def _check_join_keys(lcols: List[np.ndarray], rcols: List[np.ndarray],
+                     multi: bool) -> None:
+    """Pin the key semantics every path shares: mismatched key dtypes
+    raise (the eager packed compare would silently conflate e.g. an int
+    with a float's bitcast while the lazy dict raises a type error),
+    NaN keys raise (eager NumPy would treat them as unmatchable while
+    the packed-bits dict would equate identical payloads — neither
+    silently), and multi-column int keys must fit the
+    32-bit-per-column packed space."""
+    for lc, rc in zip(lcols, rcols):
+        if lc.dtype != rc.dtype:
+            raise ValueError(
+                f"join key dtype mismatch: {lc.dtype} vs {rc.dtype}; "
+                "cast one side before joining"
+            )
+    for c in lcols + rcols:
+        if np.issubdtype(c.dtype, np.floating) and np.isnan(c).any():
+            raise ValueError(
+                "join keys contain NaN; NaN join keys are unsupported "
+                "(drop or fill them before joining)"
+            )
+        if multi and np.issubdtype(c.dtype, np.integer) and c.size:
+            # strictly greater than INT32_MIN: -2^31 in a leading column
+            # packs onto the hash table's EMPTY sentinel (INT64_MIN)
+            if int(c.min()) <= -(2 ** 31) or int(c.max()) >= 2 ** 31:
+                raise ValueError(
+                    "multi-column join keys must fit in 32 bits per "
+                    "column (the packed-key space is 64-bit; INT32_MIN "
+                    "is reserved as the hash sentinel)"
+                )
+
+
+def _pack_host(cols: List[np.ndarray]) -> np.ndarray:
+    """Host-side mirror of the backend's packed key space (jaxgen
+    ``_pack_keys``): 32 bits per column, floats bit-cast through f32 —
+    byte-identical packing, so the eager path and the dict paths agree
+    on exactly which keys are equal (applied to multi-column keys AND
+    single float key columns, which the jnp packing also bitcasts)."""
+    packed = np.zeros(cols[0].shape[0], dtype=np.int64)
+    for c in cols:
+        if np.issubdtype(c.dtype, np.floating):
+            c = np.where(c == 0, np.zeros_like(c), c)  # -0.0 == +0.0
+            c = c.astype(np.float32).view(np.int32).astype(np.int64)
+        else:
+            c = c.astype(np.int64)
+        packed = packed * np.int64(1 << 32) + (c & np.int64(0xFFFFFFFF))
+    return packed
 
 
 def _as_lazy(col: weldnp.ndarray) -> weldnp.ndarray:

@@ -16,6 +16,13 @@ so the comparison tile fits VMEM alongside the query block.
 
 The value gather itself happens outside the kernel (``vals[pos]``): the
 positions serve any value dtype/struct without specializing the kernel.
+That split is what lets weldrel's horizontally fused join probe reuse
+ONE launch for every output column — inner joins front-pack by the
+found mask, left joins keep every row and select per-dtype fills where
+``found`` is false, anti joins front-pack by its negation — all from
+the same ``(pos, found)`` pair (``kernelplan.registry``,
+``_exec_hash_probe_fused``).  Multi-column keys arrive pre-packed (32
+bits per column) in the same i64 key space the build side uses.
 
 Contract (shared with ``ref.dict_probe``): queries and table keys live
 in the packed key space; returns ``(pos, found)`` with ``pos`` int32,

@@ -42,8 +42,10 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 #: sentinel for "no key": reserved, never a valid packed key in practice
-#: (single-column int keys pack into [0, 2^32); struct keys would need a
-#: full 64-bit collision with INT64_MIN).
+#: (single-column int keys keep their full value; multi-column keys pack
+#: 32 bits per column, so hitting INT64_MIN needs a -2^31 leading key —
+#: the build adapter detects the clash and poisons the dict rather than
+#: conflate).
 EMPTY = int(np.iinfo(np.int64).min)
 
 #: largest dict capacity the hash route serves; the table itself is

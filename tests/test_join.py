@@ -84,7 +84,9 @@ def test_join_kernelized_routes_and_matches():
     out = weldrel.Query(t).join(r, on="key", kernelize="always",
                                 collect_stats=st)
     assert st["kernelize.dict_hash_build"] == 1
-    assert st["kernelize.hash_probe"] == 4  # key, lv, rv, rw
+    # 4 output columns (key, lv, rv, rw) share ONE fused probe launch
+    assert st["kernelize.hash_probe"] == 1
+    assert st["kernelplan"]["routed"]["hash_probe"] == 1
     _check(out, np_join(lcols, rcols, "key"))
 
 
@@ -186,9 +188,17 @@ def test_join_rejects_unsupported_shapes():
     t = weldrel.Table({"k": np.array([1], np.int64)})
     r = weldrel.Table({"k": np.array([1], np.int64)})
     with pytest.raises(NotImplementedError):
-        weldrel.Query(t).join(r, on="k", how="left")
+        weldrel.Query(t).join(r, on="k", how="outer")
     with pytest.raises(TypeError):
         weldrel.Query(t).join(weldrel.Query(r), on="k")
+    with pytest.raises(ValueError, match="at most 2"):
+        weldrel.Query(weldrel.Table({
+            "a": np.array([1], np.int64), "b": np.array([1], np.int64),
+            "c": np.array([1], np.int64)})).join(
+            weldrel.Table({"a": np.array([1], np.int64),
+                           "b": np.array([1], np.int64),
+                           "c": np.array([1], np.int64)}),
+            on=["a", "b", "c"])
 
 
 def test_join_keys_beyond_32_bits_do_not_conflate():
@@ -388,6 +398,308 @@ def test_dict_probe_parity_both_impls():
             table[pos[found]], queries[found])
         assert (pos[~found] == 0).all()
     np.testing.assert_array_equal(got["ref"][0], got["interpret"][0])
+
+
+# ---------------------------------------------------------------------------
+# left / anti / multi-key joins: pandas-oracle parity on every path
+# (pandas is a dev-only dependency — only the oracle tests skip without
+# it, never this module's routing/correctness tests above)
+# ---------------------------------------------------------------------------
+
+try:
+    import pandas as pd
+except ImportError:  # pragma: no cover - dev envs ship pandas
+    pd = None
+
+needs_pandas = pytest.mark.skipif(pd is None, reason="pandas not installed")
+
+MODES = ("eager", "off", "auto", "always")
+
+
+def pd_join(lcols, rcols, on, how, m=None, suffix="_r"):
+    """pandas oracle for weldrel's join semantics.  Left-join misses in
+    non-float right columns are converted from pandas' NaN-upcast back
+    to weldrel's per-dtype sentinel fills (0 / False)."""
+    on = [on] if isinstance(on, str) else list(on)
+    ldf = pd.DataFrame(lcols)
+    if m is not None:
+        ldf = ldf[m]
+    rdf = pd.DataFrame(rcols)
+    if how == "anti":
+        mg = ldf.merge(rdf[on], on=on, how="left", indicator=True)
+        out = mg[mg["_merge"] == "left_only"]
+        return {c: out[c].to_numpy() for c in ldf.columns}
+    mg = ldf.merge(rdf, on=on, how=how, suffixes=("", suffix))
+    out = {c: mg[c].to_numpy() for c in ldf.columns}
+    for c in rdf.columns:
+        if c in on:
+            continue
+        name = c + suffix if c in ldf.columns else c
+        v = mg[name].to_numpy()
+        want_dt = np.asarray(rcols[c]).dtype
+        if how == "left" and not np.issubdtype(want_dt, np.floating):
+            miss = np.isnan(v.astype(np.float64))
+            v = np.where(miss, np.zeros((), want_dt), v).astype(want_dt)
+        out[name] = v
+    return out
+
+
+def _run_join(lcols, rcols, on, how, mode, pred_col=None, pred_thresh=None,
+              collect_stats=None):
+    eager = mode == "eager"
+    t = weldrel.Table(lcols, eager=eager)
+    r = weldrel.Table(rcols, eager=eager)
+    q = weldrel.Query(t)
+    if pred_col is not None:
+        q = q.filter(t.col(pred_col) > pred_thresh)
+    kw = {} if eager else {"kernelize": mode}
+    return q.join(r, on=on, how=how, collect_stats=collect_stats, **kw)
+
+
+@needs_pandas
+@pytest.mark.parametrize("how", ["left", "anti"])
+@pytest.mark.parametrize("mode", MODES)
+def test_left_anti_join_pandas_parity(how, mode):
+    lcols, rcols = _data()
+    want = pd_join(lcols, rcols, "key", how)
+    _check(_run_join(lcols, rcols, "key", how, mode), want)
+
+
+@needs_pandas
+@pytest.mark.parametrize("how", ["inner", "left", "anti"])
+@pytest.mark.parametrize("mode", MODES)
+def test_multi_key_join_pandas_parity(how, mode):
+    n = 1200
+    lcols = {"a": rng.randint(0, 12, n).astype(np.int64),
+             "b": rng.randint(0, 7, n).astype(np.int64),
+             "lv": rng.rand(n)}
+    ga, gb = np.meshgrid(np.arange(10), np.arange(5))
+    rcols = {"a": ga.ravel().astype(np.int64),
+             "b": gb.ravel().astype(np.int64),
+             "rv": rng.rand(50),
+             "ri": rng.randint(0, 9, 50).astype(np.int64)}
+    want = pd_join(lcols, rcols, ["a", "b"], how)
+    _check(_run_join(lcols, rcols, ["a", "b"], how, mode), want)
+
+
+@needs_pandas
+@pytest.mark.parametrize("how", ["inner", "left", "anti"])
+@pytest.mark.parametrize("mode", MODES)
+def test_filtered_left_anti_multi_key_parity(how, mode):
+    lcols = {"a": rng.randint(0, 9, 800).astype(np.int64),
+             "b": rng.randint(0, 4, 800).astype(np.int64),
+             "lv": rng.rand(800)}
+    rcols = {"a": np.repeat(np.arange(7), 3).astype(np.int64),
+             "b": np.tile(np.arange(3), 7).astype(np.int64),
+             "rv": rng.rand(21)}
+    want = pd_join(lcols, rcols, ["a", "b"], how, m=lcols["lv"] > 0.35)
+    got = _run_join(lcols, rcols, ["a", "b"], how, mode,
+                    pred_col="lv", pred_thresh=0.35)
+    _check(got, want)
+
+
+@pytest.mark.parametrize("how", ["left", "anti"])
+@pytest.mark.parametrize("mode", MODES)
+def test_all_miss_probe(how, mode):
+    """Every probe key misses: left fills every right cell, anti keeps
+    every row; dtypes must survive exactly."""
+    lcols = {"key": (rng.randint(0, 50, 300) + 1000).astype(np.int64),
+             "lv": rng.rand(300)}
+    rcols = {"key": np.arange(20, dtype=np.int64), "rv": rng.rand(20),
+             "ri": rng.randint(1, 9, 20).astype(np.int64)}
+    got = _got(_run_join(lcols, rcols, "key", how, mode))
+    np.testing.assert_array_equal(got["key"], lcols["key"])
+    if how == "left":
+        assert np.isnan(got["rv"]).all() and got["rv"].dtype == np.float64
+        assert (got["ri"] == 0).all() and got["ri"].dtype == np.int64
+    else:
+        assert set(got) == {"key", "lv"}
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_left_join_fill_dtypes(mode):
+    """Miss fills are per-dtype sentinels (NaN / 0 / False), never a
+    silent float upcast — int and bool columns keep their dtype."""
+    lcols = {"key": np.array([0, 1, 5, 7], np.int64)}
+    rcols = {"key": np.array([1, 5], np.int64),
+             "f": np.array([0.5, 0.25]),
+             "i": np.array([3, 4], np.int64),
+             "g": np.array([1.5, 2.5], np.float32)}
+    got = _got(_run_join(lcols, rcols, "key", "left", mode))
+    assert got["f"].dtype == np.float64 and np.isnan(got["f"][[0, 3]]).all()
+    assert got["i"].dtype == np.int64
+    np.testing.assert_array_equal(got["i"], [0, 3, 4, 0])
+    assert got["g"].dtype == np.float32 and np.isnan(got["g"][[0, 3]]).all()
+    np.testing.assert_allclose(got["g"][[1, 2]], [1.5, 2.5])
+
+
+@needs_pandas
+@pytest.mark.parametrize("how", ["left", "anti"])
+@pytest.mark.parametrize("which", ["left", "right", "both"])
+def test_left_anti_join_empty_sides(how, which):
+    lcols, rcols = _data(n=150, k=12)
+    if which in ("left", "both"):
+        lcols = {c: v[:0] for c, v in lcols.items()}
+    if which in ("right", "both"):
+        rcols = {c: v[:0] for c, v in rcols.items()}
+    want = pd_join(lcols, rcols, "key", how)
+    for mode in MODES:
+        got = _got(_run_join(lcols, rcols, "key", how, mode))
+        assert set(got) == set(want)
+        for c in want:
+            np.testing.assert_allclose(
+                got[c], np.asarray(want[c], got[c].dtype))
+
+
+@needs_pandas
+def test_left_anti_fused_single_probe_routing():
+    """An N-output-column left/anti join must launch exactly one build
+    and ONE fused probe under kernelize='always'."""
+    lcols, rcols = _data()
+    for how, ncols in (("left", 4), ("anti", 2)):
+        st: dict = {}
+        out = _run_join(lcols, rcols, "key", how, "always",
+                        collect_stats=st)
+        assert len(out.cols) == ncols
+        assert st.get("kernelize.hash_probe", 0) == 1, st.get("kernelplan")
+        if how == "left":
+            assert st.get("kernelize.dict_hash_build", 0) == 1
+        _check(out, pd_join(lcols, rcols, "key", how))
+
+
+@pytest.mark.parametrize("how", ["inner", "left", "anti"])
+def test_left_anti_multi_key_interpret_impl_parity(how):
+    lcols = {"a": rng.randint(0, 8, 256).astype(np.int64),
+             "b": rng.randint(0, 4, 256).astype(np.int64),
+             "lv": rng.rand(256)}
+    rcols = {"a": np.repeat(np.arange(6), 3).astype(np.int64),
+             "b": np.tile(np.arange(3), 6).astype(np.int64),
+             "rv": rng.rand(18)}
+    outs = {}
+    for impl in ("ref", "interpret"):
+        t = weldrel.Table(lcols, eager=False)
+        r = weldrel.Table(rcols, eager=False)
+        outs[impl] = _got(weldrel.Query(t).join(
+            r, on=["a", "b"], how=how, kernelize="always",
+            kernel_impl=impl))
+    for c in outs["ref"]:
+        np.testing.assert_allclose(outs["ref"][c], outs["interpret"][c])
+
+
+# ---------------------------------------------------------------------------
+# pinned key semantics: NaN keys raise, name collisions raise,
+# packed-space overflow raises — identically on every path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("side", ["probe", "build"])
+def test_nan_join_keys_raise_everywhere(mode, side):
+    lk = np.array([1.0, np.nan, 3.0]) if side == "probe" \
+        else np.array([1.0, 2.0, 3.0])
+    rk = np.array([1.0, np.nan]) if side == "build" \
+        else np.array([1.0, 2.0])
+    lcols = {"key": lk, "lv": np.arange(3.0)}
+    rcols = {"key": rk, "rv": np.arange(float(rk.size))}
+    with pytest.raises(ValueError, match="NaN"):
+        _run_join(lcols, rcols, "key", "inner", mode)
+
+
+@pytest.mark.parametrize("eager", [True, False])
+def test_join_output_name_collision_raises(eager):
+    """Left already has `v` and `v_r`; right's `v` would suffix onto the
+    existing `v_r` — silently overwriting before this fix."""
+    lcols = {"key": np.array([1, 2], np.int64),
+             "v": np.arange(2.0), "v_r": np.arange(2.0)}
+    rcols = {"key": np.array([1, 2], np.int64), "v": np.array([9.0, 8.0])}
+    t = weldrel.Table(lcols, eager=eager)
+    r = weldrel.Table(rcols, eager=eager)
+    with pytest.raises(ValueError, match="collision"):
+        weldrel.Query(t).join(r, on="key")
+    # a different suffix resolves it
+    out = weldrel.Query(t).join(r, on="key", suffix="_right")
+    assert set(out.cols) == {"key", "v", "v_r", "v_right"}
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_float_join_keys_compare_at_f32_on_every_path(mode):
+    """Float keys live in the packed key space's f32 bitcast on the
+    dict paths; the eager compare and the uniqueness check now use the
+    SAME packing, so build keys distinct only beyond f32 precision
+    raise (the dictmerger would silently sum them) and identical
+    payloads match identically everywhere."""
+    lcols = {"key": np.array([0.5, 2.25, 7.0]), "lv": np.arange(3.0)}
+    rcols = {"key": np.array([2.25, 0.5]), "rv": np.array([10.0, 20.0])}
+    got = _got(_run_join(lcols, rcols, "key", "inner", mode))
+    np.testing.assert_allclose(got["key"], [0.5, 2.25])
+    np.testing.assert_allclose(got["rv"], [20.0, 10.0])
+    # f32-colliding f64 build keys: conflated by the packed space, so
+    # the m:1 uniqueness guard must reject them up front on every path
+    bad = {"key": np.array([1.0, 1.0 + 1e-12]), "rv": np.array([1.0, 2.0])}
+    with pytest.raises(ValueError, match="unique build-side keys"):
+        _run_join(lcols, bad, "key", "inner", mode)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_mismatched_key_dtypes_raise_everywhere(mode):
+    """An int key against a float key would silently bitcast-collide on
+    the eager packed compare while the lazy dict raises a type error —
+    pinned: every path raises the same ValueError up front."""
+    lcols = {"key": np.array([1065353216], np.int64)}  # f32 bits of 1.0
+    rcols = {"key": np.array([1.0]), "rv": np.array([99.0])}
+    with pytest.raises(ValueError, match="dtype mismatch"):
+        _run_join(lcols, rcols, "key", "inner", mode)
+
+
+@pytest.mark.parametrize("how", ["inner", "left"])
+@pytest.mark.parametrize("mode", MODES)
+def test_bool_value_column_all_paths(how, mode):
+    """Bool build-side value columns ride the dictmerger as i8 and cast
+    back at the probe; left-join misses fill with False."""
+    lcols = {"key": np.array([0, 1, 5, 2], np.int64)}
+    rcols = {"key": np.array([1, 2, 3], np.int64),
+             "flag": np.array([True, False, True])}
+    got = _got(_run_join(lcols, rcols, "key", how, mode))
+    assert got["flag"].dtype == np.bool_
+    if how == "inner":
+        np.testing.assert_array_equal(got["key"], [1, 2])
+        np.testing.assert_array_equal(got["flag"], [True, False])
+    else:
+        np.testing.assert_array_equal(got["flag"],
+                                      [False, True, False, False])
+
+
+@pytest.mark.parametrize("eager", [True, False])
+def test_multi_key_beyond_32_bits_raises(eager):
+    lcols = {"a": np.array([2 ** 33, 1], np.int64),
+             "b": np.array([0, 1], np.int64)}
+    rcols = {"a": np.array([1], np.int64), "b": np.array([1], np.int64),
+             "rv": np.array([1.0])}
+    t = weldrel.Table(lcols, eager=eager)
+    r = weldrel.Table(rcols, eager=eager)
+    with pytest.raises(ValueError, match="32 bits"):
+        weldrel.Query(t).join(r, on=["a", "b"])
+    # INT32_MIN packs onto the hash EMPTY sentinel — reserved, raises
+    l2 = {"a": np.array([-(2 ** 31), 1], np.int64),
+          "b": np.array([0, 1], np.int64)}
+    t2 = weldrel.Table(l2, eager=eager)
+    with pytest.raises(ValueError, match="32 bits"):
+        weldrel.Query(t2).join(r, on=["a", "b"])
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_negative_zero_float_keys_match_everywhere(mode):
+    """IEEE says -0.0 == 0.0; the packed bitcast disagrees unless the
+    packing normalizes — a probe 0.0 must match a build -0.0 on every
+    path, and a build side holding both zeros must fail the m:1
+    uniqueness guard."""
+    lcols = {"key": np.array([0.0, 1.0]), "lv": np.arange(2.0)}
+    rcols = {"key": np.array([-0.0, 1.0]), "rv": np.array([5.0, 6.0])}
+    got = _got(_run_join(lcols, rcols, "key", "inner", mode))
+    np.testing.assert_allclose(got["rv"], [5.0, 6.0])
+    dup = {"key": np.array([0.0, -0.0]), "rv": np.array([1.0, 2.0])}
+    with pytest.raises(ValueError, match="unique build-side keys"):
+        _run_join(lcols, dup, "key", "inner", mode)
 
 
 def test_composed_dict_build_parity_ref_vs_interpret():

@@ -100,6 +100,32 @@ def test_group_agg_sum_parity():
         assert ge[key][1] == gl[key][1]  # implicit count
 
 
+def test_group_agg_int_column_dtype_parity():
+    """Integer value columns must aggregate as ints on the eager path
+    (it used to seed every accumulator with 0.0 and float them) and
+    decode to the same python types the lazy dict decode produces."""
+    k = rng.randint(0, 5, 120).astype(np.int64)
+    vi = rng.randint(0, 100, 120).astype(np.int64)
+    vf = rng.rand(120)
+    te, tl = _tables({"k": k, "vi": vi, "vf": vf})
+
+    def q(t, **kw):
+        return weldrel.Query(t).group_agg(
+            [t.col("k")],
+            {"vi": (t.col("vi"), "+"), "vf": (t.col("vf"), "+")}, **kw)
+
+    ge = q(te)
+    gl = q(tl, capacity=16)
+    assert set(ge) == set(gl)
+    for key in ge:
+        for a, b in zip(ge[key], gl[key]):
+            assert type(a) is type(b), (key, ge[key], gl[key])
+            np.testing.assert_allclose(a, b, rtol=1e-10)
+        assert isinstance(ge[key][0], int)    # int column stays int
+        assert isinstance(ge[key][1], float)  # float column stays float
+        assert isinstance(ge[key][-1], int)   # implicit count
+
+
 # ---------------------------------------------------------------------------
 # autotune cache: atomic writes, corrupt files tolerated with a warning
 # ---------------------------------------------------------------------------

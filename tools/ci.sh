@@ -34,5 +34,7 @@ python -m benchmarks.bench_kernelplan --smoke
 
 echo "== join smoke ablation (hash-build/probe routing check) =="
 # asserts the hash-join build+probe kernels route under auto at the
-# large config and are cost-gated at the tiny one
+# large config and are cost-gated at the tiny one, and that inner/
+# left/anti/multi-key joins each take exactly ONE horizontally fused
+# probe launch (N probes for an N-column join is a fusion regression)
 python -m benchmarks.bench_join --smoke
