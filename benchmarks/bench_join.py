@@ -4,7 +4,9 @@ A fact-to-dimension (m:1) join — the Spark SQL workload the paper's
 §6 port leans on — timed three ways over the SAME fused Weld program,
 plus left/anti/multi-key variants that must each take exactly ONE
 horizontally fused probe launch (all output columns share one
-membership kernel):
+membership kernel), plus m:n fan-out configs (fanout 1/4/32, duplicate
+build keys) that must each take exactly ONE ``group_build`` and ONE
+``group_probe`` launch (the groupbuilder expansion route):
 
 * ``kernelize="off"``   — generic lowering (vectorized binary-search
   probe + sort-based dictmerger build);
@@ -43,6 +45,23 @@ def make_join_data(n: int, k: int, seed: int = 3):
     rcols = {
         "key": np.arange(k, dtype=np.int64),
         "rate": rng.rand(k),
+    }
+    return lcols, rcols
+
+
+def make_mn_data(n: int, k: int, fanout: int, seed: int = 7):
+    """An m:n config: every build key appears `fanout` times.  At
+    fanout=1 one key row is duplicated so the m:n (groupbuilder) path
+    still engages — an all-unique build side takes the m:1 route."""
+    rng = np.random.RandomState(seed)
+    rkey = np.repeat(np.arange(k, dtype=np.int64), fanout)
+    if fanout == 1:
+        rkey = np.concatenate([rkey, rkey[:1]])
+    rcols = {"key": rkey, "rate": rng.rand(rkey.size)}
+    lcols = {
+        "key": rng.randint(0, 2 * k, n).astype(np.int64),  # ~50% match
+        "qty": rng.rand(n) * 40.0,
+        "price": rng.rand(n) * 100.0,
     }
     return lcols, rcols
 
@@ -139,6 +158,37 @@ def run(emit, n=1_000_000, smoke=False, tol=0.35):
     s.record("join/multikey_kernelized",
              time_fn(lambda: weld_join(mlcols, mrcols, "always",
                                        on=["key", "key2"])))
+
+    # -- m:n fan-out configs: groupbuilder expansion, ONE group_probe ------
+    n_mn = min(n, 200_000)
+    for fanout in (1, 4, 32):
+        kmn = max(min(k, 2048) // max(fanout, 1), 8)
+        ml, mr = make_mn_data(n_mn, kmn, fanout)
+        stg: dict = {}
+        outg = weld_join(ml, mr, "always", collect_stats=stg)
+        # expansion-size oracle: sum of per-probe-row build match counts
+        uniq, cnts = np.unique(mr["key"], return_counts=True)
+        cnt_map = np.zeros(2 * kmn, np.int64)
+        cnt_map[uniq] = cnts
+        want_rows = int(cnt_map[ml["key"]].sum())
+        rows = weldrel._host(outg.cols["price"]).shape[0]
+        assert rows == want_rows, (fanout, rows, want_rows)
+        rows0 = weldrel._host(
+            weld_join(ml, mr, "off").cols["price"]).shape[0]
+        assert rows0 == want_rows, (fanout, rows0, want_rows)
+        if smoke:
+            # exactly ONE group build + ONE fan-out probe per m:n join,
+            # whatever the output width (N launches = a fusion regression)
+            assert stg.get("kernelize.group_build", 0) == 1, \
+                f"m:n fanout={fanout} build: {stg.get('kernelplan')}"
+            assert stg.get("kernelize.group_probe", 0) == 1, \
+                f"m:n fanout={fanout} probe: {stg.get('kernelplan')}"
+        s.record(f"join/mn_fanout{fanout}_jnp",
+                 time_fn(lambda: weld_join(ml, mr, "off")),
+                 baseline_of=f"mn{fanout}")
+        s.record(f"join/mn_fanout{fanout}_kernelized",
+                 time_fn(lambda: weld_join(ml, mr, "always")),
+                 vs=f"mn{fanout}")
 
     # -- tiny config: the cost gate must keep the jnp lowering -------------
     tl, tr = make_join_data(256, 32, seed=5)

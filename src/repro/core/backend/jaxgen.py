@@ -21,6 +21,7 @@ Loop lowering ("vectorization", paper Table 3, adapted per DESIGN.md §2):
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -402,6 +403,231 @@ def _dict_find(d: WDict, key):
     return pos, found, scalar
 
 
+def _group_find(g: WGroup, key):
+    """Locate batched probe keys in a groupbuilder result's sorted key
+    columns.  Returns ``(pos, found, sizes)`` — clipped slot positions,
+    a hit mask, and the per-query group size (0 on a miss).  Parked
+    slots (>= count) are neutralized before the binary search; a
+    poisoned group (negative count) matches nothing."""
+    packed = _pack_keys(g.keys)
+    cap = packed.shape[0]
+    valid_n = jnp.maximum(jnp.asarray(g.count, jnp.int64), 0)
+    kt = (
+        tuple(jnp.asarray(a) for a in key)
+        if isinstance(key, tuple) else jnp.asarray(key)
+    )
+    q = _pack_keys(kt)
+    if cap == 0:  # statically empty build side: nothing can match
+        z = jnp.zeros(q.shape, jnp.int64)
+        return z.astype(jnp.int32), z.astype(bool), z
+    big = jnp.iinfo(jnp.int64).max
+    table = jnp.where(jnp.arange(cap) < valid_n, packed, big)
+    pos = jnp.clip(jnp.searchsorted(table, q), 0, cap - 1).astype(jnp.int32)
+    found = (table[pos] == q) & (pos < valid_n)
+    offs = jnp.asarray(g.offsets, jnp.int64)
+    sizes_all = offs[1:] - offs[:-1]
+    sizes = jnp.where(found, sizes_all[pos], jnp.int64(0))
+    return pos, found, sizes
+
+
+def expand_rows(cnt, out_cap: int):
+    """Two-phase variable-length expansion: per-row repeat counts ->
+    ``(rows, ordinals, total)``.  ``rows[j]`` is the source row of output
+    slot ``j`` (exclusive-scan offsets + binary search), ``ordinals[j]``
+    its position within that row's run; ``total`` is the dynamic output
+    length materialized into the static ``out_cap`` buffer."""
+    n = cnt.shape[0]
+    cnt = jnp.asarray(cnt, jnp.int64)
+    total = cnt.sum() if n else jnp.int64(0)
+    if out_cap == 0 or n == 0:
+        z = jnp.zeros((out_cap,), jnp.int64)
+        return z, z, total
+    ends = jnp.cumsum(cnt)
+    starts = ends - cnt
+    j = jnp.arange(out_cap, dtype=jnp.int64)
+    rows = jnp.clip(jnp.searchsorted(ends, j, side="right"), 0, n - 1)
+    ordinals = j - starts[rows]
+    return rows, ordinals, total
+
+
+def group_expand(g: WGroup, pos, found, sizes, mask, how: str,
+                 out_cap: int, col_specs):
+    """Materialize an m:n probe's expanded output columns: match counts
+    -> exclusive scan -> repeat/gather, all columns sharing ONE
+    expansion index.  ``col_specs`` entries are ``("expr", col)`` (a
+    whole probe-side column, repeated per match) or ``("gather", data,
+    fill)`` (a build-side column gathered through the group's stored
+    row payload; ``fill`` selects left-join miss rows).  Poison
+    (negative group count, or a dynamic total exceeding the static
+    capacity) propagates as a negative output count."""
+    n = pos.shape[0]
+    if how == "inner":
+        cnt = jnp.where(found & mask, sizes, jnp.int64(0))
+    elif how == "left":  # misses emit ONE fill row each
+        cnt = jnp.where(mask, jnp.where(found, sizes, jnp.int64(1)),
+                        jnp.int64(0))
+    else:
+        raise WeldCompileError(f"group expansion how={how!r}")
+    rows, ordinals, total = expand_rows(cnt, out_cap)
+    total = jnp.where(total > out_cap, -total - 1, total)
+    total = jnp.where(jnp.asarray(g.count, jnp.int64) < 0,
+                      jnp.int64(-1), total)
+    vals = g.values
+    if isinstance(vals, tuple):
+        raise WeldCompileError("group expansion needs a scalar payload")
+    nv = vals.shape[0]
+    offs = jnp.asarray(g.offsets, jnp.int64)
+    if n == 0 or out_cap == 0:
+        frow = jnp.zeros((out_cap,), bool)
+        payload = jnp.zeros((out_cap,), jnp.int64)
+    else:
+        frow = found[rows]
+        grp = jnp.clip(pos[rows], 0, offs.shape[0] - 2)
+        if nv == 0:
+            payload = jnp.zeros((out_cap,), jnp.int64)
+        else:
+            bpos = jnp.clip(offs[grp] + ordinals, 0, nv - 1)
+            payload = jnp.asarray(vals)[bpos]
+    outs = []
+    for spec in col_specs:
+        if spec[0] == "expr":
+            col = spec[1]
+            out = col[rows] if (n and out_cap) else jnp.zeros(
+                (out_cap,), col.dtype)
+        else:
+            rv, fill = spec[1], spec[2]
+            if rv.shape[0] == 0 or out_cap == 0:
+                out = jnp.zeros((out_cap,), rv.dtype)
+                if fill is not None:
+                    out = jnp.full((out_cap,), jnp.asarray(fill, rv.dtype))
+            else:
+                out = rv[jnp.clip(payload, 0, rv.shape[0] - 1)]
+            if how == "left" and out_cap:
+                out = jnp.where(frow, out, jnp.asarray(fill, rv.dtype))
+        outs.append(out)
+    return tuple(WVec(o, count=total) for o in outs)
+
+
+@dataclass
+class GroupProbeShape:
+    """Destructured m:n probe loop (see :func:`match_group_probe`)."""
+
+    d: "ir.Ident"                 # the groupbuilder dict
+    key_parts: list               # per-probe-row key column exprs
+    pred: Optional["ir.Expr"]     # optional elementwise row predicate
+    how: str                      # "inner" | "left"
+    cols: list                    # ("expr", e) | ("gather", rcol Ident)
+    fills: list                   # per-column left-miss Literal (or None)
+    builders: list                # the output NewBuilder(VecBuilder)s
+
+
+def match_group_probe(loop: ir.For) -> Optional[GroupProbeShape]:
+    """Structurally match weldrel's m:n join probe loop — the canonical
+    variable-length-expansion form shared by the generic lowering and
+    the kernel planner's ``group_probe`` route:
+
+        for(V.., {vecbuilder..}, (b,i,x) =>
+            [if(pred,]
+              [if(keyexists(d, k),]                        # left only
+                for(grouplookup(d, k), b, (b2,i2,r) =>
+                    {merge(b2.$k, f(x) | lookup(RCOL, r))..})
+              [, {merge(b.$k, f(x) | fill)..})]            # left misses
+            [, b)])
+
+    Returns ``None`` when the loop is anything else (the generic
+    accumulator lowering then applies)."""
+    nb = loop.builder
+    if not (isinstance(nb, ir.MakeStruct) and nb.items and all(
+            isinstance(p, ir.NewBuilder) and isinstance(p.ty, wt.VecBuilder)
+            and isinstance(p.ty.elem, wt.Scalar) for p in nb.items)):
+        return None
+    if len(loop.func.params) != 3:
+        return None
+    b, i, x = loop.func.params
+    body = loop.func.body
+    pred: Optional[ir.Expr] = None
+    if (isinstance(body, ir.If) and isinstance(body.on_false, ir.Ident)
+            and body.on_false.name == b.name):
+        pred, body = body.cond, body.on_true
+    how, miss, ke = "inner", None, None
+    if isinstance(body, ir.If) and isinstance(body.cond, ir.KeyExists):
+        how, ke, miss, body = "left", body.cond, body.on_false, body.on_true
+    if not (isinstance(body, ir.For) and len(body.iters) == 1
+            and body.iters[0].is_plain
+            and isinstance(body.iters[0].data, ir.GroupLookup)):
+        return None
+    gl = body.iters[0].data
+    d = gl.expr
+    if not (isinstance(d, ir.Ident) and isinstance(d.ty, wt.DictType)
+            and isinstance(d.ty.val, wt.Vec)):
+        return None
+    if how == "left" and not (
+            isinstance(ke.expr, ir.Ident) and ke.expr.name == d.name
+            and ir.canon_key(ke.key) == ir.canon_key(gl.key)):
+        return None
+    if not (isinstance(body.builder, ir.Ident)
+            and body.builder.name == b.name):
+        return None
+    if len(body.func.params) != 3:
+        return None
+    bi, ii, ri = body.func.params
+    ibody = body.func.body
+    if not (isinstance(ibody, ir.MakeStruct)
+            and len(ibody.items) == len(nb.items)):
+        return None
+
+    def merge_into(item: ir.Expr, k: int, bname: str) -> Optional[ir.Expr]:
+        if (isinstance(item, ir.Merge)
+                and isinstance(item.builder, ir.GetField)
+                and item.builder.index == k
+                and isinstance(item.builder.expr, ir.Ident)
+                and item.builder.expr.name == bname):
+            return item.value
+        return None
+
+    cols: list = []
+    fills: list = []
+    for k, item in enumerate(ibody.items):
+        v = merge_into(item, k, bi.name)
+        if v is None:
+            return None
+        if (isinstance(v, ir.Lookup) and v.default is None
+                and isinstance(v.expr, ir.Ident)
+                and isinstance(v.expr.ty, wt.Vec)
+                and isinstance(v.index, ir.Ident)
+                and v.index.name == ri.name):
+            cols.append(("gather", v.expr))
+        else:
+            if set(ir.free_vars(v)) & {ri.name, ii.name, bi.name, d.name}:
+                return None
+            cols.append(("expr", v))
+        fills.append(None)
+    if how == "left":
+        if not (isinstance(miss, ir.MakeStruct)
+                and len(miss.items) == len(nb.items)):
+            return None
+        for k, item in enumerate(miss.items):
+            mv = merge_into(item, k, b.name)
+            if mv is None:
+                return None
+            kind, payload = cols[k]
+            if kind == "gather":
+                if not isinstance(mv, ir.Literal):
+                    return None
+                fills[k] = mv
+            elif ir.canon_key(mv) != ir.canon_key(payload):
+                return None  # probe columns must fill with themselves
+    key = gl.key
+    key_parts = (
+        list(key.items) if isinstance(key, ir.MakeStruct) else [key]
+    )
+    for e2 in key_parts + ([pred] if pred is not None else []):
+        if d.name in ir.free_vars(e2):
+            return None
+    return GroupProbeShape(d=d, key_parts=key_parts, pred=pred, how=how,
+                           cols=cols, fills=fills, builders=list(nb.items))
+
+
 _UNARY_JAX = {
     "neg": jnp.negative,
     "not": jnp.logical_not,
@@ -617,8 +843,19 @@ class Emitter:
     def _ev_KeyExists(self, x: ir.KeyExists, env, ctx):
         d = self.ev(x.expr, env, ctx)
         k = self.ev(x.key, env, ctx)
+        if isinstance(d, WGroup):
+            pos, found, _ = _group_find(d, k)
+            return found
         pos, found, scalar = _dict_find(d, k)
         return found[0] if scalar else found
+
+    def _ev_GroupLookup(self, x: ir.GroupLookup, env, ctx):
+        raise WeldCompileError(
+            "grouplookup has data-dependent length and lowers only as "
+            "the iteration source of an m:n probe loop (the shape "
+            "match_group_probe recognizes); restructure the program "
+            "around that canonical expansion form"
+        )
 
     def _ev_CUDF(self, x: ir.CUDF, env, ctx):
         if ctx is not None and any(
@@ -741,10 +978,91 @@ class Emitter:
         return acc
 
     def _ev_Result(self, x: ir.Result, env, ctx):
+        if ctx is None and isinstance(x.builder, ir.For):
+            shape = match_group_probe(x.builder)
+            if shape is not None:
+                return self._lower_group_probe(x.builder, shape, env)
         acc = self.ev(x.builder, env, ctx)
         if isinstance(acc, tuple):
             return tuple(self._finalize(a) for a in acc)
         return self._finalize(acc)
+
+    def _lower_group_probe(self, loop: ir.For, shape: GroupProbeShape, env):
+        """Generic (kernel-free) lowering of the m:n join probe: one
+        binary-search membership pass over the group's sorted keys, then
+        the shared two-phase expansion (match counts -> exclusive scan ->
+        repeat/gather) with every output column riding one expansion
+        index.  Output length is data-dependent; the static buffer
+        capacity comes from the vecbuilders' size hints."""
+        g = self.ev(shape.d, env, None)
+        if not isinstance(g, WGroup):
+            raise WeldCompileError("group probe expects a groupbuilder dict")
+        seqs = [self.ev(it, env, None) for it in loop.iters]
+        n = min(s.capacity() for s in seqs)
+        mask = None
+        for s in seqs:
+            if not s.is_dense:
+                m = jnp.arange(n) < s.count
+                mask = m if mask is None else mask & m
+        b_p, i_p, x_p = loop.func.params
+        env2 = dict(env)
+        env2[i_p.name] = jnp.arange(n, dtype=jnp.int64)
+        env2[x_p.name] = (
+            _first_n(seqs[0].data, n) if len(seqs) == 1
+            else tuple(_first_n(s.data, n) for s in seqs)
+        )
+
+        def col(v):
+            a = jnp.asarray(v)
+            return a if a.ndim >= 1 and a.shape[0] == n \
+                else jnp.broadcast_to(a, (n,) + a.shape)
+
+        key_cols = [col(self.ev(kp, env2, None)) for kp in shape.key_parts]
+        key = tuple(key_cols) if len(key_cols) > 1 else key_cols[0]
+        pos, found, sizes = _group_find(g, key)
+        pm = mask
+        if shape.pred is not None:
+            pv = col(self.ev(shape.pred, env2, None)).astype(bool)
+            pm = pv if pm is None else pm & pv
+        if pm is None:
+            pm = jnp.ones((n,), bool)
+        hint = shape.builders[0].size_hint
+        out_cap = (
+            _static_eval(hint, self.input_shapes)
+            if hint is not None else None
+        )
+        if out_cap is None:
+            raise WeldCompileError(
+                "m:n group probe needs a static output capacity "
+                "(vecbuilder size hint)"
+            )
+        if self.memory_limit is not None:
+            self.est_bytes += sum(
+                int(out_cap) * np.dtype(p.ty.elem.np_dtype).itemsize
+                for p in shape.builders
+            )
+            if self.est_bytes > self.memory_limit:
+                raise WeldMemoryError(
+                    f"estimated temp bytes {self.est_bytes} (incl. m:n "
+                    f"join expansion) exceed memory limit "
+                    f"{self.memory_limit}"
+                )
+        col_specs = []
+        for (kind, payload), fill in zip(shape.cols, shape.fills):
+            if kind == "expr":
+                col_specs.append(("expr", col(self.ev(payload, env2, None))))
+            else:
+                rv = self.ev(payload, env, None)
+                if not isinstance(rv, WVec) or not rv.is_dense:
+                    raise WeldCompileError(
+                        "group probe gathers need dense build columns"
+                    )
+                col_specs.append(
+                    ("gather", rv.data,
+                     None if fill is None else fill.value)
+                )
+        return group_expand(g, pos, found, sizes, pm, shape.how,
+                            int(out_cap), col_specs)
 
     def _finalize(self, acc):
         if isinstance(acc, (_MergerAcc, _VecBuilderAcc, _VecMergerAcc)):

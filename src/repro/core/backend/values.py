@@ -98,6 +98,15 @@ class WGroup:
 
     def to_numpy(self) -> dict:
         n = int(self.count)
+        if n < 0:
+            # kernel-planned group builds flag capacity overflow (more
+            # distinct keys than the builder capacity) by negating the
+            # count, mirroring the WDict convention
+            raise RuntimeError(
+                "kernelized group build observed more distinct keys than "
+                "the builder capacity; rerun with kernelize=False or "
+                "raise the builder capacity"
+            )
         offs = np.asarray(self.offsets)
         kcols = [np.asarray(a) for a in
                  (self.keys if isinstance(self.keys, tuple) else (self.keys,))]

@@ -224,6 +224,10 @@ def interpret(e: ir.Expr, env: Dict[str, object] | None = None):
             return c[int(i)]
         if isinstance(x, ir.KeyExists):
             return _hashable(rec(x.key, env)) in rec(x.expr, env)
+        if isinstance(x, ir.GroupLookup):
+            d = rec(x.expr, env)
+            k = _hashable(rec(x.key, env))
+            return list(d.get(k, []))  # miss -> EMPTY vector
         if isinstance(x, ir.CUDF):
             fn = lookup_cudf_host(x.name)
             return fn(*[rec(a, env) for a in x.args])

@@ -188,6 +188,18 @@ class KeyExists(Expr):
 
 
 @dataclass(frozen=True)
+class GroupLookup(Expr):
+    """``grouplookup(d, k)``: the group vector for key ``k`` in a
+    groupbuilder result (``dict[K, vec[V]]``).  A missing key yields the
+    EMPTY vector — the single-pass probe form m:n hash joins iterate
+    (a probe row with no build-side match simply expands to zero rows,
+    no separate ``keyexists`` pass needed)."""
+
+    expr: Expr
+    key: Expr
+
+
+@dataclass(frozen=True)
 class CUDF(Expr):
     """Call to an external (C in the paper; host-registered here) function."""
 
@@ -533,6 +545,19 @@ def typeof(e: Expr, env: Optional[Dict[str, WeldType]] = None) -> WeldType:
                 raise WeldTypeError("keyexists on non-dict")
             rec(x.key, env)
             return wt.Bool
+        if isinstance(x, GroupLookup):
+            ct = rec(x.expr, env)
+            if not (isinstance(ct, wt.DictType)
+                    and isinstance(ct.val, wt.Vec)):
+                raise WeldTypeError(
+                    f"grouplookup requires dict[K, vec[V]], got {ct}"
+                )
+            kt = rec(x.key, env)
+            if kt != ct.key:
+                raise WeldTypeError(
+                    f"grouplookup key type {kt} != dict key {ct.key}"
+                )
+            return ct.val
         if isinstance(x, CUDF):
             for a in x.args:
                 rec(a, env)

@@ -248,6 +248,57 @@ def cost_hash_probe(meta: dict) -> CostEstimate:
                    f"n={n} K={k} cols={cols} pad={np_ - n}")
 
 
+def cost_group_build(meta: dict) -> CostEstimate:
+    """CSR group build (hash-to-slot + slot histogram + payload
+    ordering sort) vs. the generic sort-based groupbuilder finalize.
+    Both routes order the payload rows; the kernel replaces the full
+    keyed sort + segment machinery with the serial hash/histogram
+    chains (random access) and a narrower ordering sort."""
+    n, k = meta.get("n"), meta.get("k")
+    if not n or not k:
+        return REJECT_UNKNOWN
+    e = meta.get("elem_bytes", 8)
+    nk = max(meta.get("n_keys", 1), 1)
+    block = meta.get("block", 256)
+    np_ = _pad(n, block)
+    lgn = max(log2(max(n, 2)), 1.0)
+    # serial slot probes + histogram stores + the CSR payload ordering
+    # sort + table/offsets traffic; extra staged key columns beyond the
+    # packed stream cost one i64 pass each
+    k_bytes = (np_ * (8 + 4) * SCATTER_PENALTY + n * 4 * SCATTER_PENALTY
+               + n * 8 * lgn + 4 * k * 8 + n * (nk - 1) * 8 + n * e)
+    kernel_s = _roofline_s(k_bytes, float(n)) + 2 * LAUNCH_OVERHEAD_S
+    j_bytes = n * SORT_BYTES_PER_ROW * lgn
+    jnp_s = _roofline_s(j_bytes, n)
+    return _decide(kernel_s, jnp_s, f"n={n} K={k} keys={nk}")
+
+
+def cost_group_probe(meta: dict) -> CostEstimate:
+    """m:n fan-out probe: the fused one-hot membership + match-count
+    tile vs. the generic vectorized binary search.  BOTH routes then
+    pay the shared two-phase expansion (exclusive scan + repeat/gather
+    into the static expansion buffer), priced by the expansion factor
+    ``out``/``n`` the planner lifts off the vecbuilder size hints."""
+    n, k = meta.get("n"), meta.get("k")
+    if not n or not k:
+        return REJECT_UNKNOWN
+    out = meta.get("out") or n
+    cols = max(meta.get("cols", 1), 1)
+    e = meta.get("elem_bytes", 8)
+    block = meta.get("block", 512)
+    np_ = _pad(n, block)
+    # scan + out-row binary search + per-column repeated/gathered output
+    expand_bytes = n * 8.0 + out * (8 + cols * e)
+    k_bytes = np_ * (8 + 4 + 1 + 4) + k * 8 + expand_bytes
+    k_flops = 1.0 * np_ * k
+    kernel_s = _roofline_s(k_bytes, k_flops) + LAUNCH_OVERHEAD_S
+    lgk = max(log2(max(k, 2)), 1.0)
+    j_bytes = n * 8 * lgk * BSEARCH_PENALTY + expand_bytes
+    jnp_s = _roofline_s(j_bytes, n * lgk)
+    return _decide(kernel_s, jnp_s,
+                   f"n={n} K={k} cols={cols} out={out}")
+
+
 def cost_matmul(meta: dict) -> CostEstimate:
     """Tiled VMEM matmul vs. XLA dot: identical arithmetic, so the gate
     is tile padding (XLA pads to 128 internally) plus launch overhead."""

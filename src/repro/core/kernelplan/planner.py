@@ -56,6 +56,7 @@ from typing import Dict, List, Optional, Tuple
 
 from .. import ir
 from .. import wtypes as wt
+from ..backend.jaxgen import match_group_probe as _group_probe_shape
 from . import cost as _cost
 from . import registry as reg
 
@@ -77,7 +78,7 @@ def _is_ident(e: ir.Expr, name: str) -> bool:
 
 
 #: kernels whose vector result is padded (count-carrying), NOT dense.
-_PADDED_RESULT_KERNELS = frozenset({"hash_probe"})
+_PADDED_RESULT_KERNELS = frozenset({"hash_probe", "group_probe"})
 
 
 def _dense_expr(e: ir.Expr, dense: Shapes) -> bool:
@@ -666,6 +667,145 @@ def _match_hash_probe_fused(loop: ir.For,
     )
 
 
+def _match_group_build(loop: ir.For, dense: Shapes) -> Optional[ir.KernelCall]:
+    """Groupbuilder build (key -> growing vector of row payloads) via the
+    hash route: hash-to-slot + CSR slot-histogram compaction — the m:n
+    hash-join build side.  Keys are scalar ints or a struct of int
+    columns (packed like the dictmerger hash build); the payload is one
+    scalar (the join stores the build-row index)."""
+    spec = reg.available("group_build")
+    if spec is None:
+        return None
+    nb = loop.builder
+    if not (
+        isinstance(nb, ir.NewBuilder)
+        and isinstance(nb.ty, wt.GroupBuilder)
+    ):
+        return None
+    kt, vt = nb.ty.key, nb.ty.val
+    key_tys = kt.fields if isinstance(kt, wt.Struct) else (kt,)
+    if not all(isinstance(t, wt.Scalar) and t.is_int for t in key_tys):
+        return None
+    if not _scalar_kind_ok(vt, spec):
+        return None
+    if not isinstance(nb.arg, ir.Literal):
+        return None  # capacity must be a static literal
+    cap = int(nb.arg.value)
+    if spec.max_segments is not None and cap > spec.max_segments:
+        return None
+    b, i, x = loop.func.params
+    body = loop.func.body
+    cond: Optional[ir.Expr] = None
+    if (
+        isinstance(body, ir.If)
+        and isinstance(body.on_true, ir.Merge)
+        and _is_ident(body.on_false, b.name)
+    ):
+        cond, body = body.cond, body.on_true
+    if not (isinstance(body, ir.Merge) and _is_ident(body.builder, b.name)):
+        return None
+    key_e, val_e = _destructure_pair(body.value)
+    if isinstance(kt, wt.Struct):
+        if not (isinstance(key_e, ir.MakeStruct)
+                and len(key_e.items) == len(key_tys)):
+            return None
+        key_exprs = list(key_e.items)
+    else:
+        key_exprs = [key_e]
+    per_elem = {i.name, x.name}
+    for e2 in key_exprs + [val_e]:
+        if not _elementwise_ok(e2, {b.name}, per_elem):
+            return None
+    if cond is not None and not _elementwise_ok(cond, {b.name}, per_elem):
+        return None
+    fns = [ir.Lambda((i, x), k) for k in key_exprs]
+    fns.append(ir.Lambda((i, x), val_e))
+    if cond is not None:
+        fns.append(ir.Lambda((i, x), cond))
+    return ir.KernelCall(
+        kernel=spec.name,
+        args=tuple(it.data for it in loop.iters),
+        ret_ty=wt.DictType(kt, wt.Vec(vt)),
+        params=(("capacity", cap), ("n_keys", len(key_exprs)),
+                ("key_nps", tuple(
+                    str(t.np_dtype.__name__) for t in key_tys)),
+                ("has_pred", cond is not None)),
+        fns=tuple(fns),
+    )
+
+
+def _match_group_probe(loop: ir.For,
+                       dense: Shapes) -> Optional[ir.KernelCall]:
+    """The m:n join fan-out probe: the canonical variable-length
+    expansion loop (see jaxgen ``match_group_probe`` for the exact
+    shape) routed as ONE ``group_probe`` launch — membership and the
+    per-row match-count pass fused into a single one-hot kernel, with
+    every output column sharing the expansion index the adapter builds
+    from it.  The static output capacity comes from the vecbuilders'
+    size hints (weldrel stamps the exact unfiltered expansion size)."""
+    spec = reg.available("group_probe")
+    if spec is None:
+        return None
+    shape = _group_probe_shape(loop)
+    if shape is None:
+        return None
+    if not all(p.ty.elem.kind in spec.elem_kinds for p in shape.builders):
+        return None
+    hint = shape.builders[0].size_hint
+    if not isinstance(hint, ir.Literal):
+        return None  # output capacity must be static to size the buffers
+    out_cap = int(hint.value)
+    kt = shape.d.ty.key
+    key_tys = kt.fields if isinstance(kt, wt.Struct) else (kt,)
+    if not all(isinstance(t, wt.Scalar) and t.is_int for t in key_tys):
+        return None
+    if len(shape.key_parts) != len(key_tys):
+        return None
+    b, i, x = loop.func.params
+    per_elem = {i.name, x.name}
+    banned = {b.name, shape.d.name}
+    for e2 in shape.key_parts:
+        if not _elementwise_ok(e2, banned, per_elem):
+            return None
+    if shape.pred is not None and not _elementwise_ok(
+            shape.pred, banned, per_elem):
+        return None
+    args: List[ir.Expr] = [shape.d] + [it.data for it in loop.iters]
+    cols: List[Tuple[str, int]] = []
+    exprs: List[ir.Expr] = []
+    fills: List[object] = []
+    for (kind, payload), fl in zip(shape.cols, shape.fills):
+        if kind == "gather":
+            # build columns are gathered outside the kernel: they must
+            # be dense program inputs the adapter can index directly
+            if not (isinstance(payload, ir.Ident)
+                    and payload.name in dense):
+                return None
+            cols.append(("gather", len(args)))
+            args.append(payload)
+            fills.append(None if fl is None else fl.value)
+        else:
+            if not _elementwise_ok(payload, banned, per_elem):
+                return None
+            cols.append(("expr", len(exprs)))
+            exprs.append(payload)
+            fills.append(None)
+    fns = [ir.Lambda((i, x), p) for p in shape.key_parts]
+    fns += [ir.Lambda((i, x), v) for v in exprs]
+    if shape.pred is not None:
+        fns.append(ir.Lambda((i, x), shape.pred))
+    return ir.KernelCall(
+        kernel=spec.name,
+        args=tuple(args),
+        ret_ty=wt.Struct(tuple(wt.Vec(p.ty.elem) for p in shape.builders)),
+        params=(("how", shape.how), ("n_keys", len(shape.key_parts)),
+                ("n_iters", len(loop.iters)), ("cols", tuple(cols)),
+                ("fills", tuple(fills)), ("out_cap", out_cap),
+                ("has_pred", shape.pred is not None)),
+        fns=tuple(fns),
+    )
+
+
 def _match_map_chain(loop: ir.For, dense: Shapes) -> Optional[ir.KernelCall]:
     spec = reg.available("map_elementwise")
     if spec is None:
@@ -722,12 +862,18 @@ def _match_loop(e: ir.Result, dense: Shapes,
                 return _match_hash_build(loop, dense)
             return (_match_dict_group(loop, dense)
                     or _match_hash_build(loop, dense))
+        if isinstance(nb.ty, wt.GroupBuilder):
+            # group builds are only routed when probed (the m:n join
+            # build side); a standalone groupbuilder result decodes on
+            # the host and keeps the generic keyed finalize
+            return _match_group_build(loop, dense) if probed else None
         if isinstance(nb.ty, wt.VecBuilder):
             return (_match_map_chain(loop, dense)
                     or _match_hash_probe(loop, dense))
     if isinstance(nb, ir.MakeStruct):
         return (_match_filter_reduce(loop, dense)
-                or _match_hash_probe_fused(loop, dense))
+                or _match_hash_probe_fused(loop, dense)
+                or _match_group_probe(loop, dense))
     return None
 
 
@@ -850,6 +996,27 @@ def _call_meta(kc: ir.KernelCall, dense: Shapes,
         # cost model prices the shared membership tile against them all
         meta["cols"] = max(len(params.get("cols", ())), 1)
         meta["elem_bytes"] = _elem_bytes(kc.ret_ty)
+    elif kc.kernel == "group_build":
+        meta["n"] = next(
+            (v for v in (_len_of(a, dense) for a in kc.args) if v), None
+        )
+        meta["k"] = params.get("capacity")
+        meta["n_keys"] = params.get("n_keys", 1)
+        meta["elem_bytes"] = _elem_bytes(kc.ret_ty)
+    elif kc.kernel == "group_probe":
+        n_iters = params.get("n_iters", 1)
+        meta["n"] = next(
+            (v for v in (_len_of(a, dense)
+                         for a in kc.args[1:1 + n_iters]) if v), None
+        )
+        d = kc.args[0]
+        meta["k"] = (dict_caps or {}).get(
+            d.name if isinstance(d, ir.Ident) else "")
+        meta["cols"] = max(len(params.get("cols", ())), 1)
+        # the expansion factor: both routes pay the repeated/gathered
+        # output traffic, priced off the static expansion capacity
+        meta["out"] = params.get("out_cap")
+        meta["elem_bytes"] = _elem_bytes(kc.ret_ty)
     elif kc.kernel in ("matmul", "matvec"):
         a = _shape_of(kc.args[0], dense)
         b = _shape_of(kc.args[1], dense)
@@ -919,7 +1086,7 @@ def plan_kernels(
 
     def consider(kc: ir.KernelCall, orig: ir.Expr) -> ir.Expr:
         meta = _call_meta(kc, dense, dict_caps)
-        if kc.kernel == "hash_probe":
+        if kc.kernel in ("hash_probe", "group_probe"):
             # the one-hot tile is block x capacity: an unknown or
             # oversized dict cannot take the kernel even under "always"
             spec = reg.available(kc.kernel)
@@ -966,7 +1133,8 @@ def plan_kernels(
         if probed and isinstance(v, ir.Result) \
                 and isinstance(v.builder, ir.For) \
                 and isinstance(v.builder.builder, ir.NewBuilder) \
-                and isinstance(v.builder.builder.ty, wt.DictMerger):
+                and isinstance(v.builder.builder.ty,
+                               (wt.DictMerger, wt.GroupBuilder)):
             v2 = v.map_children(rec)  # plan nested subtrees only
             kc = _match_loop(v2, dense, probed=True)
             if kc is not None:
@@ -1000,9 +1168,11 @@ def plan_kernels(
 
 
 def _probed_as_dict(name: str, body: ir.Expr) -> bool:
-    """Does `body` consume `name` through dict probes (Lookup/KeyExists)?"""
+    """Does `body` consume `name` through dict probes (Lookup/KeyExists/
+    GroupLookup)?"""
     return any(
-        isinstance(n, (ir.Lookup, ir.KeyExists)) and _is_ident(n.expr, name)
+        isinstance(n, (ir.Lookup, ir.KeyExists, ir.GroupLookup))
+        and _is_ident(n.expr, name)
         for n in ir.walk(body)
     )
 
@@ -1010,12 +1180,13 @@ def _probed_as_dict(name: str, body: ir.Expr) -> bool:
 def _dict_cap_of(v: ir.Expr) -> Optional[int]:
     """Static capacity of a let-bound dict value, kernelized or not."""
     if isinstance(v, ir.KernelCall) and v.kernel in (
-            "dict_group_sum", "dict_hash_build"):
+            "dict_group_sum", "dict_hash_build", "group_build"):
         cap = dict(v.params).get("capacity")
         return int(cap) if cap is not None else None
     if isinstance(v, ir.Result) and isinstance(v.builder, ir.For):
         nb = v.builder.builder
-        if isinstance(nb, ir.NewBuilder) and isinstance(nb.ty, wt.DictMerger) \
+        if isinstance(nb, ir.NewBuilder) \
+                and isinstance(nb.ty, (wt.DictMerger, wt.GroupBuilder)) \
                 and isinstance(nb.arg, ir.Literal):
             return int(nb.arg.value)
     return None

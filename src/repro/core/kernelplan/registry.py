@@ -36,14 +36,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...kernels import filter_reduce as _fr
+from ...kernels import group_build as _gb
 from ...kernels import hash_probe as _hp
 from ...kernels import hash_table as _ht
 from ...kernels import map_chain as _mc
 from ...kernels import ops as kops
 from ...kernels import segment_reduce as _sr
 from ...kernels import tiled_matmul as _tm
-from ..backend.jaxgen import _pack_keys
-from ..backend.values import WDict, WVec
+from ..backend.jaxgen import _pack_keys, group_expand
+from ..backend.values import WDict, WGroup, WVec
 from . import cost as _cost
 
 
@@ -312,14 +313,9 @@ def _exec_dict_hash_build(args, params, fns, impl):
     cslots = jnp.where(slots < ctab, rank[jnp.clip(slots, 0, ctab - 1)],
                        jnp.int32(cap))
     cslots = jnp.where(cslots < cap, cslots, jnp.int32(cap))  # parked/overflow
-    # recover raw output key columns (packing may have dropped high
-    # bits); every row in a slot shares one key, so segment_max per
-    # field reads it back
     key_nps = params.get("key_nps") or (params.get("key_np", "int64"),)
-    key_outs = []
-    for kc in key_cols:
-        src = jnp.where(mask, kc, jnp.iinfo(jnp.int64).min)
-        key_outs.append(jax.ops.segment_max(src, cslots, num_segments=cap))
+    keys_fin = _recover_key_cols(key_cols, mask, cslots, cap, key_nps,
+                                 overflow)
     outs = []
     for v in vals:
         vm = jnp.where(mask, v, jnp.zeros((), v.dtype))
@@ -327,10 +323,6 @@ def _exec_dict_hash_build(args, params, fns, impl):
                                      impl=impl))
     count = jnp.minimum(used.astype(jnp.int64), cap)
     count = jnp.where(overflow, -count - 1, count)
-    keys_fin = []
-    for ko, knp in zip(key_outs, key_nps):
-        ko = ko.astype(np.dtype(knp))
-        keys_fin.append(jnp.where(overflow, jnp.full_like(ko, -1), ko))
     keys_out = tuple(keys_fin) if nk > 1 else keys_fin[0]
     poisoned = []
     for v in outs:
@@ -341,15 +333,36 @@ def _exec_dict_hash_build(args, params, fns, impl):
     return WDict(keys_out, vals_out, count)
 
 
-def _probe_membership(args, params, fns, impl, nk):
-    """Shared prologue of the hash_probe adapters: stage the probe-side
+def _recover_key_cols(key_cols, mask, slots, cap, key_nps, overflow):
+    """Per-slot raw key recovery shared by the keyed build adapters:
+    every row in a slot holds one key, so a masked ``segment_max`` per
+    field reads it back (packing may have dropped high bits); parked
+    rows carry slot ``cap`` and fall off the ``[:cap]`` slice, and
+    overflow poisons the columns to -1."""
+    outs = []
+    for kc, knp in zip(key_cols, key_nps):
+        src = jnp.where(mask, kc, jnp.iinfo(jnp.int64).min)
+        ko = jax.ops.segment_max(src, slots.astype(jnp.int32),
+                                 num_segments=cap + 1)[:cap]
+        ko = ko.astype(np.dtype(knp))
+        outs.append(jnp.where(overflow, jnp.full_like(ko, -1), ko))
+    return outs
+
+
+def _probe_membership(args, params, fns, impl, nk, n_iters=None):
+    """Shared prologue of the probe adapters: stage the probe-side
     columns, pack the (possibly multi-column) query keys into the i64
-    key space, neutralize the dict's parked slots, and run ONE
-    membership kernel.  Returns ``(n, idx, elem, pos, found, cap)``."""
+    key space, neutralize the table's parked slots, and run ONE
+    membership kernel — ``dict_probe`` for dict tables, the fused
+    membership + match-count ``group_probe`` for group (m:n) tables.
+    Returns ``(n, idx, elem, pos, found, sizes, cap)`` with ``sizes``
+    None for dicts."""
     d = args[0]
-    if not isinstance(d, WDict):
-        raise KernelPlanError("hash_probe: expected a dict value")
-    arrays = [_dense_data(a, "hash probe") for a in args[1:]]
+    if not isinstance(d, (WDict, WGroup)):
+        raise KernelPlanError("probe: expected a dict/group value")
+    is_group = isinstance(d, WGroup)
+    tail = args[1:] if n_iters is None else args[1:1 + n_iters]
+    arrays = [_dense_data(a, "hash probe") for a in tail]
     n = arrays[0].shape[0]
     idx = jnp.arange(n, dtype=jnp.int64)
     elem = _elem_of(arrays)
@@ -360,15 +373,22 @@ def _probe_membership(args, params, fns, impl, nk):
     packed_t = _pack_keys(d.keys)
     cap = packed_t.shape[0]
     cnt = jnp.maximum(jnp.asarray(d.count, jnp.int64), 0)
+    sizes = jnp.zeros((n,), jnp.int64) if is_group else None
     if cap == 0:
         pos = jnp.zeros((n,), jnp.int32)
         found = jnp.zeros((n,), dtype=bool)
     else:
         big = jnp.iinfo(jnp.int64).max
         neut = jnp.where(jnp.arange(cap) < cnt, packed_t, big)
-        pos, found = kops.dict_probe(neut, cnt, keys_q, impl=impl,
-                                     block=params.get("block"))
-    return n, idx, elem, pos, found, cap
+        if is_group:
+            pos, found, sizes = kops.group_probe(
+                neut, d.offsets, cnt, keys_q, impl=impl,
+                block=params.get("block"))
+            sizes = sizes.astype(jnp.int64)
+        else:
+            pos, found = kops.dict_probe(neut, cnt, keys_q, impl=impl,
+                                         block=params.get("block"))
+    return n, idx, elem, pos, found, sizes, cap
 
 
 def _exec_hash_probe(args, params, fns, impl):
@@ -384,7 +404,7 @@ def _exec_hash_probe(args, params, fns, impl):
     if "cols" in params:
         return _exec_hash_probe_fused(args, params, fns, impl)
     d = args[0]
-    n, idx, elem, pos, found, cap = _probe_membership(
+    n, idx, elem, pos, found, _, cap = _probe_membership(
         args, params, fns, impl, nk=1)
     gather = bool(params.get("gather"))
     if params.get("has_pred"):
@@ -420,7 +440,7 @@ def _exec_hash_probe_fused(args, params, fns, impl):
     d = args[0]
     how = params["how"]
     nk = int(params.get("n_keys", 1))
-    n, idx, elem, pos, found, cap = _probe_membership(
+    n, idx, elem, pos, found, _, cap = _probe_membership(
         args, params, fns, impl, nk=nk)
     mask = None
     if params.get("has_pred"):
@@ -449,6 +469,80 @@ def _exec_hash_probe_fused(args, params, fns, impl):
     count = jnp.where(poisoned, jnp.int64(-1),
                       keep.sum().astype(jnp.int64))
     return tuple(WVec(c[order], count=count) for c in outs)
+
+
+def _exec_group_build(args, params, fns, impl):
+    """Groupbuilder build (the m:n join build side): hash-to-slot over
+    the packed keys, slot-histogram compaction into CSR offsets, and the
+    payload column sorted by (ascending key, build-row order) — the
+    layout the generic keyed finalize produces, so the probe side is
+    indistinguishable.  Overflow (more distinct keys than the builder
+    capacity, or a key hitting the reserved EMPTY sentinel) poisons via
+    the shared negative-count convention."""
+    arrays = [_dense_data(a, "group build") for a in args]
+    n = arrays[0].shape[0]
+    idx = jnp.arange(n, dtype=jnp.int64)
+    elem = _elem_of(arrays)
+    cap = int(params["capacity"])
+    nk = int(params.get("n_keys", 1))
+    block = params.get("block")
+    key_cols = [
+        _as_col(fns[j](idx, elem), n).astype(jnp.int64) for j in range(nk)
+    ]
+    val = _as_col(fns[nk](idx, elem), n)
+    if params.get("has_pred"):
+        mask = _as_col(fns[nk + 1](idx, elem), n).astype(bool)
+    else:
+        mask = jnp.ones((n,), dtype=bool)
+    packed = _pack_keys(tuple(key_cols) if nk > 1 else key_cols[0])
+    sentinel_clash = jnp.any(mask & (packed == _ht.EMPTY))
+    pk = jnp.where(mask, packed, _ht.EMPTY)
+    cslots, offsets, used = kops.group_build(pk, cap, impl=impl, block=block)
+    overflow = (used > cap) | sentinel_clash
+    # CSR payload ordering: ascending compact slot, stable — within a
+    # group, build-row order (identical to the generic keyed finalize)
+    order = jnp.argsort(cslots, stable=True)
+    values = val[order]
+    key_nps = params.get("key_nps") or ("int64",)
+    keys_fin = _recover_key_cols(key_cols, mask, cslots, cap, key_nps,
+                                 overflow)
+    keys_out = tuple(keys_fin) if nk > 1 else keys_fin[0]
+    count = jnp.minimum(used.astype(jnp.int64), cap)
+    count = jnp.where(overflow, -count - 1, count)
+    return WGroup(keys_out, values, offsets, count)
+
+
+def _exec_group_probe(args, params, fns, impl):
+    """The m:n join fan-out probe: ONE fused membership + match-count
+    launch (``kops.group_probe``) for the packed keys, then the shared
+    two-phase expansion (exclusive scan over the per-row counts, binary
+    search back to source rows, repeat/gather) materializes EVERY output
+    column through one expansion index — probe columns repeat, build
+    columns gather through the group's stored row ids, left-join misses
+    emit one fill row.  Poison propagates as a negative output count."""
+    d = args[0]
+    if not isinstance(d, WGroup):
+        raise KernelPlanError("group_probe: expected a groupbuilder value")
+    if isinstance(d.values, tuple):
+        raise KernelPlanError("group_probe: scalar payloads only")
+    how = params["how"]
+    nk = int(params.get("n_keys", 1))
+    n_iters = int(params.get("n_iters", 1))
+    n, idx, elem, pos, found, sizes, cap = _probe_membership(
+        args, params, fns, impl, nk=nk, n_iters=n_iters)
+    if params.get("has_pred"):
+        mask = _as_col(fns[-1](idx, elem), n).astype(bool)
+    else:
+        mask = jnp.ones((n,), dtype=bool)
+    col_specs = []
+    for (kind, j), fill in zip(params["cols"], params["fills"]):
+        if kind == "expr":
+            col_specs.append(("expr", _as_col(fns[nk + j](idx, elem), n)))
+        else:
+            rv = _dense_data(args[j], "group probe gather")
+            col_specs.append(("gather", rv, fill))
+    return group_expand(d, pos, found, sizes, mask, how,
+                        int(params["out_cap"]), col_specs)
 
 
 def _tiles(params) -> dict:
@@ -544,6 +638,31 @@ def _fp_hash_probe(arg_shapes, itemsize, params):
             + cap * 8 + block * cap * 5)
 
 
+def _fp_group_build(arg_shapes, itemsize, params):
+    n = arg_shapes[0][0] if arg_shapes and arg_shapes[0] else 0
+    cap = int(params.get("capacity", 0))
+    ctab = _ht.table_size(cap) if cap else 16
+    pad = _pad_of(n, params.get("block") or _gb.BLOCK_N)
+    # staged packed keys + slots + payload column + the ordering sort,
+    # the VMEM table + rank + counts, and the CSR offsets/key columns
+    return ((n + pad) * (8 + 4 + itemsize + 8)
+            + ctab * (8 + 8) + (cap + 1) * 4 + cap * 8)
+
+
+def _fp_group_probe(arg_shapes, itemsize, params):
+    n = arg_shapes[1][0] if len(arg_shapes) > 1 and arg_shapes[1] else 0
+    block = params.get("block") or _hp.BLOCK_N
+    pad = _pad_of(n, block)
+    cap = int(params.get("k", 0))
+    out = int(params.get("out_cap", 0))
+    cols = max(len(params.get("cols", ())), 1)
+    # staged packed queries + pos/found/size columns, the one-hot tile
+    # (keys + sizes lanes), and the expanded output buffers every
+    # column shares (the expansion-factor term of the memory budget)
+    return ((n + pad) * (8 + 4 + 1 + 4) + out * (cols * itemsize + 8 + 8)
+            + cap * (8 + 4) + block * cap * 6)
+
+
 def _fp_matmul(arg_shapes, itemsize, params):
     if len(arg_shapes) < 2 or not arg_shapes[0] or not arg_shapes[1]:
         return 0
@@ -633,6 +752,35 @@ def _bench_hash_probe(meta, params, impl):
     def go():
         jax.block_until_ready(kops.dict_probe(
             table, k, queries, impl=impl, block=params.get("block")))
+
+    return go
+
+
+def _bench_group_build(meta, params, impl):
+    # the insert/histogram chains are serial: cap the synthetic size so
+    # first-touch tuning stays cheap (same rationale as hash_build)
+    n = min(int(meta["n"]), 8192)
+    k = max(int(meta.get("k") or 256), 1)
+    keys = (jnp.arange(n, dtype=jnp.int64) % k) * 7 + 3
+
+    def go():
+        jax.block_until_ready(kops.group_build(
+            keys, k, impl=impl, block=params.get("block")))
+
+    return go
+
+
+def _bench_group_probe(meta, params, impl):
+    n = int(meta["n"])
+    k = max(int(meta.get("k") or 256), 1)
+    table = jnp.arange(k, dtype=jnp.int64) * 3
+    offsets = (jnp.arange(k + 1, dtype=jnp.int32) * 4)  # fan-out 4
+    queries = (jnp.arange(n, dtype=jnp.int64) % (2 * k)) * 3  # ~50% hits
+
+    def go():
+        jax.block_until_ready(kops.group_probe(
+            table, offsets, k, queries, impl=impl,
+            block=params.get("block")))
 
     return go
 
@@ -753,6 +901,43 @@ register(KernelSpec(
     tune_defaults={"block": _hp.BLOCK_N},
     make_bench=_bench_hash_probe,
     footprint=_fp_hash_probe,
+))
+
+register(KernelSpec(
+    name="group_build",
+    entry="repro.kernels.ops:group_build",
+    pattern="group_build",
+    builder="groupbuilder",
+    elem_kinds=("i32", "i64"),
+    description="CSR group build (key -> growing vector of build-row "
+                "payloads) via hash-to-slot + slot-histogram compaction "
+                "— the m:n hash-join build side",
+    max_segments=_ht.MAX_CAP,
+    execute=_exec_group_build,
+    cost=_cost.cost_group_build,
+    tune_space={"block": _gb.BLOCK_CANDIDATES},
+    tune_defaults={"block": _gb.BLOCK_N},
+    make_bench=_bench_group_build,
+    footprint=_fp_group_build,
+))
+
+register(KernelSpec(
+    name="group_probe",
+    entry="repro.kernels.ops:group_probe",
+    pattern="group_probe",
+    builder="vecbuilder",
+    elem_kinds=("bool", "i8", "i32", "i64", "f32", "f64"),
+    description="m:n join fan-out probe: ONE fused membership + "
+                "match-count launch shared by every output column, "
+                "then the two-phase expansion (scan + repeat/gather) "
+                "outside the kernel",
+    max_segments=_ht.MAX_CAP,
+    execute=_exec_group_probe,
+    cost=_cost.cost_group_probe,
+    tune_space={"block": _hp.BLOCK_CANDIDATES},
+    tune_defaults={"block": _hp.BLOCK_N},
+    make_bench=_bench_group_probe,
+    footprint=_fp_group_probe,
 ))
 
 register(KernelSpec(

@@ -40,6 +40,8 @@ def pretty(e: "ir.Expr", indent: int = 0) -> str:
         return f"lookup({p(e.expr)}, {p(e.index)})"
     if isinstance(e, ir.KeyExists):
         return f"keyexists({p(e.expr)}, {p(e.key)})"
+    if isinstance(e, ir.GroupLookup):
+        return f"grouplookup({p(e.expr)}, {p(e.key)})"
     if isinstance(e, ir.CUDF):
         return f"cudf[{e.name}](" + ", ".join(p(a) for a in e.args) + ")"
     if isinstance(e, ir.KernelCall):

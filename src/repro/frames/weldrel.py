@@ -232,6 +232,7 @@ class Query:
         how: str = "inner",
         suffix: str = "_r",
         capacity: Optional[int] = None,
+        validate: Optional[str] = None,
         kernelize=None,
         kernel_impl=None,
         collect_stats: Optional[dict] = None,
@@ -245,34 +246,53 @@ class Query:
         64-bit key space (32 bits per column; out-of-range int keys
         raise).  ``how`` selects the join semantics:
 
-        * ``"inner"`` — keep probe rows whose key exists on the build
-          side (unmatched rows drop);
-        * ``"left"``  — keep every probe row; right columns fill misses
-          with a per-dtype default (NaN for floats, 0 for ints, False
-          for bools — sentinel fills, NOT pandas' float upcast);
+        * ``"inner"`` — every (probe row, matching build row) pair; a
+          probe row with k build matches expands to k output rows,
+          unmatched rows drop;
+        * ``"left"``  — matched probe rows expand like ``"inner"``;
+          unmatched rows survive ONCE with right columns filled by a
+          per-dtype default (NaN for floats, 0 for ints, False for
+          bools — sentinel fills, NOT pandas' float upcast);
         * ``"anti"``  — keep probe rows whose key does NOT exist; the
           output has only left columns.
 
-        `other` is the BUILD side and must have unique keys (an m:1 /
-        fact-to-dimension join, pandas ``validate="m:1"``); duplicate or
-        missing keys on the probe side are fine.  NaN join keys raise on
-        every path (the one NaN semantics all three paths share).
-        Output columns are every left column plus every right column
-        except the key; a post-``suffix`` name collision raises instead
-        of silently overwriting.
+        `other` is the BUILD side.  Duplicate build-side keys are
+        supported for ``"inner"``/``"left"`` (an m:n join: output rows
+        are ordered probe-row-major, matches within a probe row in
+        build-row order); pass ``validate="m:1"`` to instead raise on
+        duplicates with a row-count diagnostic (the pandas knob — and
+        the old default, which rejected every duplicate).  ``"anti"``
+        still requires unique build keys (membership with duplicates is
+        an aggregation question: aggregate the right side first).
+        Duplicate or missing keys on the probe side are always fine.
+        NaN join keys raise on every path (the one NaN semantics all
+        three paths share).  Output columns are every left column plus
+        every right column except the key; a post-``suffix`` name
+        collision raises instead of silently overwriting.
 
-        Lazily the whole join is ONE fused program: a dictmerger build
-        pass over the right side, then ONE horizontally-fused probe loop
-        merging every output column into a struct of vecbuilders —
-        misses lower through ``lookup(d, k, default)`` (a single probe,
-        no second pass).  Under ``kernelize`` the planner lowers build +
-        probe as a two-kernel plan — an open-addressing hash build and a
-        one-hot MXU probe shared by ALL output columns, so an N-column
-        join launches one build and one probe (``repro.core.kernelplan``).
+        Lazily the whole join is ONE fused program.  With unique build
+        keys (m:1): a dictmerger build pass over the right side, then
+        ONE horizontally-fused probe loop merging every output column
+        into a struct of vecbuilders — misses lower through
+        ``lookup(d, k, default)`` (a single probe, no second pass).
+        With duplicates (m:n): a groupbuilder build (key -> growing
+        vector of build-row indices, CSR on the backend) and a probe
+        loop iterating ``grouplookup(d, k)`` — lowered as a two-phase
+        expansion (per-row match counts, exclusive scan, repeat/gather)
+        whose data-dependent output length lives in a static buffer
+        sized by the host-computed unfiltered match total.  Under
+        ``kernelize`` the planner lowers build + probe as a two-kernel
+        plan (``dict_hash_build``+``hash_probe``, or ``group_build``+
+        ``group_probe`` for m:n) — ALL output columns share one probe
+        launch regardless of width (``repro.core.kernelplan``).
         """
         if how not in ("inner", "left", "anti"):
             raise NotImplementedError(
-                f"join how={how!r} (inner/left/anti; m:n joins pending)"
+                f"join how={how!r} (supported: inner, left, anti)"
+            )
+        if validate not in (None, "m:1"):
+            raise ValueError(
+                f"join validate={validate!r} (only 'm:1' is supported)"
             )
         if not isinstance(other, Table):
             raise TypeError("join build side must be a weldrel.Table")
@@ -305,11 +325,41 @@ class Query:
             for c in (lk_host[0], rk_host[0])
         )
         rk_packed = _pack_host(rk_host) if do_pack else rk_host[0]
-        if np.unique(rk_packed).size != rk_packed.size:
+        distinct = int(np.unique(rk_packed).size)
+        n_dup = int(rk_packed.size) - distinct
+        if do_pack and any(
+            np.issubdtype(c.dtype, np.floating) for c in rk_host
+        ):
+            # m:n made duplicate build keys legal, so the uniqueness
+            # guard no longer catches f64 keys that are distinct only
+            # beyond the packed space's f32 precision — those would
+            # silently fuse into one bogus group.  Keep that semantic
+            # pinned: packed conflation of IEEE-distinct keys raises.
+            # (np.unique matches the packed normalization: -0.0 == 0.0,
+            # and NaN keys were already rejected above.)
+            raw_distinct = int(np.unique(
+                rk_host[0] if len(rk_host) == 1
+                else np.rec.fromarrays(rk_host)
+            ).size)
+            if distinct < raw_distinct:
+                raise ValueError(
+                    "join build keys conflate in the packed (f32) key "
+                    "space: keys distinct beyond f32 precision would "
+                    "silently join as one key; cast or round the key "
+                    "column before joining"
+                )
+        if n_dup and validate == "m:1":
             raise ValueError(
-                "join requires unique build-side keys (m:1); aggregate "
-                "the right side first"
+                f"join validate='m:1' violated: build side has {n_dup} "
+                f"duplicate key rows ({rk_packed.size} rows, {distinct} "
+                "distinct keys); aggregate the right side first"
             )
+        if n_dup and how == "anti":
+            raise NotImplementedError(
+                "m:n anti joins pending (build side has duplicate "
+                "keys); aggregate the right side first"
+            )
+        mn = n_dup > 0
         names_l = list(self.table.cols)
         names_r = (
             [] if how == "anti"
@@ -327,15 +377,21 @@ class Query:
                 f"{dups}; rename columns or pick another suffix"
             )
         m = len(names_r)
-        cap = int(capacity if capacity is not None else max(rk_packed.size, 1))
-        if cap < rk_packed.size:
+        cap = int(capacity if capacity is not None else max(distinct, 1))
+        if cap < distinct:
             # an undersized dict truncates (generic) or poisons (kernel)
             # the build — fail loudly before either can happen
             raise ValueError(
-                f"join capacity {cap} < {rk_packed.size} build-side keys"
+                f"join capacity {cap} < {distinct} distinct build-side "
+                "keys"
             )
 
         if self.table.eager:
+            # the sort/searchsorted/repeat oracle, m:1 and m:n alike:
+            # per-probe-row match counts via a left/right searchsorted
+            # pair, then repeat/gather — matched build rows walk the
+            # stable sort, so within a probe row output follows
+            # build-row order (the ordering the lazy expansion shares)
             n_l = lk_host[0].shape[0]
             mrows = (self.pred._eager if self.pred is not None
                      else np.ones(n_l, bool))
@@ -344,29 +400,39 @@ class Query:
             if rk.size:
                 order = np.argsort(rk, kind="stable")
                 rks = rk[order]
-                pos = np.clip(np.searchsorted(rks, lk), 0, rks.size - 1)
-                found = rks[pos] == lk
+                lo = np.searchsorted(rks, lk, side="left")
+                hi = np.searchsorted(rks, lk, side="right")
+                cnt = hi - lo
             else:
-                order = pos = np.zeros(n_l, dtype=np.int64)
-                found = np.zeros(n_l, dtype=bool)
-            mask = {
-                "inner": mrows & found,
-                "left": mrows,
-                "anti": mrows & ~found,
-            }[how]
-            out = {c: self.table.col(c)._eager[mask] for c in names_l}
+                order = lo = np.zeros(n_l, dtype=np.int64)
+                cnt = np.zeros(n_l, dtype=np.int64)
+            found = cnt > 0
+            if how == "anti":
+                mask = mrows & ~found
+                return Table(
+                    {c: self.table.col(c)._eager[mask] for c in names_l},
+                    eager=True,
+                )
+            rep = np.where(
+                mrows, cnt if how == "inner" else np.maximum(cnt, 1), 0
+            )
+            rows = np.repeat(np.arange(n_l), rep)
+            offs = np.concatenate([[0], np.cumsum(rep)])
+            t = np.arange(rows.size) - offs[rows]  # ordinal within a row
+            frow = found[rows] if rows.size else np.zeros(0, bool)
+            out = {c: self.table.col(c)._eager[rows] for c in names_l}
             if names_r:
-                fsel = found[mask]
-                gidx = order[pos[mask]] if rk.size else None
+                if rk.size:
+                    gidx = order[np.where(frow, lo[rows] + t, 0)]
                 for c, name in zip(names_r, renamed_r):
                     rcol = np.asarray(_host(other.cols[c]))
                     fill = rcol.dtype.type(_fill_of(rcol.dtype))
                     if rk.size:
                         v = rcol[gidx]
                         if how == "left":
-                            v = np.where(fsel, v, fill)
+                            v = np.where(frow, v, fill)
                     else:
-                        v = np.full(int(mask.sum()), fill, rcol.dtype)
+                        v = np.full(rows.size, fill, rcol.dtype)
                     out[name] = v
             return Table(out, eager=True)
 
@@ -387,6 +453,138 @@ class Query:
             if o.obj_id not in seen_dep:
                 seen_dep[o.obj_id] = o
                 deps.append(o)
+
+        if mn:
+            # -- m:n: groupbuilder build (key -> growing vector of
+            # build-row indices) + an expansion probe iterating
+            # grouplookup(d, k) — ONE fused program whose output length
+            # is data-dependent.  The static expansion buffer is sized
+            # by the exact unfiltered match total (host-computed from
+            # the same packed keys the dict compares); a predicate only
+            # shrinks the in-program count.
+            lk_packed = _pack_host(lk_host) if do_pack else lk_host[0]
+            rks_h = np.sort(rk_packed)
+            cnt_h = (np.searchsorted(rks_h, lk_packed, side="right")
+                     - np.searchsorted(rks_h, lk_packed, side="left"))
+            out_cap = int(cnt_h.sum() if how == "inner"
+                          else np.maximum(cnt_h, 1).sum())
+
+            r_objs = [c.obj for c in rkey_cols]
+            r_ids = [ir.Ident(o.obj_id, o.weld_type()) for o in r_objs]
+            b_elem = (
+                wt.Struct(tuple(_ety(k, r_ids) for k in range(len(r_ids))))
+                if len(r_ids) > 1 else _ety(0, r_ids)
+            )
+            bt = wt.GroupBuilder(kt, wt.I64)
+            b = ir.Ident(ir.fresh("b"), bt)
+            i = ir.Ident(ir.fresh("i"), wt.I64)
+            x = ir.Ident(ir.fresh("x"), b_elem)
+
+            def rfield(k: int) -> ir.Expr:
+                return ir.GetField(x, k) if len(r_ids) > 1 else x
+
+            kf: ir.Expr = (
+                ir.MakeStruct(tuple(rfield(k) for k in range(nk)))
+                if nk > 1 else rfield(0)
+            )
+            build = ir.For(
+                tuple(ir.Iter(idn) for idn in r_ids),
+                ir.NewBuilder(bt, arg=ir.Literal(cap, wt.I64)),
+                ir.Lambda((b, i, x), ir.Merge(b, ir.MakeStruct((kf, i)))),
+            )
+            group_obj = NewWeldObject(r_objs, ir.Result(build))
+            d_id = ir.Ident(group_obj.obj_id, group_obj.weld_type())
+            dep(group_obj)
+            rv_ids: Dict[str, ir.Ident] = {}
+            for c in names_r:
+                o = rcols[c].obj
+                dep(o)
+                rv_ids[c] = ir.Ident(o.obj_id, o.weld_type())
+
+            pred_obj = self.pred.obj if self.pred is not None else None
+            iter_objs: List[WeldObject] = []
+            slots: Dict[str, int] = {}
+
+            def slot(o: WeldObject) -> int:
+                if o.obj_id not in slots:
+                    slots[o.obj_id] = len(iter_objs)
+                    iter_objs.append(o)
+                return slots[o.obj_id]
+
+            key_slots = [slot(lcols[c].obj) for c in on_l]
+            col_slots = [slot(lcols[c].obj) for c in names_l]
+            pred_slot = slot(pred_obj) if pred_obj is not None else None
+            for o in iter_objs:
+                dep(o)
+            ids2 = [ir.Ident(o.obj_id, o.weld_type()) for o in iter_objs]
+            elem = (
+                wt.Struct(tuple(_ety(k, ids2) for k in range(len(ids2))))
+                if len(ids2) > 1 else _ety(0, ids2)
+            )
+            out_tys = [lcols[c].weld_elem_ty for c in names_l] + \
+                [rcols[c].weld_elem_ty for c in names_r]
+            builders = tuple(wt.VecBuilder(t) for t in out_tys)
+            sbt = wt.StructBuilder(builders)
+            b2 = ir.Ident(ir.fresh("b"), sbt)
+            i2 = ir.Ident(ir.fresh("i"), wt.I64)
+            x2 = ir.Ident(ir.fresh("x"), elem)
+            bi = ir.Ident(ir.fresh("b"), sbt)
+            ii = ir.Ident(ir.fresh("i"), wt.I64)
+            ri = ir.Ident(ir.fresh("r"), wt.I64)
+
+            def field(k: int) -> ir.Expr:
+                return ir.GetField(x2, k) if len(ids2) > 1 else x2
+
+            key_expr: ir.Expr = (
+                ir.MakeStruct(tuple(field(s) for s in key_slots))
+                if nk > 1 else field(key_slots[0])
+            )
+            # the inner expansion loop: probe columns broadcast over the
+            # group, build columns gather by the stored row index
+            vals_in: List[ir.Expr] = [field(s) for s in col_slots]
+            vals_in += [ir.Lookup(rv_ids[c], ri) for c in names_r]
+            expand: ir.Expr = ir.For(
+                (ir.Iter(ir.GroupLookup(d_id, key_expr)),),
+                b2,
+                ir.Lambda((bi, ii, ri), ir.MakeStruct(tuple(
+                    ir.Merge(ir.GetField(bi, k), v)
+                    for k, v in enumerate(vals_in)
+                ))),
+            )
+            core: ir.Expr = expand
+            if how == "left":
+                miss_vals: List[ir.Expr] = [field(s) for s in col_slots]
+                miss_vals += [
+                    ir.Literal(
+                        _fill_of(np.dtype(rcols[c].weld_elem_ty.np_dtype)),
+                        rcols[c].weld_elem_ty,
+                    )
+                    for c in names_r
+                ]
+                miss = ir.MakeStruct(tuple(
+                    ir.Merge(ir.GetField(b2, k), v)
+                    for k, v in enumerate(miss_vals)
+                ))
+                core = ir.If(ir.KeyExists(d_id, key_expr), expand, miss)
+            body2: ir.Expr = core if pred_slot is None else ir.If(
+                field(pred_slot), core, b2
+            )
+            loop = ir.For(
+                tuple(ir.Iter(idn) for idn in ids2),
+                ir.MakeStruct(tuple(
+                    ir.NewBuilder(
+                        bt2, size_hint=ir.Literal(out_cap, wt.I64)
+                    )
+                    for bt2 in builders
+                )),
+                ir.Lambda((b2, i2, x2), body2),
+            )
+            obj = NewWeldObject(deps, ir.Result(loop))
+            res = Evaluate(obj, kernelize=kernelize,
+                           kernel_impl=kernel_impl,
+                           collect_stats=collect_stats)
+            arrays = [np.asarray(v) for v in res.value]
+            return Table(dict(zip(out_names, arrays)), eager=False)
 
         # bool value columns cannot ride the "+"-dictmerger directly —
         # they build as i8 and cast back to bool at the probe (build

@@ -27,6 +27,13 @@ bits per column) in the same i64 key space the build side uses.
 Contract (shared with ``ref.dict_probe``): queries and table keys live
 in the packed key space; returns ``(pos, found)`` with ``pos`` int32,
 zeroed where not found.
+
+``group_probe`` is the m:n-join variant: the SAME hits tile also
+one-hot-gathers each matching group's fan-out (CSR ``offsets`` diffs),
+so membership, slot positions, and the expansion's match-count pass
+are one launch; the expansion itself (exclusive scan + repeat/gather)
+runs outside, shared by every output column
+(``kernelplan.registry._exec_group_probe``).
 """
 from __future__ import annotations
 
@@ -52,6 +59,67 @@ def _kernel(q_ref, keys_ref, cnt_ref, pos_ref, found_ref, *, cap: int):
     pos = jnp.argmax(hits, axis=1).astype(jnp.int32)
     found_ref[...] = found
     pos_ref[...] = jnp.where(found, pos, jnp.int32(0))
+
+
+def _group_kernel(q_ref, keys_ref, sizes_ref, cnt_ref, pos_ref, found_ref,
+                  size_ref, *, cap: int):
+    q = q_ref[...]                               # (B,)
+    keys = keys_ref[...]                         # (C,)
+    sizes = sizes_ref[...]                       # (C,) group fan-outs
+    cnt = cnt_ref[0, 0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (q.shape[0], cap), 1)
+    hits = (q[:, None] == keys[None, :]) & (iota < cnt)
+    found = jnp.any(hits, axis=1)
+    pos = jnp.argmax(hits, axis=1).astype(jnp.int32)
+    # one-hot gather of the matching group's size on the VPU: the SAME
+    # hits tile serves membership, position, and the match-count pass of
+    # the m:n expansion — one launch, three outputs
+    size = jnp.sum(jnp.where(hits, sizes[None, :], jnp.int32(0)), axis=1)
+    found_ref[...] = found
+    pos_ref[...] = jnp.where(found, pos, jnp.int32(0))
+    size_ref[...] = jnp.where(found, size.astype(jnp.int32), jnp.int32(0))
+
+
+def group_probe(table_keys: jax.Array, offsets: jax.Array, count,
+                queries: jax.Array, *, block: int = BLOCK_N,
+                interpret: bool = True):
+    """(pos, found, sizes) per query against a groupbuilder's sorted
+    key column + CSR offsets — the membership AND match-count pass of
+    the m:n join expansion in ONE launch (``sizes`` is 0 on a miss).
+    Contract shared with ``ref.group_probe``."""
+    cap = table_keys.shape[0]
+    n = queries.shape[0]
+    if n == 0 or cap == 0:
+        z = jnp.zeros((n,), jnp.int32)
+        return z, jnp.zeros((n,), bool), z
+    sizes = (offsets[1:] - offsets[:-1]).astype(jnp.int32)
+    npad = (block - n % block) % block
+    if npad:
+        queries = jnp.pad(queries, (0, npad))
+    grid = (queries.shape[0] // block,)
+    cnt = jnp.asarray(count, jnp.int32).reshape(1, 1)
+    pos, found, size = pl.pallas_call(
+        functools.partial(_group_kernel, cap=cap),
+        out_shape=(
+            jax.ShapeDtypeStruct((queries.shape[0],), jnp.int32),
+            jax.ShapeDtypeStruct((queries.shape[0],), jnp.bool_),
+            jax.ShapeDtypeStruct((queries.shape[0],), jnp.int32),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((cap,), lambda i: (0,)),
+            pl.BlockSpec((cap,), lambda i: (0,)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ),
+        interpret=interpret,
+    )(queries.astype(jnp.int64), table_keys.astype(jnp.int64), sizes, cnt)
+    return pos[:n], found[:n], size[:n]
 
 
 def dict_probe(table_keys: jax.Array, count, queries: jax.Array, *,

@@ -25,6 +25,7 @@ import jax
 from . import filter_reduce as _fr
 from . import flash_attention as _fa
 from . import fused_adamw as _aw
+from . import group_build as _gb
 from . import hash_probe as _hp
 from . import hash_table as _ht
 from . import map_chain as _mc
@@ -163,6 +164,43 @@ def dict_probe(table_keys, count, queries, impl: Optional[Impl] = None,
     column; ``pos`` is zeroed where not found."""
     return _dp(table_keys, count, queries, impl=_resolve(impl),
                block=block or _hp.BLOCK_N)
+
+
+# -- group build / probe (m:n hash-join route) ------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "impl", "block"))
+def _gbd(keys, capacity, impl, block):
+    if impl == "ref":
+        return _ref.group_build(keys, capacity)
+    return _gb.group_build(keys, capacity, block=block,
+                           interpret=(impl == "interpret"))
+
+
+def group_build(keys, capacity: int, impl: Optional[Impl] = None,
+                block: Optional[int] = None):
+    """CSR group build over i64 (packed) keys: rows with equal keys share
+    an ascending-key compact slot.  Returns ``(cslots, offsets, used)``
+    — see kernels/group_build.py for the contract."""
+    return _gbd(keys, capacity=capacity, impl=_resolve(impl),
+                block=block or _gb.BLOCK_N)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block"))
+def _gpr(table_keys, offsets, count, queries, impl, block):
+    if impl == "ref":
+        return _ref.group_probe(table_keys, offsets, count, queries)
+    return _hp.group_probe(table_keys, offsets, count, queries, block=block,
+                           interpret=(impl == "interpret"))
+
+
+def group_probe(table_keys, offsets, count, queries,
+                impl: Optional[Impl] = None, block: Optional[int] = None):
+    """(pos, found, sizes) per query against a groupbuilder's sorted key
+    column + CSR offsets — membership and the m:n expansion's
+    match-count pass in one launch; ``sizes`` is 0 where not found."""
+    return _gpr(table_keys, offsets, count, queries, impl=_resolve(impl),
+                block=block or _hp.BLOCK_N)
 
 
 # -- fused adamw ----------------------------------------------------------------

@@ -79,6 +79,63 @@ def dict_probe(table_keys, count, queries):
     return jnp.where(found, posc, jnp.int32(0)), found
 
 
+def group_build(keys, capacity):
+    """Sort-based oracle for the CSR group build: rows with equal keys
+    share an ascending-key compact slot; ``offsets`` are the CSR group
+    boundaries over those slots; ``used`` counts distinct valid keys
+    (``used > capacity`` = overflow, callers poison — the contract
+    shared with kernels/group_build.py)."""
+    from .hash_table import EMPTY
+
+    cap = int(capacity)
+    n = keys.shape[0]
+    if n == 0:
+        return (jnp.zeros((0,), jnp.int32),
+                jnp.zeros((cap + 1,), jnp.int32),
+                jnp.zeros((), jnp.int32))
+    keys = keys.astype(jnp.int64)
+    valid = keys != EMPTY
+    big = jnp.iinfo(jnp.int64).max
+    pk = jnp.where(valid, keys, big)
+    order = jnp.argsort(pk, stable=True)
+    sk = pk[order]
+    sval = valid[order]
+    is_new = jnp.concatenate([sval[:1], (sk[1:] != sk[:-1]) & sval[1:]])
+    seg = jnp.cumsum(is_new.astype(jnp.int32)) - 1
+    seg = jnp.where(sval & (seg < cap), seg, cap)
+    cslots = jnp.zeros((n,), jnp.int32).at[order].set(seg)
+    used = is_new.sum().astype(jnp.int32)
+    counts = jax.ops.segment_sum(
+        jnp.where(seg < cap, 1, 0), seg, num_segments=cap + 1
+    )[:cap]
+    offsets = jnp.concatenate([
+        jnp.zeros((1,), jnp.int32),
+        jnp.cumsum(counts).astype(jnp.int32),
+    ])
+    return cslots, offsets, used
+
+
+def group_probe(table_keys, offsets, count, queries):
+    """Binary-search oracle for the fused membership + match-count probe
+    of the m:n expansion: ``(pos, found, sizes)`` per query, ``sizes``
+    read off the CSR offsets (0 on a miss)."""
+    cap = table_keys.shape[0]
+    n = queries.shape[0]
+    if n == 0 or cap == 0:
+        z = jnp.zeros((n,), jnp.int32)
+        return z, jnp.zeros((n,), bool), z
+    big = jnp.iinfo(jnp.int64).max
+    cnt = jnp.asarray(count, jnp.int32)
+    neut = jnp.where(jnp.arange(cap) < cnt, table_keys.astype(jnp.int64), big)
+    q = queries.astype(jnp.int64)
+    pos = jnp.searchsorted(neut, q).astype(jnp.int32)
+    posc = jnp.clip(pos, 0, cap - 1)
+    found = (neut[posc] == q) & (posc < cnt)
+    sizes = (offsets[1:] - offsets[:-1]).astype(jnp.int32)[posc]
+    return (jnp.where(found, posc, jnp.int32(0)), found,
+            jnp.where(found, sizes, jnp.int32(0)))
+
+
 def segment_sum_vectors(seg_ids, vals, num_segments):
     return jax.ops.segment_sum(vals, seg_ids, num_segments=num_segments)
 

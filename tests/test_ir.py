@@ -141,3 +141,61 @@ def test_interp_strided_iter():
         M._lam3(wt.VecBuilder(wt.I64), wt.I64, lambda b, i, x: ir.Merge(b, x)),
     ))
     assert interpret(loop, {"v": data}) == [1, 3, 5, 7]
+
+
+def test_grouplookup_typeof_pretty_interp():
+    dt = wt.DictType(wt.I64, wt.Vec(wt.I64))
+    d = ir.Ident("d", dt)
+    e = ir.GroupLookup(d, ir.Literal(3, wt.I64))
+    assert ir.typeof(e) == wt.Vec(wt.I64)
+    assert "grouplookup(d, 3)" in str(e)
+    assert interpret(e, {"d": {3: [7, 8]}}) == [7, 8]
+    assert interpret(e, {"d": {5: [1]}}) == []  # miss -> EMPTY vector
+    with pytest.raises(wt.WeldTypeError):
+        ir.typeof(ir.GroupLookup(d, ir.Literal(0.5, wt.F64)))
+    with pytest.raises(wt.WeldTypeError):
+        ir.typeof(ir.GroupLookup(
+            ir.Ident("v", wt.DictType(wt.I64, wt.F64)),
+            ir.Literal(1, wt.I64)))
+
+
+def test_grouplookup_expansion_interp_oracle():
+    """The canonical m:n expansion loop under the reference interpreter:
+    probe rows fan out to (row, match) pairs in build order."""
+    rk = ir.Ident("rk", wt.Vec(wt.I64))
+    gb = wt.GroupBuilder(wt.I64, wt.I64)
+    b = ir.Ident("b0", gb)
+    i = ir.Ident("i0", wt.I64)
+    x = ir.Ident("x0", wt.I64)
+    build = ir.Result(ir.For(
+        (ir.Iter(rk),),
+        ir.NewBuilder(gb, arg=ir.Literal(8, wt.I64)),
+        ir.Lambda((b, i, x), ir.Merge(b, ir.MakeStruct((x, i)))),
+    ))
+    d = interpret(build, {"rk": [5, 3, 5, 5]})
+    assert d == {5: [0, 2, 3], 3: [1]}
+    sbt = wt.StructBuilder((wt.VecBuilder(wt.I64), wt.VecBuilder(wt.I64)))
+    lk = ir.Ident("lk", wt.Vec(wt.I64))
+    did = ir.Ident("d", wt.DictType(wt.I64, wt.Vec(wt.I64)))
+    b2 = ir.Ident("b2", sbt)
+    i2 = ir.Ident("i2", wt.I64)
+    x2 = ir.Ident("x2", wt.I64)
+    bi = ir.Ident("bi", sbt)
+    ii = ir.Ident("ii", wt.I64)
+    ri = ir.Ident("ri", wt.I64)
+    probe = ir.Result(ir.For(
+        (ir.Iter(lk),),
+        ir.MakeStruct((ir.NewBuilder(wt.VecBuilder(wt.I64)),
+                       ir.NewBuilder(wt.VecBuilder(wt.I64)))),
+        ir.Lambda((b2, i2, x2), ir.For(
+            (ir.Iter(ir.GroupLookup(did, x2)),),
+            b2,
+            ir.Lambda((bi, ii, ri), ir.MakeStruct((
+                ir.Merge(ir.GetField(bi, 0), x2),
+                ir.Merge(ir.GetField(bi, 1), ri),
+            ))),
+        )),
+    ))
+    keys, rows = interpret(probe, {"lk": [5, 9, 3], "d": d})
+    assert keys == [5, 5, 5, 3]
+    assert rows == [0, 2, 3, 1]

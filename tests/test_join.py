@@ -152,12 +152,26 @@ def test_join_empty_sides(which):
 
 
 @pytest.mark.parametrize("eager", [True, False])
-def test_join_duplicate_build_keys_raise(eager):
-    t = weldrel.Table({"key": np.array([1, 2], np.int64)}, eager=eager)
-    r = weldrel.Table({"key": np.array([7, 7], np.int64),
-                       "rv": np.zeros(2)}, eager=eager)
-    with pytest.raises(ValueError, match="unique build-side keys"):
-        weldrel.Query(t).join(r, on="key")
+def test_join_validate_m1_rejects_duplicate_build_keys(eager):
+    """Duplicate build keys are legal by default now (m:n); the pandas
+    ``validate="m:1"`` knob restores the old rejection, with a
+    row-count diagnostic."""
+    lcols = {"key": np.array([1, 7], np.int64)}
+    rcols = {"key": np.array([7, 7], np.int64), "rv": np.array([1.0, 2.0])}
+    t = weldrel.Table(lcols, eager=eager)
+    r = weldrel.Table(rcols, eager=eager)
+    with pytest.raises(ValueError,
+                       match=r"m:1.*1 duplicate key rows.*1 distinct"):
+        weldrel.Query(t).join(r, on="key", validate="m:1")
+    with pytest.raises(ValueError, match="validate"):
+        weldrel.Query(weldrel.Table(lcols, eager=eager)).join(
+            weldrel.Table(rcols, eager=eager), on="key", validate="1:1")
+    # default: key 7 fans out to both build rows
+    out = weldrel.Query(weldrel.Table(lcols, eager=eager)).join(
+        weldrel.Table(rcols, eager=eager), on="key")
+    got = _got(out)
+    np.testing.assert_array_equal(got["key"], [7, 7])
+    np.testing.assert_allclose(got["rv"], [1.0, 2.0])
 
 
 def test_join_suffix_and_right_on():
@@ -633,10 +647,11 @@ def test_float_join_keys_compare_at_f32_on_every_path(mode):
     got = _got(_run_join(lcols, rcols, "key", "inner", mode))
     np.testing.assert_allclose(got["key"], [0.5, 2.25])
     np.testing.assert_allclose(got["rv"], [20.0, 10.0])
-    # f32-colliding f64 build keys: conflated by the packed space, so
-    # the m:1 uniqueness guard must reject them up front on every path
+    # f32-colliding f64 build keys: conflated by the packed space, and
+    # no longer caught by a uniqueness guard (m:n made duplicates
+    # legal) — the explicit conflation check must reject them up front
     bad = {"key": np.array([1.0, 1.0 + 1e-12]), "rv": np.array([1.0, 2.0])}
-    with pytest.raises(ValueError, match="unique build-side keys"):
+    with pytest.raises(ValueError, match="conflate"):
         _run_join(lcols, bad, "key", "inner", mode)
 
 
@@ -691,15 +706,257 @@ def test_multi_key_beyond_32_bits_raises(eager):
 def test_negative_zero_float_keys_match_everywhere(mode):
     """IEEE says -0.0 == 0.0; the packed bitcast disagrees unless the
     packing normalizes — a probe 0.0 must match a build -0.0 on every
-    path, and a build side holding both zeros must fail the m:1
-    uniqueness guard."""
+    path.  A build side holding both zeros is a GENUINE duplicate
+    (IEEE-equal keys), so it now fans out as an m:n group instead of
+    raising — and must NOT trip the f32-conflation guard."""
     lcols = {"key": np.array([0.0, 1.0]), "lv": np.arange(2.0)}
     rcols = {"key": np.array([-0.0, 1.0]), "rv": np.array([5.0, 6.0])}
     got = _got(_run_join(lcols, rcols, "key", "inner", mode))
     np.testing.assert_allclose(got["rv"], [5.0, 6.0])
     dup = {"key": np.array([0.0, -0.0]), "rv": np.array([1.0, 2.0])}
-    with pytest.raises(ValueError, match="unique build-side keys"):
-        _run_join(lcols, dup, "key", "inner", mode)
+    got2 = _got(_run_join(lcols, dup, "key", "inner", mode))
+    np.testing.assert_allclose(got2["key"], [0.0, 0.0])
+    np.testing.assert_allclose(got2["rv"], [1.0, 2.0])
+
+
+# ---------------------------------------------------------------------------
+# m:n joins (duplicate build-side keys): groupbuilder expansion on every
+# path, pandas-oracle parity, exact cross-path ordering, routing
+# ---------------------------------------------------------------------------
+
+
+def _mn_data(n=900, k=24, fanout_lo=1, fanout_hi=5, seed=11):
+    r = np.random.RandomState(seed)
+    reps = r.randint(fanout_lo, fanout_hi + 1, k)
+    rcols = {"key": np.repeat(np.arange(k), reps).astype(np.int64)}
+    nr = rcols["key"].size
+    rcols["rv"] = r.rand(nr)
+    rcols["ri"] = r.randint(0, 9, nr).astype(np.int64)
+    lcols = {"key": r.randint(0, 2 * k, n).astype(np.int64),
+             "lv": r.rand(n)}
+    return lcols, rcols
+
+
+@needs_pandas
+@pytest.mark.parametrize("how", ["inner", "left"])
+@pytest.mark.parametrize("mode", MODES)
+def test_mn_join_pandas_parity(how, mode):
+    lcols, rcols = _mn_data()
+    want = pd_join(lcols, rcols, "key", how)
+    got = _got(_run_join(lcols, rcols, "key", how, mode))
+    assert set(got) == set(want)
+    # row-SET parity (pandas orders matches differently); sizes first
+    assert got["key"].shape == want["key"].shape
+    cols = sorted(want)
+    def keyed(d):
+        return sorted(zip(*[np.asarray(d[c]).tolist() for c in cols]),
+                      key=repr)
+    for a, b in zip(keyed(got), keyed(want)):
+        np.testing.assert_allclose(
+            np.array(a, np.float64), np.array(b, np.float64),
+            rtol=1e-12, equal_nan=True)
+
+
+@pytest.mark.parametrize("how", ["inner", "left"])
+def test_mn_join_exact_order_across_paths(how):
+    """All three lazy paths must equal the eager oracle EXACTLY —
+    probe-row-major, matches within a probe row in build-row order."""
+    lcols, rcols = _mn_data(n=400, k=12, seed=3)
+    ref = _got(_run_join(lcols, rcols, "key", how, "eager"))
+    for mode in ("off", "auto", "always"):
+        got = _got(_run_join(lcols, rcols, "key", how, mode))
+        for c in ref:
+            np.testing.assert_array_equal(got[c], ref[c],
+                                          err_msg=f"{how}/{mode}/{c}")
+
+
+@needs_pandas
+@pytest.mark.parametrize("how", ["inner", "left"])
+@pytest.mark.parametrize("mode", MODES)
+def test_mn_multi_key_filtered_parity(how, mode):
+    r = np.random.RandomState(8)
+    lcols = {"a": r.randint(0, 6, 500).astype(np.int64),
+             "b": r.randint(0, 3, 500).astype(np.int64),
+             "lv": r.rand(500)}
+    rcols = {"a": np.repeat(np.arange(5), 6).astype(np.int64),
+             "b": np.tile(np.arange(3), 10).astype(np.int64),  # dups!
+             "rv": r.rand(30)}
+    m = lcols["lv"] > 0.4
+    want = pd_join(lcols, rcols, ["a", "b"], how, m=m)
+    got = _got(_run_join(lcols, rcols, ["a", "b"], how, mode,
+                         pred_col="lv", pred_thresh=0.4))
+    assert got["a"].shape == want["a"].shape
+    cols = sorted(want)
+    def keyed(d):
+        return sorted(zip(*[np.asarray(d[c]).tolist() for c in cols]),
+                      key=repr)
+    for a, b in zip(keyed(got), keyed(want)):
+        np.testing.assert_allclose(
+            np.array(a, np.float64), np.array(b, np.float64),
+            rtol=1e-12, equal_nan=True)
+
+
+@pytest.mark.parametrize("how", ["inner", "left"])
+@pytest.mark.parametrize("mode", MODES)
+def test_mn_fanout_32_and_empty_probe(how, mode):
+    r = np.random.RandomState(9)
+    rcols = {"key": np.repeat(np.arange(4), 32).astype(np.int64),
+             "rv": r.rand(128)}
+    lcols = {"key": r.randint(0, 8, 60).astype(np.int64), "lv": r.rand(60)}
+    ref = _got(_run_join(lcols, rcols, "key", how, "eager"))
+    got = _got(_run_join(lcols, rcols, "key", how, mode))
+    for c in ref:
+        np.testing.assert_array_equal(got[c], ref[c])
+    sel = np.isin(lcols["key"], rcols["key"])
+    want_rows = 32 * int(sel.sum()) + (0 if how == "inner"
+                                       else int((~sel).sum()))
+    assert got["key"].shape[0] == want_rows
+    # empty probe side
+    empty = {c: v[:0] for c, v in lcols.items()}
+    got0 = _got(_run_join(empty, rcols, "key", how, mode))
+    assert all(v.size == 0 for v in got0.values())
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_mn_all_miss_left_fill_dtypes(mode):
+    """m:n build side, every probe key missing: left keeps each row once
+    with per-dtype sentinel fills (incl. bool, which the m:n gather
+    path carries natively, no i8 encode)."""
+    lcols = {"key": np.array([100, 101, 102], np.int64)}
+    rcols = {"key": np.array([1, 1, 2], np.int64),
+             "f": np.array([0.5, 0.25, 0.125]),
+             "i": np.array([3, 4, 5], np.int64),
+             "g": np.array([True, False, True])}
+    got = _got(_run_join(lcols, rcols, "key", "left", mode))
+    np.testing.assert_array_equal(got["key"], lcols["key"])
+    assert got["f"].dtype == np.float64 and np.isnan(got["f"]).all()
+    assert got["i"].dtype == np.int64 and (got["i"] == 0).all()
+    assert got["g"].dtype == np.bool_ and (~got["g"]).all()
+    gi = _got(_run_join(lcols, rcols, "key", "inner", mode))
+    assert all(v.size == 0 for v in gi.values())
+
+
+def test_mn_join_routes_one_group_build_and_probe():
+    """An m:n join under kernelize='always' must launch exactly ONE
+    group_build and ONE group_probe, whatever the output width."""
+    lcols, rcols = _mn_data()
+    st: dict = {}
+    out = _run_join(lcols, rcols, "key", "inner", "always",
+                    collect_stats=st)
+    assert len(out.cols) == 4
+    assert st.get("kernelize.group_build", 0) == 1, st.get("kernelplan")
+    assert st.get("kernelize.group_probe", 0) == 1, st.get("kernelplan")
+    assert st.get("kernelize.hash_probe", 0) == 0
+    # m:1 joins must keep the dictmerger route (no group expansion)
+    uniq = {"key": np.arange(24, dtype=np.int64),
+            "rv": np.random.RandomState(0).rand(24)}
+    st2: dict = {}
+    _run_join(lcols, uniq, "key", "inner", "always", collect_stats=st2)
+    assert st2.get("kernelize.group_probe", 0) == 0
+    assert st2.get("kernelize.hash_probe", 0) == 1
+
+
+@pytest.mark.parametrize("how", ["inner", "left"])
+def test_mn_join_interpret_impl_parity(how):
+    lcols, rcols = _mn_data(n=300, k=10, seed=21)
+    outs = {}
+    for impl in ("ref", "interpret"):
+        t = weldrel.Table(lcols, eager=False)
+        r = weldrel.Table(rcols, eager=False)
+        outs[impl] = _got(weldrel.Query(t).join(
+            r, on="key", how=how, kernelize="always", kernel_impl=impl))
+    for c in outs["ref"]:
+        np.testing.assert_allclose(outs["ref"][c], outs["interpret"][c],
+                                   equal_nan=True)
+
+
+# ---------------------------------------------------------------------------
+# kernel-level parity: ref oracle vs interpreted Pallas kernels for the
+# group build / probe pair, plus poison/overflow propagation
+# ---------------------------------------------------------------------------
+
+
+def test_group_build_contract_both_impls():
+    from repro.kernels import ops as kops
+    from repro.kernels.hash_table import EMPTY
+
+    keys = np.concatenate([
+        rng.randint(-30, 30, 300).astype(np.int64) * 999_983,
+        np.array([EMPTY] * 5, np.int64),
+    ])
+    rng.shuffle(keys)
+    valid = keys != EMPTY
+    cap = np.unique(keys[valid]).size
+    got = {}
+    for impl in ("ref", "interpret"):
+        cs, offs, used = map(np.asarray, kops.group_build(
+            np.asarray(keys), cap, impl=impl))
+        got[impl] = (cs, offs, used)
+        assert used == cap
+        assert (cs[~valid] == cap).all()
+        uk = np.unique(keys[valid])
+        for s, kk in enumerate(uk):
+            # equal keys share one slot; slots ascend with key order;
+            # CSR sizes equal the per-key multiplicities
+            assert (cs[keys == kk] == s).all()
+            assert offs[s + 1] - offs[s] == (keys == kk).sum()
+        assert offs[0] == 0 and offs[cap] == valid.sum()
+    for a, b in zip(got["ref"], got["interpret"]):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_group_probe_parity_both_impls():
+    from repro.kernels import ops as kops
+
+    cap, count = 48, 32
+    table = np.sort(rng.choice(5000, count, replace=False)).astype(np.int64)
+    table = np.concatenate([table, np.full(cap - count, 88_888, np.int64)])
+    big = np.iinfo(np.int64).max
+    neut = np.where(np.arange(cap) < count, table, big)
+    sizes = rng.randint(1, 6, cap)
+    offsets = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int32)
+    queries = rng.randint(0, 5000, 400).astype(np.int64)
+    got = {}
+    for impl in ("ref", "interpret"):
+        pos, found, sz = map(np.asarray, kops.group_probe(
+            neut, offsets, count, queries, impl=impl))
+        got[impl] = (pos, found, sz)
+        want_found = np.isin(queries, table[:count])
+        np.testing.assert_array_equal(found, want_found)
+        np.testing.assert_array_equal(table[pos[found]], queries[found])
+        np.testing.assert_array_equal(sz[found], sizes[pos[found]])
+        assert (pos[~found] == 0).all() and (sz[~found] == 0).all()
+    for a, b in zip(got["ref"], got["interpret"]):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+def test_group_build_overflow_poisons_and_probe_propagates(impl):
+    """More distinct build keys than the builder capacity: the group
+    build flags a NEGATIVE count, decode raises, and a probe against
+    the poisoned group propagates count=-1 into its output vector."""
+    import jax.numpy as jnp
+
+    from repro.core.backend.values import WVec
+    from repro.core.kernelplan import registry as kreg
+
+    keys = WVec(jnp.asarray(np.arange(64, dtype=np.int64) * 3))
+    params = {"capacity": 16, "n_keys": 1, "key_nps": ("int64",),
+              "has_pred": False}
+    fns = [lambda i, x: x, lambda i, x: i]
+    g = kreg._exec_group_build([keys], params, fns, impl)
+    assert int(np.asarray(g.count)) < 0
+    with pytest.raises(RuntimeError, match="distinct keys"):
+        g.to_numpy()
+    probe = WVec(jnp.asarray(np.arange(10, dtype=np.int64)))
+    pparams = {"how": "inner", "n_keys": 1, "n_iters": 1,
+               "cols": (("expr", 0),), "fills": (None,), "out_cap": 10,
+               "has_pred": False}
+    pfns = [lambda i, x: x, lambda i, x: x]
+    outs = kreg._exec_group_probe([g, probe], pparams, pfns, impl)
+    assert int(np.asarray(outs[0].count)) == -1
+    with pytest.raises(RuntimeError, match="poisoned"):
+        outs[0].to_numpy()
 
 
 def test_composed_dict_build_parity_ref_vs_interpret():

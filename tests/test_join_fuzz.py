@@ -1,0 +1,198 @@
+"""Differential join fuzzer: random tables x join specs against a
+pandas oracle on every execution path.
+
+Each generated case draws a probe and a build table (mixed dtypes,
+duplicate keys with skewed fan-out, empty sides, float keys exact in
+f32), a join spec (``how`` x single/multi-key x optional filter), and
+asserts ROW-SET parity across eager / ``kernelize="off"`` / ``"auto"``
+/ ``"always"`` — four implementations, one oracle.  Error parity is
+fuzzed too: specs every path must reject (m:n anti) must raise on
+every path.
+
+Generation is seed-driven so the same machinery serves three profiles:
+
+* a bounded, fixed-seed CI profile (``test_join_fuzz_quick``) that
+  always runs;
+* a >=200-example deep profile (``test_join_fuzz_deep``, marked slow —
+  the "locally"/--full tier);
+* a hypothesis property over the seed space, reusing the
+  optional-import pattern from tests/test_kernels.py (runs only where
+  hypothesis is installed, ``derandomize`` keeps CI deterministic).
+
+Case sizes come from a small palette on purpose: the compile cache is
+keyed on (structure, shapes), so repeated shape buckets amortize
+compilation and the fuzzer spends its time EXECUTING joins.
+"""
+import numpy as np
+import pytest
+import jax
+
+# the IR runtime enables x64 globally on import; do the same here so
+# packed i64 keys survive when this module runs first/alone.
+jax.config.update("jax_enable_x64", True)
+
+try:  # pragma: no cover - environment-dependent
+    import pandas as pd
+except ImportError:
+    pd = None
+
+try:  # hypothesis is an optional extra (same pattern as test_kernels)
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - environment-dependent
+    HAVE_HYPOTHESIS = False
+
+    def given(**kw):  # no-op decorator: the test below is skipped
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    def settings(**kw):
+        def deco(fn):
+            return fn
+        return deco
+
+    class st:  # noqa: N801 - mirrors the hypothesis strategies namespace
+        @staticmethod
+        def integers(*a, **kw):
+            return None
+
+from repro.frames import weldrel  # noqa: E402
+
+pytestmark = pytest.mark.skipif(pd is None, reason="pandas not installed")
+
+MODES = ("eager", "off", "auto", "always")
+
+#: shape palette (see module docstring: small on purpose, cache-friendly)
+L_SIZES = (0, 1, 3, 17, 60)
+R_SIZES = (0, 1, 4, 25)
+VAL_KINDS = ("f64", "i64", "bool")
+
+
+def make_case(rng: np.random.RandomState):
+    """One random (lcols, rcols, on, how, filtered) join case."""
+    nk = 1 if rng.rand() < 0.7 else 2
+    how = ("inner", "left", "anti")[rng.randint(0, 3)]
+    n_l = int(L_SIZES[rng.randint(0, len(L_SIZES))])
+    n_r = int(R_SIZES[rng.randint(0, len(R_SIZES))])
+    uni = int(rng.randint(1, 8))  # small key universe -> many duplicates
+    float_keys = nk == 1 and rng.rand() < 0.25
+
+    def keycol(n):
+        c = rng.randint(0, uni, n)
+        if n and rng.rand() < 0.3:  # skewed fan-out: one hot key
+            c[rng.randint(0, n, max(n // 2, 1))] = int(rng.randint(0, uni))
+        if float_keys:
+            return c.astype(np.float64) * 0.5  # exact in f32: no conflation
+        return c.astype(np.int64)
+
+    lcols = {"k": keycol(n_l)}
+    rcols = {"k": keycol(n_r)}
+    if nk > 1:
+        lcols["k2"] = rng.randint(0, 3, n_l).astype(np.int64)
+        rcols["k2"] = rng.randint(0, 3, n_r).astype(np.int64)
+    lcols["lv"] = rng.rand(n_l)
+    kind = VAL_KINDS[rng.randint(0, len(VAL_KINDS))]
+    if kind == "bool":
+        rcols["rv"] = rng.rand(n_r) > 0.5
+    elif kind == "i64":
+        rcols["rv"] = rng.randint(-5, 5, n_r).astype(np.int64)
+    else:
+        rcols["rv"] = rng.rand(n_r)
+    on = ["k", "k2"] if nk > 1 else "k"
+    filtered = rng.rand() < 0.4
+    return lcols, rcols, on, how, filtered
+
+
+def pd_oracle(lcols, rcols, on, how, m=None, suffix="_r"):
+    """pandas oracle for weldrel's join semantics (sentinel fills, not
+    pandas' float upcast; anti via the merge indicator)."""
+    on = [on] if isinstance(on, str) else list(on)
+    ldf = pd.DataFrame(lcols)
+    if m is not None:
+        ldf = ldf[m]
+    rdf = pd.DataFrame(rcols)
+    if how == "anti":
+        mg = ldf.merge(rdf[on].drop_duplicates(), on=on, how="left",
+                       indicator=True)
+        out = mg[mg["_merge"] == "left_only"]
+        return {c: out[c].to_numpy() for c in ldf.columns}
+    mg = ldf.merge(rdf, on=on, how=how, suffixes=("", suffix))
+    out = {c: mg[c].to_numpy() for c in ldf.columns}
+    for c in rdf.columns:
+        if c in on:
+            continue
+        name = c + suffix if c in ldf.columns else c
+        v = mg[name].to_numpy()
+        want_dt = np.asarray(rcols[c]).dtype
+        if how == "left" and not np.issubdtype(want_dt, np.floating):
+            miss = np.isnan(v.astype(np.float64))
+            v = np.where(miss, np.zeros((), want_dt), v).astype(want_dt)
+        out[name] = v
+    return out
+
+
+def _rowset(d):
+    cols = sorted(d)
+    if not cols:
+        return []
+    rows = zip(*[np.asarray(d[c]).tolist() for c in cols])
+    return sorted(tuple(repr(x) for x in r) for r in rows)
+
+
+def _run(lcols, rcols, on, how, mode, filtered):
+    eager = mode == "eager"
+    t = weldrel.Table(lcols, eager=eager)
+    r = weldrel.Table(rcols, eager=eager)
+    q = weldrel.Query(t)
+    if filtered:
+        q = q.filter(t.col("lv") > 0.5)
+    kw = {} if eager else {"kernelize": mode}
+    out = q.join(r, on=on, how=how, **kw)
+    return {c: np.asarray(weldrel._host(out.cols[c])) for c in out.cols}
+
+
+def check_case(lcols, rcols, on, how, filtered):
+    m = (lcols["lv"] > 0.5) if filtered else None
+    dup = (pd.DataFrame(rcols)[[c for c in
+                                (on if isinstance(on, list) else [on])]]
+           .duplicated().any())
+    if how == "anti" and dup:
+        # error parity: m:n anti is rejected on EVERY path
+        for mode in MODES:
+            with pytest.raises(NotImplementedError):
+                _run(lcols, rcols, on, how, mode, filtered)
+        return
+    want = _rowset(pd_oracle(lcols, rcols, on, how, m=m))
+    for mode in MODES:
+        got = _rowset(_run(lcols, rcols, on, how, mode, filtered))
+        assert got == want, (
+            f"join differs from pandas oracle: mode={mode} how={how} "
+            f"on={on} filtered={filtered} n_l={len(lcols['k'])} "
+            f"n_r={len(rcols['k'])}\n got[:5]={got[:5]}\nwant[:5]={want[:5]}"
+        )
+
+
+def _fuzz(n_examples: int, seed: int):
+    rng = np.random.RandomState(seed)
+    for _ in range(n_examples):
+        check_case(*make_case(rng))
+
+
+def test_join_fuzz_quick():
+    """Bounded fixed-seed profile: always runs (CI gate)."""
+    _fuzz(25, seed=2026)
+
+
+@pytest.mark.slow
+def test_join_fuzz_deep():
+    """>=200 examples — the local / --full profile of the fuzzer."""
+    _fuzz(200, seed=515000)
+
+
+@given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1))
+@settings(max_examples=40, deadline=None, derandomize=True)
+def test_join_fuzz_hypothesis(seed):
+    """Property form over the generator's seed space (shrinks to the
+    smallest failing seed); bounded + derandomized for CI."""
+    check_case(*make_case(np.random.RandomState(seed)))
