@@ -32,7 +32,8 @@ import numpy as np
 
 from repro.frames import weldrel
 
-from .common import Suite, time_fn
+from .common import RowCollector, Suite, merge_routing, time_fn, \
+    write_results
 
 
 def make_join_data(n: int, k: int, seed: int = 3):
@@ -92,14 +93,16 @@ def _validate(lcols, rcols, kernelize):
         (got, want_rev, kernelize)
 
 
-def run(emit, n=1_000_000, smoke=False, tol=0.35):
+def run(emit, n=1_000_000, smoke=False, tol=0.35, routing=None):
     s = Suite(emit)
     k = max(n // 20, 64)
+    routing = routing if routing is not None else {}
 
     # -- large config: both kernels must route under auto ------------------
     lcols, rcols = make_join_data(n, k)
     st: dict = {}
     weld_join(lcols, rcols, "auto", collect_stats=st)
+    merge_routing(routing, st)
     if smoke:
         routed = st.get("kernelplan", {}).get("routed", {})
         assert st.get("kernelize.dict_hash_build", 0) >= 1, \
@@ -125,6 +128,7 @@ def run(emit, n=1_000_000, smoke=False, tol=0.35):
                            ("anti", int((~sel).sum()))):
         sth: dict = {}
         out = weld_join(lcols, rcols, "always", how=how, collect_stats=sth)
+        merge_routing(routing, sth)
         rows = weldrel._host(out.cols["key"]).shape[0]
         assert rows == want_rows, (how, rows, want_rows)
         if how == "left":
@@ -144,6 +148,7 @@ def run(emit, n=1_000_000, smoke=False, tol=0.35):
     stm: dict = {}
     outm = weld_join(mlcols, mrcols, "always", on=["key", "key2"],
                      collect_stats=stm)
+    merge_routing(routing, stm)
     if smoke:
         assert stm.get("kernelize.dict_hash_build", 0) == 1, \
             f"multi-key build must route: {stm.get('kernelplan')}"
@@ -166,6 +171,7 @@ def run(emit, n=1_000_000, smoke=False, tol=0.35):
         ml, mr = make_mn_data(n_mn, kmn, fanout)
         stg: dict = {}
         outg = weld_join(ml, mr, "always", collect_stats=stg)
+        merge_routing(routing, stg)
         # expansion-size oracle: sum of per-probe-row build match counts
         uniq, cnts = np.unique(mr["key"], return_counts=True)
         cnt_map = np.zeros(2 * kmn, np.int64)
@@ -194,6 +200,7 @@ def run(emit, n=1_000_000, smoke=False, tol=0.35):
     tl, tr = make_join_data(256, 32, seed=5)
     st2: dict = {}
     weld_join(tl, tr, "auto", collect_stats=st2)
+    merge_routing(routing, st2)
     if smoke:
         assert st2.get("kernelize.matched", 0) == 0, \
             f"auto must gate the tiny join: {st2.get('kernelplan')}"
@@ -224,8 +231,12 @@ def main() -> None:
     args = ap.parse_args()
     n = args.n or (300_000 if args.smoke else 1_000_000)
     print("name,us_per_call,derived")
-    run(lambda line: print(line, flush=True), n=n, smoke=args.smoke,
-        tol=args.tol)
+    emit = RowCollector(lambda line: print(line, flush=True))
+    routing: dict = {}
+    run(emit, n=n, smoke=args.smoke, tol=args.tol, routing=routing)
+    write_results("join_hash", emit.rows,
+                  config={"n": n, "smoke": args.smoke, "tol": args.tol},
+                  routing=routing)
     if args.smoke:
         print("# join smoke ablation OK")
 

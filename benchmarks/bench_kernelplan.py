@@ -34,7 +34,7 @@ from repro.frames import welddf, weldrel
 from .bench_pagerank import make_graph, pagerank_native_iter, \
     weld_pagerank_iter
 from .bench_tpch import make_lineitem, q6_native
-from .common import Suite, time_fn
+from .common import RowCollector, Suite, merge_routing, time_fn, write_results
 from .workloads import black_scholes_native, black_scholes_weld_expr, \
     make_bs_data
 
@@ -50,8 +50,9 @@ def _q6(c, kernelize, collect_stats=None):
                  kernelize=kernelize, collect_stats=collect_stats)["rev"]
 
 
-def run(emit, n=1_000_000, smoke=False, tol=0.35):
+def run(emit, n=1_000_000, smoke=False, tol=0.35, routing=None):
     s = Suite(emit)
+    routing = routing if routing is not None else {}
     ratios = []  # (workload, auto_us/jnp_us, closure) for the smoke gate
 
     def triple(tag, key, fn):
@@ -78,6 +79,7 @@ def run(emit, n=1_000_000, smoke=False, tol=0.35):
     want = q6_native(c)
     st: dict = {}
     got = _q6(c, "auto", st)
+    merge_routing(routing, st)
     if big:
         assert st.get("kernelize.filter_reduce_sum", 0) >= 1, \
             f"auto must route Q6 at n={n}: {st.get('kernelplan')}"
@@ -97,6 +99,7 @@ def run(emit, n=1_000_000, smoke=False, tol=0.35):
     st = {}
     got = weld_pagerank_iter(rank0, src_o, dst_o, invdeg_o, nv,
                              kernelize="auto", collect_stats=st)
+    merge_routing(routing, st)
     if nv > 4096:  # beyond the VMEM tile bound the route can never win
         assert st.get("kernelize.vecmerger_segment_sum", 0) == 0, \
             f"auto must gate the large-K vecmerger: {st.get('kernelplan')}"
@@ -123,6 +126,7 @@ def run(emit, n=1_000_000, smoke=False, tol=0.35):
     st = {}
     d1 = df.groupby_sum("state", "crime", capacity=64, kernelize="auto",
                         collect_stats=st)
+    merge_routing(routing, st)
     gb_routed = st.get("kernelize.dict_group_sum", 0) >= 1
     if big:
         assert gb_routed, \
@@ -149,6 +153,7 @@ def run(emit, n=1_000_000, smoke=False, tol=0.35):
     expr = black_scholes_weld_expr(d)
     st = {}
     got = expr.evaluate(kernelize="auto", collect_stats=st)
+    merge_routing(routing, st)
     if big:
         assert st.get("kernelize.filter_reduce_sum", 0) >= 1, \
             f"auto must route Black-Scholes at n={n}: {st.get('kernelplan')}"
@@ -189,8 +194,12 @@ def main() -> None:
     args = ap.parse_args()
     n = args.n or (300_000 if args.smoke else 1_000_000)
     print("name,us_per_call,derived")
-    run(lambda line: print(line, flush=True), n=n, smoke=args.smoke,
-        tol=args.tol)
+    emit = RowCollector(lambda line: print(line, flush=True))
+    routing: dict = {}
+    run(emit, n=n, smoke=args.smoke, tol=args.tol, routing=routing)
+    write_results("kernelplan_ablation", emit.rows,
+                  config={"n": n, "smoke": args.smoke, "tol": args.tol},
+                  routing=routing)
     if args.smoke:
         print("# kernelplan smoke ablation OK")
 

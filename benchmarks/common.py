@@ -1,10 +1,17 @@
-"""Shared benchmark utilities: robust timing + CSV rows.
+"""Shared benchmark utilities: robust timing + CSV rows + JSON results.
 
 Every benchmark emits ``name,us_per_call,derived`` rows where `derived`
 carries the figure-relevant ratio (e.g. speedup vs the native baseline).
+Harness entry points additionally persist each bench's rows as
+machine-readable ``BENCH_<name>.json`` (config, timings, routing counts,
+git rev) under ``benchmarks/results/`` — the perf-trajectory dataset;
+override the directory with ``$WELD_BENCH_RESULTS``.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
 import time
 from typing import Callable, List, Optional
 
@@ -48,3 +55,84 @@ class Suite:
             derived = f"speedup_vs_{vs}={self.baselines[vs] / us:.2f}x"
         self.emit(row(name, us, derived))
         return us
+
+
+# ---------------------------------------------------------------------------
+# Machine-readable results (BENCH_<name>.json)
+# ---------------------------------------------------------------------------
+
+ENV_RESULTS = "WELD_BENCH_RESULTS"
+
+
+class RowCollector:
+    """Wraps an emit callback, parsing every CSV row into a dict so the
+    harness can persist structured results next to the printed CSV."""
+
+    def __init__(self, emit: Callable[[str], None]):
+        self._emit = emit
+        self.rows: List[dict] = []
+
+    def __call__(self, line: str) -> None:
+        parts = line.split(",", 2)
+        if len(parts) >= 2 and not line.startswith("#"):
+            try:
+                us = float(parts[1])
+            except ValueError:
+                us = None
+            self.rows.append({
+                "name": parts[0],
+                "us_per_call": us,
+                "derived": parts[2] if len(parts) > 2 else "",
+            })
+        self._emit(line)
+
+
+def git_rev() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            stderr=subprocess.DEVNULL, text=True,
+        ).strip()
+    except Exception:
+        return "unknown"
+
+
+def merge_routing(dst: dict, stats: dict) -> dict:
+    """Accumulate ``kernelize.*`` routing counts from one evaluation's
+    collect_stats dict into a bench-level routing summary."""
+    for k, v in stats.items():
+        if k.startswith("kernelize.") and isinstance(v, int):
+            dst[k] = dst.get(k, 0) + v
+    return dst
+
+
+def results_dir() -> str:
+    return os.environ.get(ENV_RESULTS) or os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "results"
+    )
+
+
+def write_results(name: str, rows: List[dict], config: Optional[dict] = None,
+                  routing: Optional[dict] = None,
+                  error: Optional[str] = None) -> Optional[str]:
+    """Persist one bench's results as ``BENCH_<name>.json``.  Best-effort:
+    an unwritable results directory never fails the bench."""
+    payload = {
+        "bench": name,
+        "git_rev": git_rev(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "config": config or {},
+        "routing": routing or {},
+        "rows": rows,
+    }
+    if error is not None:
+        payload["error"] = error
+    out = os.path.join(results_dir(), f"BENCH_{name}.json")
+    try:
+        os.makedirs(os.path.dirname(out), exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=1)
+    except OSError:
+        return None
+    return out

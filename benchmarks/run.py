@@ -38,6 +38,8 @@ def main() -> None:
     args = ap.parse_args()
     only = args.only.split(",") if args.only else None
 
+    from .common import RowCollector, write_results
+
     print("name,us_per_call,derived")
     t0 = time.time()
     failures = []
@@ -46,17 +48,23 @@ def main() -> None:
             continue
         print(f"# {name}", file=sys.stderr, flush=True)
         mod = __import__(modpath, fromlist=["run"])
+        emit = RowCollector(lambda line: print(line, flush=True))
+        err = None
+        kw = {}
         try:
             import inspect
             sig = inspect.signature(mod.run)
-            kw = {}
             if "n" in sig.parameters and args.scale != 1.0:
                 default_n = sig.parameters["n"].default
                 kw["n"] = max(int(default_n * args.scale), 1000)
-            mod.run(lambda line: print(line, flush=True), **kw)
+            mod.run(emit, **kw)
         except Exception as e:  # noqa: BLE001
-            failures.append((name, repr(e)))
+            err = repr(e)
+            failures.append((name, err))
             print(f"{name},NaN,ERROR:{e!r}", flush=True)
+        write_results(name, emit.rows,
+                      config={"module": modpath, "scale": args.scale, **kw},
+                      error=err)
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
     if failures:
         print(f"# FAILURES: {failures}", file=sys.stderr)

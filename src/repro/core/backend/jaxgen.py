@@ -713,10 +713,12 @@ class _LoopCtx:
 class Emitter:
     def __init__(self, input_shapes: Dict[str, tuple],
                  memory_limit: Optional[int] = None,
-                 kernel_impl: Optional[str] = None):
+                 kernel_impl: Optional[str] = None,
+                 measure: bool = False):
         self.input_shapes = input_shapes
         self.memory_limit = memory_limit
         self.kernel_impl = kernel_impl
+        self.measure = measure
         self.est_bytes = 0
 
     # -- entry ---------------------------------------------------------------
@@ -902,7 +904,42 @@ class Emitter:
                     f"{self.memory_limit}"
                 )
         fns = [self._stage_elem_fn(lam, env) for lam in x.fns]
-        return spec.execute(args, params, fns, self.kernel_impl)
+        if self.measure:
+            return self._measured_kernel_call(x, spec, args, params, fns)
+        # per-launch label: device profiles (and jaxpr dumps) name each
+        # kernel launch after the IR loop it was planned from
+        from .. import obs
+
+        obs.event("launch.stage", kernel=x.kernel,
+                  n=params.get("n_rows"), impl=self.kernel_impl)
+        with jax.named_scope(f"weld.{x.kernel}"):
+            return spec.execute(args, params, fns, self.kernel_impl)
+
+    def _measured_kernel_call(self, x: ir.KernelCall, spec, args, params,
+                              fns):
+        """Eager-replay path: time this launch, record a span and a cost
+        ledger entry carrying the planner's ``predicted_ns`` next to the
+        measured wall time."""
+        from .. import obs
+
+        block = {k: v for k, v in params.items()
+                 if k in ("block", "bm", "bn", "bk")}
+        with obs.span(f"kernel.{x.kernel}", n=params.get("n_rows"),
+                      impl=self.kernel_impl, **block) as sp:
+            out = spec.execute(args, params, fns, self.kernel_impl)
+            out = jax.block_until_ready(out)
+        predicted = params.get("predicted_ns")
+        sp.set("predicted_ns", predicted)
+        sp.set("measured_ns", sp.dur_ns)
+        from ..kernelplan.autotune import _np_dtype_of
+
+        dtype = str(np.dtype(_np_dtype_of(x.ret_ty)))
+        obs.ledger.record(
+            kernel=x.kernel, dtype=dtype, n=params.get("n_rows") or 0,
+            predicted_ns=predicted, measured_ns=sp.dur_ns or 0,
+            impl=self.kernel_impl, params=block,
+        )
+        return out
 
     @staticmethod
     def _kernel_footprint(spec, args, x: ir.KernelCall, params) -> int:
@@ -1313,15 +1350,22 @@ def emit_program(expr: ir.Expr, input_names: List[str],
                  input_types: Dict[str, wt.WeldType],
                  input_shapes: Dict[str, tuple],
                  memory_limit: Optional[int] = None,
-                 kernel_impl: Optional[str] = None):
-    """Returns fn(*arrays) evaluating the program; wrap in jax.jit."""
+                 kernel_impl: Optional[str] = None,
+                 measure: bool = False):
+    """Returns fn(*arrays) evaluating the program; wrap in jax.jit.
+
+    With ``measure=True`` the closure must be run *unjitted*: every
+    ``KernelCall`` is individually timed (``block_until_ready``) and
+    recorded as an obs span + cost-ledger entry.
+    """
 
     def fn(*arrays):
         env = {}
         for name, arr in zip(input_names, arrays):
             ty = input_types[name]
             env[name] = _wrap_input(arr, ty)
-        em = Emitter(input_shapes, memory_limit, kernel_impl=kernel_impl)
+        em = Emitter(input_shapes, memory_limit, kernel_impl=kernel_impl,
+                     measure=measure)
         return em.run(expr, env)
 
     return fn

@@ -37,6 +37,7 @@ from typing import Dict, Iterable, Optional, Tuple
 import numpy as np
 
 from .. import ir
+from .. import obs
 from .. import wtypes as wt
 from . import registry as reg
 
@@ -71,13 +72,16 @@ def _load() -> Dict[str, dict]:
                 raise ValueError("cache root is not an object")
         except OSError:
             _cache = {}  # no cache yet: normal first run
-        except ValueError:
+        except ValueError as e:
             # corrupt/truncated JSON (e.g. a crashed writer before the
             # save became atomic) must not break the compile — start
-            # empty and re-tune; the next _save overwrites the bad file
+            # empty and re-tune; the next _save overwrites the bad file.
+            # Name the file and the parse error so the user can inspect
+            # or delete it instead of silently re-tuning forever.
             warnings.warn(
-                f"autotune cache {path} is corrupt; ignoring it and "
-                "re-tuning from scratch",
+                f"autotune cache {path} is corrupt ({e}); ignoring it "
+                "and re-tuning from scratch — delete the file to silence "
+                "this warning",
                 RuntimeWarning, stacklevel=2,
             )
             _cache = {}
@@ -205,14 +209,23 @@ def tune(spec: "reg.KernelSpec", meta: dict, impl: str,
     # time the grid on a synthetic same-bucket workload
     bench_meta = dict(meta, n=size_bucket(n))
     best_params, best_t = defaults, float("inf")
-    for cand in _grid(spec.tune_space):
-        try:
-            go = spec.make_bench(bench_meta, cand, impl)
-            t = _time_candidate(go)
-        except Exception:
-            continue  # candidate invalid for this shape — skip
-        if t < best_t:
-            best_params, best_t = cand, t
+    with obs.span("autotune.tune", kernel=spec.name, n=size_bucket(n),
+                  impl=impl) as tsp:
+        for cand in _grid(spec.tune_space):
+            try:
+                go = spec.make_bench(bench_meta, cand, impl)
+                t = _time_candidate(go)
+            except Exception:
+                obs.event("autotune.candidate", kernel=spec.name,
+                          skipped=True, **cand)
+                continue  # candidate invalid for this shape — skip
+            obs.event("autotune.candidate", kernel=spec.name,
+                      us=round(t * 1e6, 2), **cand)
+            if t < best_t:
+                best_params, best_t = cand, t
+        tsp.set("best", dict(best_params))
+        if best_t < float("inf"):
+            tsp.set("us", round(best_t * 1e6, 2))
     c = _load()
     c[_key(spec.name, meta.get("dtype", "f8"), n, impl, k=k, dims=dims)] = {
         "params": best_params,

@@ -55,6 +55,7 @@ from __future__ import annotations
 from typing import Dict, List, Optional, Tuple
 
 from .. import ir
+from .. import obs as _obs
 from .. import wtypes as wt
 from ..backend.jaxgen import match_group_probe as _group_probe_shape
 from . import cost as _cost
@@ -1098,11 +1099,22 @@ def plan_kernels(
         if mode == "auto":
             est = _cost.estimate(reg.get(kc.kernel), meta)
             kplan["costs"].append({"kernel": kc.kernel, **est.as_stats()})
+            _obs.event("kernelplan.candidate", kernel=kc.kernel,
+                       n=meta.get("n"), **est.as_stats())
             if not est.routed:
                 kplan["rejected"][kc.kernel] = (
                     kplan["rejected"].get(kc.kernel, 0) + 1
                 )
                 return orig
+        else:
+            # "always" routes unconditionally, but the roofline price is
+            # still worth stamping for the ledger — best-effort
+            try:
+                est = _cost.estimate(reg.get(kc.kernel), meta)
+            except Exception:
+                est = _cost.REJECT_UNKNOWN
+            _obs.event("kernelplan.candidate", kernel=kc.kernel,
+                       n=meta.get("n"), routed=True, why="mode=always")
         kplan["routed"][kc.kernel] = kplan["routed"].get(kc.kernel, 0) + 1
         stats["kernelize.matched"] += 1
         key = f"kernelize.{kc.kernel}"
@@ -1111,6 +1123,10 @@ def plan_kernels(
         extra: Tuple[Tuple[str, object], ...] = (
             ("n_rows", int(n) if n else -1),
         )
+        if est.kernel_s and est.kernel_s != float("inf"):
+            # the roofline prediction rides along in the plan so the
+            # measured replay / cost ledger can compare against it
+            extra += (("predicted_ns", int(est.kernel_s * 1e9)),)
         if meta.get("dims"):
             extra += (("dims", tuple(int(d) for d in meta["dims"])),)
         if meta.get("k") and "capacity" not in dict(kc.params):

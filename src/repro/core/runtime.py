@@ -20,6 +20,7 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 from . import ir  # noqa: E402
+from . import obs  # noqa: E402
 from . import wtypes as wt  # noqa: E402
 from .backend.jaxgen import emit_program  # noqa: E402
 from .backend.values import WDict, WGroup, WVec  # noqa: E402
@@ -27,6 +28,19 @@ from .lazy import Program  # noqa: E402
 from .passes import loop_count, optimize as run_passes  # noqa: E402
 
 _compile_cache: Dict[str, Tuple[object, dict]] = {}
+
+
+def _copy_stats(v):
+    """Recursively copy the stats containers (dicts/lists) while keeping
+    leaf values (numbers, strings, IR exprs) by reference.  Callers get
+    an isolated tree: mutating it cannot poison the cached entry."""
+    if isinstance(v, dict):
+        return {k: _copy_stats(x) for k, x in v.items()}
+    if isinstance(v, list):
+        return [_copy_stats(x) for x in v]
+    if isinstance(v, tuple):
+        return tuple(_copy_stats(x) for x in v)
+    return v
 
 
 def clear_cache() -> None:
@@ -69,17 +83,25 @@ def compile_and_run(
         from ..kernels import ops as _kops
 
         kernel_impl = _kops.DEFAULT_IMPL
+    with obs.span("weld.evaluate", kernelize=mode, impl=kernel_impl) as root:
+        return _compile_and_run(prog, optimize, memory_limit, passes, mode,
+                                kernelize_on, kernel_impl, root)
+
+
+def _compile_and_run(prog, optimize, memory_limit, passes, mode,
+                     kernelize_on, kernel_impl, root):
     input_names = sorted(prog.inputs)
     arrays = []
     shapes: Dict[str, tuple] = {}
     types: Dict[str, wt.WeldType] = {}
-    for name in input_names:
-        ty, enc, data = prog.inputs[name]
-        arr = enc.encode(data)
-        arr = jnp.asarray(arr)
-        arrays.append(arr)
-        shapes[name] = tuple(arr.shape)
-        types[name] = ty
+    with obs.span("encode", inputs=len(input_names)):
+        for name in input_names:
+            ty, enc, data = prog.inputs[name]
+            arr = enc.encode(data)
+            arr = jnp.asarray(arr)
+            arrays.append(arr)
+            shapes[name] = tuple(arr.shape)
+            types[name] = ty
 
     # positional input aliasing: rebuilt workflows (fresh obj ids) share
     # one compiled executable as long as their structure matches
@@ -107,7 +129,10 @@ def compile_and_run(
     key = _mk_key(kreg)
 
     stats: dict = {}
-    if key in _compile_cache:
+    with obs.span("cache.lookup") as sp:
+        hit = key in _compile_cache
+        sp.set("hit", hit)
+    if hit:
         jitted, stats = _compile_cache[key]
         from_cache = True
         compile_ms = 0.0
@@ -117,22 +142,38 @@ def compile_and_run(
         expr = prog.expr
         stats["loops.before"] = loop_count(expr)
         if optimize:
-            expr = run_passes(expr, passes=passes, stats=stats,
-                              input_shapes=shapes)
+            with obs.span("optimize") as sp:
+                expr = run_passes(expr, passes=passes, stats=stats,
+                                  input_shapes=shapes)
+                sp.set("iterations", stats.get("iterations"))
         stats["loops.after"] = loop_count(expr)
         if kernelize_on:
             from .kernelplan import autotune, plan_kernels
 
-            expr = plan_kernels(expr, input_shapes=shapes, stats=stats,
-                                mode=mode)
+            with obs.span("kernelplan", mode=mode) as sp:
+                expr = plan_kernels(expr, input_shapes=shapes, stats=stats,
+                                    mode=mode)
+                sp.set("matched", stats.get("kernelize.matched", 0))
             if stats.get("kernelize.matched"):
-                expr = autotune.tune_plan(expr, impl=kernel_impl,
-                                          stats=stats)
-        fn = emit_program(expr, input_names, types, shapes, memory_limit,
-                          kernel_impl=kernel_impl)
-        jitted = jax.jit(fn)
-        # trigger tracing+compilation now so compile_ms is honest
-        _ = jitted.lower(*arrays).compile()
+                with obs.span("autotune"):
+                    expr = autotune.tune_plan(expr, impl=kernel_impl,
+                                              stats=stats)
+        # the planned IR is part of the stats so explain()/the measured
+        # replay can reach the program that actually ran (cache hits
+        # included — the expr rides along in the cached stats entry).
+        # plan.inputs pins the COMPILE-time input binding: a later hit
+        # from a rebuilt workflow has fresh obj ids, but its arrays map
+        # positionally onto these names (the cache key aliases inputs
+        # positionally), so the replay re-binds them the same way
+        stats["plan.ir"] = expr
+        stats["plan.inputs"] = (list(input_names), dict(types),
+                                dict(shapes))
+        with obs.span("jit_compile"):
+            fn = emit_program(expr, input_names, types, shapes, memory_limit,
+                              kernel_impl=kernel_impl)
+            jitted = jax.jit(fn)
+            # trigger tracing+compilation now so compile_ms is honest
+            _ = jitted.lower(*arrays).compile()
         compile_ms = (time.perf_counter() - t0) * 1e3
         stats["compile_ms"] = compile_ms
         _compile_cache[key] = (jitted, stats)
@@ -145,10 +186,39 @@ def compile_and_run(
             if kreg_now != kreg:
                 _compile_cache[_mk_key(kreg_now)] = (jitted, stats)
 
-    out = jitted(*arrays)
-    out = jax.block_until_ready(out)
-    value = decode_value(out, prog.out_ty)
-    return value, compile_ms, from_cache, dict(stats)
+    root.set("from_cache", from_cache)
+    with obs.span("execute"):
+        out = jitted(*arrays)
+        out = jax.block_until_ready(out)
+    if (obs.enabled() and stats.get("kernelize.matched")
+            and stats.get("plan.ir") is not None
+            and stats.get("plan.inputs") is not None):
+        pnames, ptypes, pshapes = stats["plan.inputs"]
+        _measured_replay(stats["plan.ir"], pnames, ptypes, pshapes,
+                         memory_limit, kernel_impl, arrays)
+    with obs.span("decode"):
+        value = decode_value(out, prog.out_ty)
+    return value, compile_ms, from_cache, _copy_stats(stats)
+
+
+def _measured_replay(expr, input_names, types, shapes, memory_limit,
+                     kernel_impl, arrays) -> None:
+    """Re-run the planned program eagerly (unjitted) with per-kernel
+    timing enabled, so each ``KernelCall`` gets its own measured span and
+    a cost-ledger record.  The fused jitted executable gives no per-call
+    boundaries, so when tracing is on we pay one extra eager pass to get
+    honest per-kernel wall times (adapter overhead included — the same
+    thing the roofline model prices).  Best-effort: a replay failure is
+    recorded on the span, never raised."""
+    with obs.span("measure.replay") as sp:
+        try:
+            fn = emit_program(expr, input_names, types, shapes,
+                              memory_limit, kernel_impl=kernel_impl,
+                              measure=True)
+            out = fn(*arrays)
+            jax.block_until_ready(out)
+        except Exception as e:  # pragma: no cover - defensive
+            sp.set("error", f"{type(e).__name__}: {e}")
 
 
 def decode_value(v, ty: wt.WeldType):

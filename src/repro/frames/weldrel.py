@@ -42,6 +42,24 @@ class Query:
         self.pred = pred if self.pred is None else (self.pred & pred)
         return self
 
+    def explain(self, analyze: bool = False) -> "_Explain":
+        """EXPLAIN [ANALYZE] the *next* operator instead of returning its
+        result.  Call an operator on the returned proxy exactly as you
+        would on the query::
+
+            rep = Query(t).explain().join(r, on="key")
+            rep = Query(t).explain(analyze=True).agg({...})
+            print(rep)
+
+        The report shows the fused IR after optimization, every routed
+        kernel with its block parameters and roofline estimate, and the
+        planner's route/reject decisions.  With ``analyze=True`` the
+        query also runs with tracing enabled, adding per-span measured
+        times and predicted-vs-measured ratios per kernel launch (the
+        operator's result is still computed and available as
+        ``rep.result``)."""
+        return _Explain(self, analyze)
+
     # -- ungrouped aggregate ---------------------------------------------------
 
     def agg(self, exprs: Dict[str, Tuple[weldnp.ndarray, str]],
@@ -127,6 +145,7 @@ class Query:
         capacity: int = 4096,
         kernelize=None,
         kernel_impl=None,
+        collect_stats: Optional[dict] = None,
     ):
         """GROUP BY keys; all aggregates share ONE dictmerger pass.
         Returns {key_tuple: (agg,...)} (+ implicit count as last value).
@@ -220,7 +239,8 @@ class Query:
         )
         obj = NewWeldObject(deps, ir.Result(loop))
         return Evaluate(obj, kernelize=kernelize,
-                        kernel_impl=kernel_impl).value
+                        kernel_impl=kernel_impl,
+                        collect_stats=collect_stats).value
 
     # -- hash join ---------------------------------------------------------------
 
@@ -716,6 +736,166 @@ class Query:
                        collect_stats=collect_stats)
         arrays = [np.asarray(v) for v in res.value]
         return Table(dict(zip(out_names, arrays)), eager=False)
+
+
+class _Explain:
+    """Proxy returned by :meth:`Query.explain`: runs the next operator
+    with stats collection (and, under ``analyze``, tracing) and wraps
+    the outcome in a :class:`PlanReport` instead of returning it."""
+
+    def __init__(self, query: Query, analyze: bool):
+        self._q = query
+        self._analyze = analyze
+
+    def agg(self, *args, **kwargs) -> "PlanReport":
+        return self._capture("agg", args, kwargs)
+
+    def group_agg(self, *args, **kwargs) -> "PlanReport":
+        return self._capture("group_agg", args, kwargs)
+
+    def join(self, *args, **kwargs) -> "PlanReport":
+        return self._capture("join", args, kwargs)
+
+    def _capture(self, op: str, args, kwargs) -> "PlanReport":
+        from ..core import obs
+
+        if self._q.table.eager:
+            raise ValueError(
+                "explain() requires a lazy table — eager tables never "
+                "build a Weld program to report on"
+            )
+        stats = kwargs.pop("collect_stats", None)
+        stats = {} if stats is None else stats
+        kwargs["collect_stats"] = stats
+        was_on = obs.enabled()
+        if self._analyze:
+            obs.enable()
+        pos = obs.mark()
+        try:
+            result = getattr(Query, op)(self._q, *args, **kwargs)
+        finally:
+            if self._analyze and not was_on:
+                obs.disable()
+        spans = obs.spans_since(pos) if self._analyze else []
+        return PlanReport(op=op, stats=stats, spans=spans,
+                          analyze=self._analyze, result=result)
+
+
+class PlanReport:
+    """Formatted EXPLAIN [ANALYZE] output for one weldrel operator."""
+
+    def __init__(self, op: str, stats: dict, spans: list, analyze: bool,
+                 result: object):
+        self.op = op
+        self.stats = stats
+        self.spans = spans
+        self.analyze = analyze
+        self.result = result
+
+    # -- structured accessors ------------------------------------------------
+
+    def kernels(self) -> List[dict]:
+        """One row per planned KernelCall in the program that ran."""
+        plan = self.stats.get("plan.ir")
+        if plan is None:
+            return []
+        rows = []
+        for node in ir.walk(plan):
+            if not isinstance(node, ir.KernelCall):
+                continue
+            params = dict(node.params)
+            rows.append({
+                "kernel": node.kernel,
+                "n_rows": params.get("n_rows"),
+                "block": {k: v for k, v in params.items()
+                          if k in ("block", "bm", "bn", "bk")},
+                "predicted_ns": params.get("predicted_ns"),
+            })
+        return rows
+
+    def kernel_spans(self) -> List[dict]:
+        """Measured per-launch rows (analyze=True only): predicted vs
+        measured ns and their ratio."""
+        rows = []
+        for sp in self.spans:
+            if not sp.name.startswith("kernel."):
+                continue
+            pred = sp.tags.get("predicted_ns")
+            meas = sp.tags.get("measured_ns") or sp.dur_ns
+            rows.append({
+                "kernel": sp.name[len("kernel."):],
+                "n_rows": sp.tags.get("n"),
+                "predicted_ns": pred,
+                "measured_ns": meas,
+                "ratio": (meas / pred) if pred and meas else None,
+            })
+        return rows
+
+    # -- rendering -----------------------------------------------------------
+
+    def render(self) -> str:
+        from ..core import obs
+        from ..core.pretty import pretty
+
+        st = self.stats
+        kplan = st.get("kernelplan", {})
+        lines = [
+            f"== EXPLAIN{' ANALYZE' if self.analyze else ''} "
+            f"weldrel.{self.op} ==",
+            f"loops: {st.get('loops.before', '?')} -> "
+            f"{st.get('loops.after', '?')} (after fusion)   "
+            f"kernelize={kplan.get('mode', 'off')}   "
+            f"matched={st.get('kernelize.matched', 0)}   "
+            f"compile_ms={st.get('compile_ms', 0.0):.1f}",
+        ]
+        plan = st.get("plan.ir")
+        if plan is not None:
+            lines += ["", "-- fused IR (post-planning) --", pretty(plan)]
+        krows = self.kernels()
+        if krows:
+            lines += ["", "-- routed kernels --"]
+            for r in krows:
+                blk = ",".join(f"{k}={v}" for k, v in r["block"].items())
+                pred = (f"{r['predicted_ns'] / 1e3:.1f}us"
+                        if r["predicted_ns"] else "-")
+                lines.append(
+                    f"  {r['kernel']:<24} n={r['n_rows']!s:<10} "
+                    f"block[{blk}] predicted={pred}"
+                )
+        costs = kplan.get("costs") or []
+        if costs:
+            lines += ["", "-- cost-gate decisions --"]
+            for c in costs:
+                lines.append(
+                    f"  {c.get('kernel'):<24} "
+                    f"kernel={c.get('kernel_us', 0):.1f}us "
+                    f"jnp={c.get('jnp_us', 0):.1f}us "
+                    f"{'ROUTE' if c.get('routed') else 'reject'} "
+                    f"({c.get('why', '')})"
+                )
+        if self.analyze:
+            mrows = self.kernel_spans()
+            if mrows:
+                lines += ["", "-- predicted vs measured (per launch) --"]
+                for r in mrows:
+                    pred = (f"{r['predicted_ns'] / 1e3:10.1f}"
+                            if r["predicted_ns"] else f"{'-':>10}")
+                    ratio = (f"{r['ratio']:.2f}x" if r["ratio"] else "-")
+                    lines.append(
+                        f"  {r['kernel']:<24} n={r['n_rows']!s:<10} "
+                        f"pred_us={pred} meas_us="
+                        f"{(r['measured_ns'] or 0) / 1e3:10.1f} "
+                        f"ratio={ratio}"
+                    )
+            if self.spans:
+                lines += ["", "-- span tree --",
+                          obs.format_tree(self.spans)]
+        return "\n".join(lines)
+
+    __str__ = render
+
+    def __repr__(self) -> str:
+        return self.render()
 
 
 def _host(col: weldnp.ndarray) -> np.ndarray:

@@ -1,0 +1,6 @@
+"""Top-level alias so ``repro.obs.enable()`` works as documented.
+
+The implementation lives in :mod:`repro.core.obs`.
+"""
+from .core.obs import *  # noqa: F401,F403
+from .core.obs import __all__, ledger  # noqa: F401

@@ -620,3 +620,58 @@ def test_kernel_footprint_charged_to_memory_limit():
     # ...while the jnp-only lowering (no kernel scratch) stays within
     r0 = Evaluate(obj, kernelize=False, memory_limit=16 * 1024)
     np.testing.assert_allclose(r0.value, want, rtol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# stats contract: documented key namespaces (loops.*, kernelize.*,
+# kernelplan.*, compile_ms) survive cache hit vs miss, and the returned
+# stats are a COPY — caller-side mutation must never poison the cache
+# ---------------------------------------------------------------------------
+
+DOCUMENTED_STATS = ("loops.before", "loops.after", "kernelize.matched",
+                    "kernelplan", "compile_ms")
+
+
+def test_stats_namespaces_survive_cache_hit_and_miss():
+    from repro.core import runtime
+
+    runtime.clear_cache()
+    obj, _ = _q6_like_obj(2777)
+    st_miss: dict = {}
+    r_miss = Evaluate(obj, kernelize=True, collect_stats=st_miss)
+    assert r_miss.from_cache is False
+    st_hit: dict = {}
+    r_hit = Evaluate(obj, kernelize=True, collect_stats=st_hit)
+    assert r_hit.from_cache is True
+    for key in DOCUMENTED_STATS:
+        assert key in st_miss, f"miss stats lost {key}"
+        assert key in st_hit, f"hit stats lost {key}"
+    assert st_hit["kernelize.filter_reduce_sum"] == 1
+    assert st_hit["kernelplan"]["routed"] == st_miss["kernelplan"]["routed"]
+    # compile_ms in the stats dict is the REAL compile cost (cached in
+    # the entry), even though WeldResult.compile_ms reports 0 on a hit
+    assert st_hit["compile_ms"] == st_miss["compile_ms"] > 0
+
+
+def test_cached_stats_returned_as_copy_mutation_cannot_poison():
+    from repro.core import runtime
+
+    runtime.clear_cache()
+    obj, _ = _q6_like_obj(2779)
+    st1: dict = {}
+    Evaluate(obj, kernelize=True, collect_stats=st1)
+    # poison attempt: mutate scalars AND nested containers of the
+    # returned stats (dict(stats) used to share the nested dicts/lists
+    # with the cache entry)
+    st1["kernelplan"]["routed"]["fake_kernel"] = 99
+    st1["kernelplan"]["costs"].append({"kernel": "fake"})
+    st1["loops.after"] = -1
+    st1["kernelize.matched"] = 0
+    st2: dict = {}
+    r2 = Evaluate(obj, kernelize=True, collect_stats=st2)
+    assert r2.from_cache is True
+    assert "fake_kernel" not in st2["kernelplan"]["routed"]
+    assert all(c.get("kernel") != "fake"
+               for c in st2["kernelplan"]["costs"])
+    assert st2["loops.after"] >= 0
+    assert st2["kernelize.matched"] == 1

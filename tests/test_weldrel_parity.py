@@ -145,8 +145,14 @@ def tuner(tmp_path, monkeypatch):
 def test_autotune_corrupt_cache_warns_and_recovers(tuner):
     with open(tuner.cache_path(), "w") as f:
         f.write('{"filter_reduce_sum|float64|2048|interp')  # truncated write
-    with pytest.warns(RuntimeWarning, match="corrupt"):
+    with pytest.warns(RuntimeWarning, match="corrupt") as rec:
         assert tuner._load() == {}
+    # the warning must point at the offending file AND carry the JSON
+    # parser's error so the user knows what to inspect/delete
+    msg = str(rec[0].message)
+    assert tuner.cache_path() in msg
+    assert "delete the file" in msg
+    assert any(w in msg for w in ("Unterminated", "Expecting", "char")), msg
     # tuning proceeds and the next save replaces the bad file atomically
     from repro.core import kernelplan as kp
 

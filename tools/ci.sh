@@ -38,3 +38,10 @@ echo "== join smoke ablation (hash-build/probe routing check) =="
 # left/anti/multi-key joins each take exactly ONE horizontally fused
 # probe launch (N probes for an N-column join is a fusion regression)
 python -m benchmarks.bench_join --smoke
+
+echo "== explain/trace smoke (weldtrace observability check) =="
+# compiles a kernelized m:n join + a group-by with WELD_TRACE=1,
+# asserts the Chrome-trace export is valid and nested, that
+# explain(analyze=True) shows predicted AND measured kernel times,
+# and that tools/cost_report.py summarizes the produced ledger
+WELD_TRACE=1 python tools/trace_smoke.py

@@ -1,0 +1,57 @@
+#!/usr/bin/env python
+"""Summarize the weldtrace cost ledger: calibration error per kernel.
+
+The ledger (``~/.cache/weld-repro/cost_ledger.jsonl`` by default, or
+``$WELD_COST_LEDGER``) accumulates one record per measured kernel launch
+— the planner's roofline ``predicted_ns`` next to the replay's
+``measured_ns``.  This CLI groups records by (kernel, dtype,
+size-bucket) and reports median predicted/measured times, their ratio,
+and the mean |log2 ratio| calibration error.
+
+    PYTHONPATH=src python tools/cost_report.py [--ledger PATH]
+        [--kernel NAME] [--json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(
+    0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src")
+)
+
+from repro.core.obs import ledger  # noqa: E402
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--ledger", default=None,
+                    help="ledger path (default: $WELD_COST_LEDGER or "
+                         "next to the autotune cache)")
+    ap.add_argument("--kernel", default=None,
+                    help="only report this kernel")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the summary rows as JSON")
+    args = ap.parse_args()
+
+    path = args.ledger or ledger.ledger_path()
+    records = ledger.read(path)
+    if args.kernel:
+        records = [r for r in records if r.get("kernel") == args.kernel]
+    rows = ledger.summarize(records)
+    if args.json:
+        print(json.dumps({"ledger": path, "records": len(records),
+                          "groups": rows}, indent=1))
+    else:
+        print(f"# ledger: {path} ({len(records)} records)")
+        if rows:
+            print(ledger.format_report(rows))
+        else:
+            print("# no records — run a kernelized query with WELD_TRACE=1")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
