@@ -28,18 +28,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import faults
 from .. import ir
 from .. import wtypes as wt
 from ..cudf import has_cudf, lookup_cudf_jax
+from ..errors import ResourceError, WeldError
 from .values import WDict, WGroup, WVec
 
 
-class WeldCompileError(RuntimeError):
-    pass
+class WeldCompileError(WeldError):
+    """The generic lowering refuses this program shape (not a kernel
+    failure — see ``errors.KernelCompileError`` for those)."""
 
 
-class WeldMemoryError(RuntimeError):
-    pass
+#: memory_limit breaches are typed ResourceError; the old name stays an
+#: alias so existing imports/catch sites keep working.
+WeldMemoryError = ResourceError
 
 
 class _NeedsVmap(Exception):
@@ -230,6 +234,15 @@ def _finalize_keyed(acc, is_group: bool):
     seg = jnp.where(valid, seg, acc.capacity)            # park invalid rows
     count = is_new.sum()
     cap = acc.capacity
+    # more distinct keys than capacity must POISON (negative count —
+    # the same convention the kernel adapters use), never silently
+    # truncate: the segment arrays below are only `cap` wide, so any
+    # overflow would otherwise drop whole groups on the floor.  The
+    # dict.build/group.build failpoints force the flag for tests.
+    overflow = count > cap
+    if faults.poisoned("group.build" if is_group else "dict.build"):
+        overflow = True
+    count = jnp.where(overflow, -count - 1, count)
 
     first_idx = jnp.where(is_new, jnp.arange(n), n)
     starts = jnp.sort(first_idx)[:cap]                   # first row per segment
@@ -720,6 +733,22 @@ class Emitter:
         self.kernel_impl = kernel_impl
         self.measure = measure
         self.est_bytes = 0
+        #: dynamic counts of every dict/group this program probed —
+        #: emit_program ORs their signs into the output counts so a
+        #: probe against a poisoned (overflowed) collection can never
+        #: decode as a plausible empty/partial result
+        self.taints: List[object] = []
+
+    def _note_taint(self, coll) -> None:
+        count = getattr(coll, "count", None)
+        if count is not None:
+            self.taints.append(count)
+
+    @staticmethod
+    def _ret_dtype(x: ir.KernelCall) -> str:
+        from ..kernelplan.autotune import _np_dtype_of
+
+        return str(np.dtype(_np_dtype_of(x.ret_ty)))
 
     # -- entry ---------------------------------------------------------------
 
@@ -826,6 +855,7 @@ class Emitter:
             # the SAME find selects the fill — one probe pass, no second
             # search; without one, missing keys yield an arbitrary slot's
             # value — guard with KeyExists, as the frames do.
+            self._note_taint(coll)
             pos, found, scalar = _dict_find(coll, idx)
 
             def gather(a):
@@ -845,6 +875,7 @@ class Emitter:
     def _ev_KeyExists(self, x: ir.KeyExists, env, ctx):
         d = self.ev(x.expr, env, ctx)
         k = self.ev(x.key, env, ctx)
+        self._note_taint(d)
         if isinstance(d, WGroup):
             pos, found, _ = _group_find(d, k)
             return found
@@ -913,7 +944,9 @@ class Emitter:
         obs.event("launch.stage", kernel=x.kernel,
                   n=params.get("n_rows"), impl=self.kernel_impl)
         with jax.named_scope(f"weld.{x.kernel}"):
-            return spec.execute(args, params, fns, self.kernel_impl)
+            return kreg.execute_spec(args=args, params=params, fns=fns,
+                                     impl=self.kernel_impl, spec=spec,
+                                     dtype=self._ret_dtype(x))
 
     def _measured_kernel_call(self, x: ir.KernelCall, spec, args, params,
                               fns):
@@ -924,9 +957,13 @@ class Emitter:
 
         block = {k: v for k, v in params.items()
                  if k in ("block", "bm", "bn", "bk")}
+        from ..kernelplan import registry as kreg
+
         with obs.span(f"kernel.{x.kernel}", n=params.get("n_rows"),
                       impl=self.kernel_impl, **block) as sp:
-            out = spec.execute(args, params, fns, self.kernel_impl)
+            out = kreg.execute_spec(args=args, params=params, fns=fns,
+                                    impl=self.kernel_impl, spec=spec,
+                                    dtype=self._ret_dtype(x))
             out = jax.block_until_ready(out)
         predicted = params.get("predicted_ns")
         sp.set("predicted_ns", predicted)
@@ -1366,9 +1403,39 @@ def emit_program(expr: ir.Expr, input_names: List[str],
             env[name] = _wrap_input(arr, ty)
         em = Emitter(input_shapes, memory_limit, kernel_impl=kernel_impl,
                      measure=measure)
-        return em.run(expr, env)
+        out = em.run(expr, env)
+        if em.taints:
+            # the program probed dynamic-count dicts/groups: a negative
+            # count on ANY of them poisons every countable output, so a
+            # probe against an overflowed build can never decode as a
+            # plausible empty result (the kernel probe adapters already
+            # guarantee this; here the generic lowering matches them)
+            bad = jnp.asarray(False)
+            for t in em.taints:
+                bad = bad | (jnp.asarray(t) < 0)
+            out = _apply_taint(out, bad)
+        return out
 
     return fn
+
+
+def _apply_taint(v, bad):
+    """Poison the dynamic counts of ``v`` where ``bad`` (traced bool)."""
+    if isinstance(v, WVec):
+        if v.count is None:
+            n = v.capacity()
+            return WVec(v.data, jnp.where(bad, jnp.int64(-1), jnp.int64(n)))
+        c = jnp.asarray(v.count)
+        return WVec(v.data, jnp.where(bad, -abs(c) - 1, c))
+    if isinstance(v, WDict):
+        c = jnp.asarray(v.count)
+        return WDict(v.keys, v.vals, jnp.where(bad, -abs(c) - 1, c))
+    if isinstance(v, WGroup):
+        c = jnp.asarray(v.count)
+        return WGroup(v.keys, v.values, v.offsets, jnp.where(bad, -abs(c) - 1, c))
+    if isinstance(v, tuple):
+        return tuple(_apply_taint(x, bad) for x in v)
+    return v
 
 
 def _wrap_input(arr, ty: wt.WeldType):

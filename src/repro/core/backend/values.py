@@ -13,6 +13,8 @@ from typing import Optional, Tuple
 import jax
 import numpy as np
 
+from ..errors import CapacityError
+
 
 @dataclass
 class WVec:
@@ -37,9 +39,10 @@ class WVec:
     def to_numpy(self):
         """Host-side decode: slice off padding."""
         if self.count is not None and int(self.count) < 0:
-            # kernel-planned producers flag unrepresentable inputs by
-            # negating the count (same convention as WDict overflow)
-            raise RuntimeError(
+            # producers flag unrepresentable inputs by negating the
+            # count (same convention as WDict overflow); CapacityError
+            # is the typed signal the recovery ladder retries on
+            raise CapacityError(
                 "kernelized producer flagged this vector as poisoned "
                 "(e.g. a hash-join probe against an overflowed dict); "
                 "rerun with kernelize=False or raise the builder capacity"
@@ -67,9 +70,10 @@ class WDict:
     def to_numpy(self) -> dict:
         n = int(self.count)
         if n < 0:
-            # kernel-planned group-by flags capacity violations by negating
-            # the count (see kernelplan.registry._exec_dict_group_sum)
-            raise RuntimeError(
+            # group-by builds flag capacity violations by negating the
+            # count (see kernelplan.registry._exec_dict_group_sum and
+            # jaxgen._finalize_keyed); typed for the recovery ladder
+            raise CapacityError(
                 "kernelized group-by observed keys outside [0, capacity) — "
                 "the dense-key kernel route cannot represent them; rerun "
                 "with kernelize=False or raise the builder capacity"
@@ -99,10 +103,10 @@ class WGroup:
     def to_numpy(self) -> dict:
         n = int(self.count)
         if n < 0:
-            # kernel-planned group builds flag capacity overflow (more
-            # distinct keys than the builder capacity) by negating the
-            # count, mirroring the WDict convention
-            raise RuntimeError(
+            # group builds flag capacity overflow (more distinct keys
+            # than the builder capacity) by negating the count,
+            # mirroring the WDict convention; typed for recovery
+            raise CapacityError(
                 "kernelized group build observed more distinct keys than "
                 "the builder capacity; rerun with kernelize=False or "
                 "raise the builder capacity"

@@ -89,9 +89,14 @@ def _load() -> Dict[str, dict]:
 
 
 def _save() -> None:
+    from .. import faults
+
     path = cache_path()
     tmp = f"{path}.{os.getpid()}.tmp"
     try:
+        # the io.autotune_cache failpoint proves persistence really is
+        # best-effort: an injected OSError must leave tuning in-process
+        faults.maybe_raise("io.autotune_cache", exc=OSError)
         os.makedirs(os.path.dirname(path), exist_ok=True)
         with open(tmp, "w") as f:
             json.dump(_cache, f, indent=1, sort_keys=True)
@@ -213,6 +218,9 @@ def tune(spec: "reg.KernelSpec", meta: dict, impl: str,
                   impl=impl) as tsp:
         for cand in _grid(spec.tune_space):
             try:
+                from .. import faults
+
+                faults.maybe_raise("autotune.time")
                 go = spec.make_bench(bench_meta, cand, impl)
                 t = _time_candidate(go)
             except Exception:

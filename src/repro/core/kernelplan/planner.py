@@ -1060,6 +1060,7 @@ def plan_kernels(
     input_shapes: Optional[Dict[str, tuple]] = None,
     stats: Optional[Dict[str, int]] = None,
     mode: str = "always",
+    impl: Optional[str] = None,
 ) -> ir.Expr:
     """Annotate matched loops with KernelCall nodes.  Identity on programs
     with no matches; never rewrites inside ``for`` bodies.
@@ -1085,8 +1086,31 @@ def plan_kernels(
     #: which prices and autotunes the probe side of a hash join.
     dict_caps: Dict[str, int] = {}
 
+    def _quarantined(kc: ir.KernelCall, meta: dict) -> bool:
+        from . import quarantine
+        from .autotune import _np_dtype_of
+
+        return quarantine.is_quarantined(
+            kc.kernel, impl=impl, dtype=_np_dtype_of(kc.ret_ty),
+            n=meta.get("n"),
+        )
+
     def consider(kc: ir.KernelCall, orig: ir.Expr) -> ir.Expr:
         meta = _call_meta(kc, dense, dict_caps)
+        if _quarantined(kc, meta):
+            # a route that failed to stage/compile before is rejected up
+            # front (even under "always") — re-paying a known failure
+            # would just bounce off the recovery fallback again
+            kplan["rejected"][kc.kernel] = (
+                kplan["rejected"].get(kc.kernel, 0) + 1
+            )
+            kplan["costs"].append({
+                "kernel": kc.kernel, "routed": False,
+                "why": "quarantined", "kernel_us": 0.0, "jnp_us": 0.0,
+            })
+            _obs.event("kernelplan.candidate", kernel=kc.kernel,
+                       n=meta.get("n"), routed=False, why="quarantined")
+            return orig
         if kc.kernel in ("hash_probe", "group_probe"):
             # the one-hot tile is block x capacity: an unknown or
             # oversized dict cannot take the kernel even under "always"

@@ -1,0 +1,133 @@
+"""Kernel quarantine: an on-disk health file for failing kernel routes.
+
+When a planned Pallas kernel fails to stage/compile/launch, the
+recovery layer (``core.recovery``) falls the evaluation back to the
+generic jnp lowering and records the offender here under the key
+``(kernel, impl, dtype, size-bucket)``.  The planner's cost gate
+consults :func:`is_quarantined` before routing, so a repeat offender is
+rejected up front — the failure is paid once, not per query.
+
+The file lives next to the autotune cache (default
+``~/.cache/weld-repro/kernel_health.json``, overridable via
+``$WELD_KERNEL_HEALTH``) and follows the same durability contract:
+atomic tmp+rename writes, a corrupt file degrades to empty with a
+``RuntimeWarning``, and :func:`fingerprint` participates in the
+runtime's compile-cache key so quarantining (or clearing) a kernel can
+never be served by a stale executable.
+
+Reset with :func:`clear` (or delete the file) after fixing the kernel.
+"""
+from __future__ import annotations
+
+import json
+import os
+import warnings
+from typing import Dict, Optional
+
+import numpy as np
+
+ENV_FILE = "WELD_KERNEL_HEALTH"
+
+_health: Optional[Dict[str, dict]] = None  # lazily loaded from disk
+_generation = 0  # bumps on every mutation (part of fingerprint)
+
+
+def path() -> str:
+    return os.environ.get(ENV_FILE) or os.path.join(
+        os.path.expanduser("~"), ".cache", "weld-repro", "kernel_health.json"
+    )
+
+
+def _load() -> Dict[str, dict]:
+    global _health
+    if _health is None:
+        p = path()
+        try:
+            with open(p) as f:
+                _health = json.load(f)
+            if not isinstance(_health, dict):
+                raise ValueError("health file root is not an object")
+        except OSError:
+            _health = {}  # no file yet: every kernel is healthy
+        except ValueError as e:
+            warnings.warn(
+                f"kernel health file {p} is corrupt ({e}); ignoring it "
+                "and starting with an empty quarantine — delete the file "
+                "to silence this warning",
+                RuntimeWarning, stacklevel=2,
+            )
+            _health = {}
+    return _health
+
+
+def _save() -> None:
+    from .. import faults
+
+    p = path()
+    tmp = f"{p}.{os.getpid()}.tmp"
+    try:
+        faults.maybe_raise("io.quarantine", exc=OSError)
+        os.makedirs(os.path.dirname(p), exist_ok=True)
+        with open(tmp, "w") as f:
+            json.dump(_health, f, indent=1, sort_keys=True)
+        os.replace(tmp, p)  # atomic: readers never see a partial file
+    except OSError:
+        try:
+            os.remove(tmp)
+        except OSError:
+            pass
+        # the quarantine still applies in-process; persistence is
+        # best-effort, like the autotune cache
+
+
+def clear(disk: bool = True) -> None:
+    """Forget every quarantined kernel (after a fix / for tests)."""
+    global _health, _generation
+    _health = {}
+    _generation += 1
+    if disk:
+        try:
+            os.remove(path())
+        except OSError:
+            pass
+
+
+def _key(kernel: str, impl: Optional[str], dtype, n: Optional[int]) -> str:
+    from . import autotune
+
+    bucket = autotune.size_bucket(int(n or 0))
+    return f"{kernel}|{impl}|{np.dtype(dtype or 'f8').name}|{bucket}"
+
+
+def record(kernel: str, impl: Optional[str] = None, dtype=None,
+           n: Optional[int] = None, error: Optional[str] = None) -> str:
+    """Quarantine one (kernel, impl, dtype, size-bucket); returns the key."""
+    global _generation
+    h = _load()
+    k = _key(kernel, impl, dtype, n)
+    ent = h.setdefault(k, {"kernel": kernel, "impl": impl, "count": 0})
+    ent["count"] += 1
+    if error:
+        ent["last_error"] = error[:500]
+    _generation += 1
+    _save()
+    return k
+
+
+def is_quarantined(kernel: str, impl: Optional[str] = None, dtype=None,
+                   n: Optional[int] = None) -> bool:
+    return _key(kernel, impl, dtype, n) in _load()
+
+
+def entries() -> Dict[str, dict]:
+    """Copy of the current quarantine table (reporting/tests)."""
+    return {k: dict(v) for k, v in _load().items()}
+
+
+def fingerprint() -> str:
+    """Stable digest of the quarantine state for the compile-cache key."""
+    import zlib
+
+    h = _load()
+    items = ";".join(sorted(h))
+    return f"g{_generation}n{len(h)}h{zlib.crc32(items.encode()):08x}"

@@ -140,6 +140,59 @@ def describe() -> str:
     return "\n".join(lines)
 
 
+def _poison_value(out):
+    """Negate every dynamic count in a kernel result (the ``poison``
+    fault action): downstream probes and decode then see exactly what a
+    real capacity overflow produces."""
+    if isinstance(out, WVec):
+        if out.count is None:
+            return WVec(out.data, jnp.int64(-1))
+        c = jnp.asarray(out.count)
+        return WVec(out.data, -abs(c) - 1)
+    if isinstance(out, WDict):
+        c = jnp.asarray(out.count)
+        return WDict(out.keys, out.vals, -abs(c) - 1)
+    if isinstance(out, WGroup):
+        c = jnp.asarray(out.count)
+        return WGroup(out.keys, out.values, out.offsets, -abs(c) - 1)
+    if isinstance(out, tuple):
+        return tuple(_poison_value(v) for v in out)
+    return out
+
+
+def execute_spec(spec: KernelSpec, args, params, fns, impl,
+                 dtype=None):
+    """Every planned kernel launch funnels through here.
+
+    Arms the ``kernel.<name>`` failpoints (``raise`` simulates a
+    stage/compile failure, ``poison`` a capacity overflow) and wraps any
+    backend failure into a typed
+    :class:`~repro.core.errors.KernelCompileError` carrying the
+    quarantine key ``(kernel, impl, dtype, n)`` — the recovery layer
+    records the offender and degrades the evaluation to the generic
+    lowering.
+    """
+    from .. import faults
+    from ..errors import KernelCompileError, ResourceError
+
+    site = f"kernel.{spec.name}"
+    try:
+        faults.maybe_raise(site)
+        out = spec.execute(args, params, fns, impl)
+    except (ResourceError, KernelCompileError):
+        raise  # already typed; budget breaches are not kernel failures
+    except Exception as e:
+        raise KernelCompileError(
+            f"kernel {spec.name!r} (impl={impl}) failed to stage/launch: "
+            f"{type(e).__name__}: {e}",
+            kernel=spec.name, impl=impl, dtype=dtype,
+            n=dict(params).get("n_rows"),
+        ) from e
+    if faults.poisoned(site):
+        out = _poison_value(out)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Adapter helpers
 # ---------------------------------------------------------------------------

@@ -79,6 +79,11 @@ def record(kernel: str, dtype: str, n: int, predicted_ns: Optional[int],
     }
     p = path or ledger_path()
     try:
+        # the io.ledger failpoint proves the best-effort contract: an
+        # injected OSError must drop the record, never the execution
+        from .. import faults
+
+        faults.maybe_raise("io.ledger", exc=OSError)
         d = os.path.dirname(p)
         if d:
             os.makedirs(d, exist_ok=True)

@@ -19,11 +19,13 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
+from . import faults  # noqa: E402
 from . import ir  # noqa: E402
 from . import obs  # noqa: E402
 from . import wtypes as wt  # noqa: E402
 from .backend.jaxgen import emit_program  # noqa: E402
 from .backend.values import WDict, WGroup, WVec  # noqa: E402
+from .errors import CapacityError  # noqa: E402
 from .lazy import Program  # noqa: E402
 from .passes import loop_count, optimize as run_passes  # noqa: E402
 
@@ -73,6 +75,7 @@ def compile_and_run(
     # kernelplan (and the Pallas kernel library behind it) is imported
     # lazily so kernelize="off" evaluations never pay its import cost
     from .kernelplan import normalize_kernelize
+    from .recovery import run_with_recovery
 
     mode = normalize_kernelize(kernelize)
     kernelize_on = mode != "off"
@@ -84,8 +87,15 @@ def compile_and_run(
 
         kernel_impl = _kops.DEFAULT_IMPL
     with obs.span("weld.evaluate", kernelize=mode, impl=kernel_impl) as root:
-        return _compile_and_run(prog, optimize, memory_limit, passes, mode,
-                                kernelize_on, kernel_impl, root)
+        # the recovery ladder owns retries: capacity poison regrows
+        # builder capacities then degrades to the generic lowering;
+        # kernel stage/compile failures quarantine the offender and
+        # degrade immediately (see core/recovery.py)
+        return run_with_recovery(
+            _compile_and_run, prog, optimize=optimize,
+            memory_limit=memory_limit, passes=passes, mode=mode,
+            kernel_impl=kernel_impl, root=root,
+        )
 
 
 def _compile_and_run(prog, optimize, memory_limit, passes, mode,
@@ -110,20 +120,27 @@ def _compile_and_run(prog, optimize, memory_limit, passes, mode,
     kreg = ""
 
     def _kreg() -> str:
-        from .kernelplan import autotune, fingerprint
+        from .kernelplan import autotune, fingerprint, quarantine
 
-        return fingerprint() + "/" + autotune.fingerprint()
+        return (fingerprint() + "/" + autotune.fingerprint()
+                + "/" + quarantine.fingerprint())
 
     if kernelize_on:
-        # register/unregister AND new tunings must invalidate the cache:
-        # a stale executable must never serve a newly tuned plan
+        # register/unregister, new tunings AND quarantine changes must
+        # invalidate the cache: a stale executable must never serve a
+        # newly tuned plan or a newly quarantined kernel route
         kreg = _kreg()
 
     def _mk_key(kreg_now: str) -> str:
+        # armed faults join the key too (empty when none — the common
+        # path): an injected fault must never be defeated by a cached
+        # executable, and a consumed fault must never serve the
+        # poisoned executable it produced
         return (
             ir.canon_key(prog.expr, name_map)
             + f"|opt={optimize}|mem={memory_limit}|passes={passes}"
-            + f"|kz={mode}|kimpl={kernel_impl}|kreg={kreg_now}|{sig}"
+            + f"|kz={mode}|kimpl={kernel_impl}|kreg={kreg_now}"
+            + f"|flt={faults.fingerprint()}|{sig}"
         )
 
     key = _mk_key(kreg)
@@ -152,7 +169,7 @@ def _compile_and_run(prog, optimize, memory_limit, passes, mode,
 
             with obs.span("kernelplan", mode=mode) as sp:
                 expr = plan_kernels(expr, input_shapes=shapes, stats=stats,
-                                    mode=mode)
+                                    mode=mode, impl=kernel_impl)
                 sp.set("matched", stats.get("kernelize.matched", 0))
             if stats.get("kernelize.matched"):
                 with obs.span("autotune"):
@@ -197,6 +214,9 @@ def _compile_and_run(prog, optimize, memory_limit, passes, mode,
         _measured_replay(stats["plan.ir"], pnames, ptypes, pshapes,
                          memory_limit, kernel_impl, arrays)
     with obs.span("decode"):
+        faults.maybe_raise("decode")
+        if faults.poisoned("decode"):
+            raise CapacityError("fault injected at decode: result poisoned")
         value = decode_value(out, prog.out_ty)
     return value, compile_ms, from_cache, _copy_stats(stats)
 
@@ -212,6 +232,7 @@ def _measured_replay(expr, input_names, types, shapes, memory_limit,
     recorded on the span, never raised."""
     with obs.span("measure.replay") as sp:
         try:
+            faults.maybe_raise("measure.replay")
             fn = emit_program(expr, input_names, types, shapes,
                               memory_limit, kernel_impl=kernel_impl,
                               measure=True)

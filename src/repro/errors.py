@@ -1,0 +1,14 @@
+"""Top-level alias for :mod:`repro.core.errors` (the typed exception
+hierarchy): ``from repro import errors; errors.CapacityError``."""
+from .core.errors import (  # noqa: F401
+    CapacityError,
+    InjectedFault,
+    KernelCompileError,
+    ResourceError,
+    WeldError,
+)
+
+__all__ = [
+    "WeldError", "CapacityError", "ResourceError",
+    "KernelCompileError", "InjectedFault",
+]

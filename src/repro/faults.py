@@ -1,0 +1,18 @@
+"""Top-level alias for :mod:`repro.core.faults` (deterministic fault
+injection): ``from repro import faults; faults.inject(...)``."""
+from .core.faults import (  # noqa: F401
+    ENV_FAULTS,
+    armed,
+    capacity_override,
+    clear,
+    fingerprint,
+    fired,
+    inject,
+    maybe_raise,
+    poisoned,
+)
+
+__all__ = [
+    "ENV_FAULTS", "inject", "clear", "armed", "fired", "fingerprint",
+    "maybe_raise", "poisoned", "capacity_override",
+]

@@ -13,7 +13,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core import ir, macros as M, wtypes as wt
+from ..core import faults, ir, macros as M, wtypes as wt
+from ..core.errors import CapacityError
 from ..core.lazy import Evaluate, NewWeldObject, WeldObject
 from . import weldnp
 
@@ -398,10 +399,17 @@ class Query:
             )
         m = len(names_r)
         cap = int(capacity if capacity is not None else max(distinct, 1))
-        if cap < distinct:
-            # an undersized dict truncates (generic) or poisons (kernel)
-            # the build — fail loudly before either can happen
-            raise ValueError(
+        injected_cap = faults.capacity_override("join.capacity")
+        if injected_cap is not None:
+            # fault injection: simulate a mis-estimated build capacity
+            # (bypassing the guard below) so the runtime's poison ->
+            # regrow -> fallback recovery ladder can be exercised
+            cap = injected_cap
+        elif cap < distinct:
+            # an undersized dict poisons the build at decode time — on
+            # an explicit user-passed capacity, fail loudly (and typed)
+            # before compiling anything
+            raise CapacityError(
                 f"join capacity {cap} < {distinct} distinct build-side "
                 "keys"
             )
@@ -873,6 +881,20 @@ class PlanReport:
                     f"{'ROUTE' if c.get('routed') else 'reject'} "
                     f"({c.get('why', '')})"
                 )
+        if st.get("recovery.attempts"):
+            lines += ["", "-- recovery --"]
+            lines.append(
+                f"  recovered after {st['recovery.attempts']} attempts "
+                f"(capacity x{st.get('recovery.regrow_factor', 1)}"
+                f"{', generic fallback' if st.get('recovery.fallback') else ''})"
+            )
+            for ev in st.get("recovery.events", []):
+                lines.append(
+                    f"  attempt {ev.get('attempt')}: {ev.get('action')} — "
+                    f"{ev.get('detail')}"
+                )
+            for q in st.get("recovery.quarantined", []):
+                lines.append(f"  quarantined: {q}")
         if self.analyze:
             mrows = self.kernel_spans()
             if mrows:

@@ -349,18 +349,37 @@ def test_hash_build_sparse_keys_decode_correctly():
         np.testing.assert_allclose(out.value[kk], want[kk], rtol=1e-10)
 
 
-def test_hash_build_overflow_raises_on_decode():
-    from repro.core import ir, macros as M
+def test_hash_build_overflow_recovers_by_regrowing():
+    """An undersized hash build poisons the dict; the recovery runtime
+    re-stamps the capacity and retries instead of surfacing the poison.
+    With recovery disabled the typed CapacityError reaches the caller."""
+    import warnings
+
+    from repro.core import ir, macros as M, recovery
+    from repro.core.errors import CapacityError
     from repro.core.lazy import Evaluate, NewWeldObject
 
-    keys = NewWeldObject(np.arange(8000, dtype=np.int64) * 3, None)
-    vals = NewWeldObject(rng.rand(8000), None)
-    kid = ir.Ident(keys.obj_id, keys.weld_type())
-    vid = ir.Ident(vals.obj_id, vals.weld_type())
-    d = M.groupby_agg(kid, vid, "+", capacity=4097)  # 8000 distinct > 4097
-    obj = NewWeldObject([keys, vals], d)
-    with pytest.raises(RuntimeError):
-        Evaluate(obj, kernelize="always")
+    def mk():
+        keys = NewWeldObject(np.arange(8000, dtype=np.int64) * 3, None)
+        vals = NewWeldObject(rng.rand(8000), None)
+        kid = ir.Ident(keys.obj_id, keys.weld_type())
+        vid = ir.Ident(vals.obj_id, vals.weld_type())
+        d = M.groupby_agg(kid, vid, "+", capacity=4097)  # 8000 > 4097
+        return NewWeldObject([keys, vals], d)
+
+    st: dict = {}
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        out = Evaluate(mk(), kernelize="always", collect_stats=st)
+    assert st["recovery.attempts"] >= 2
+    assert any("regrow" in e["action"] for e in st["recovery.events"])
+    assert any("weld recovery" in str(x.message) for x in w)
+    assert len(out.value) == 8000
+    want = Evaluate(mk(), kernelize=False).value
+    assert set(out.value) == set(want)
+    with recovery.disabled():
+        with pytest.raises(CapacityError):
+            Evaluate(mk(), kernelize="always")
 
 
 # ---------------------------------------------------------------------------

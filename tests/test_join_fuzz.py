@@ -206,3 +206,75 @@ def test_join_fuzz_hypothesis(seed):
     """Property form over the generator's seed space (shrinks to the
     smallest failing seed); bounded + derandomized for CI."""
     check_case(*make_case(np.random.RandomState(seed)))
+
+
+# ---------------------------------------------------------------------------
+# fault-injection profile: random failpoints, same oracle
+# ---------------------------------------------------------------------------
+
+
+def check_case_faulted(rng, lcols, rcols, on, how, filtered):
+    """Re-run a generated case with a randomly drawn failpoint armed and
+    assert the recovered result still matches the pandas oracle; with
+    recovery disabled the same fault surfaces as a typed error."""
+    import warnings
+
+    from repro.core import faults, recovery, runtime
+    from repro.core.errors import CapacityError
+
+    m = (lcols["lv"] > 0.5) if filtered else None
+    on_list = on if isinstance(on, list) else [on]
+    if how == "anti" and pd.DataFrame(rcols)[on_list].duplicated().any():
+        return  # error-parity shape: covered by the healthy profile
+    want = _rowset(pd_oracle(lcols, rcols, on, how, m=m))
+    # capacity faults only bite when something gets built (n_r > 0);
+    # kernel faults only bite when a kernel routes — both are fine to
+    # arm unconditionally (an unfired fault must be a no-op)
+    site, action, value = (
+        ("join.capacity", "cap", 1),
+        ("kernel.group_build", "raise", None),
+        ("kernel.hash_build", "raise", None),
+        ("decode", "poison", None),
+    )[rng.randint(0, 4)]
+    mode = ("off", "always")[rng.randint(0, 2)]
+    try:
+        faults.inject(site, action, times=1, value=value)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            got = _rowset(_run(lcols, rcols, on, how, mode, filtered))
+        assert got == want, (
+            f"faulted join differs from pandas oracle: fault={site}:{action} "
+            f"mode={mode} how={how} on={on} filtered={filtered}\n"
+            f" got[:5]={got[:5]}\nwant[:5]={want[:5]}"
+        )
+        fired = [f["site"] for f in faults.fired()]
+        if site == "decode" and site in fired:
+            # a consumed decode poison MUST have gone through the ladder:
+            # recovery disabled turns the very same case into a typed error
+            faults.clear()
+            runtime.clear_cache()
+            faults.inject(site, action, times=1, value=value)
+            with recovery.disabled():
+                with pytest.raises(CapacityError):
+                    _run(lcols, rcols, on, how, mode, filtered)
+    finally:
+        faults.clear()
+
+
+def test_join_fuzz_fault_injection(tmp_path, monkeypatch):
+    """Seeded fault-injection profile: every case recovers to oracle
+    parity (or the fault provably never fired)."""
+    from repro.core.kernelplan import quarantine
+
+    # kernel-raise faults quarantine their target — keep that out of
+    # the developer's real health file and out of later tests
+    monkeypatch.setenv(quarantine.ENV_FILE,
+                       str(tmp_path / "kernel_health.json"))
+    quarantine.clear(disk=False)
+    try:
+        rng = np.random.RandomState(77)
+        for _ in range(12):
+            case = make_case(rng)
+            check_case_faulted(rng, *case)
+    finally:
+        quarantine.clear(disk=False)

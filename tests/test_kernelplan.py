@@ -253,10 +253,15 @@ def test_default_capacity_groupby_routes():
         np.testing.assert_allclose(d1[k], d0[k], rtol=1e-10)
 
 
-def test_out_of_range_keys_raise_not_drop():
+def test_out_of_range_keys_recover_not_drop():
     """Keys outside [0, capacity) can't be represented by the dense-key
-    route; decoding must raise instead of silently dropping rows the
-    generic path would keep."""
+    route; the poison flag triggers the recovery ladder (regrow until
+    the key fits, else generic fallback) instead of silently dropping
+    rows.  With recovery disabled the typed CapacityError surfaces."""
+    import warnings
+
+    from repro.core import recovery
+    from repro.core.errors import CapacityError
     from repro.frames import welddf
 
     key = np.array([100, 100, 1, 2], dtype=np.int64)
@@ -264,8 +269,17 @@ def test_out_of_range_keys_raise_not_drop():
     df = welddf.DataFrame({"k": key, "v": val})
     d0 = df.groupby_sum("k", "v", capacity=64, kernelize=False)
     assert d0 == {1: 3.0, 2: 4.0, 100: 3.0}
-    with pytest.raises(RuntimeError, match="outside \\[0, capacity\\)"):
-        df.groupby_sum("k", "v", capacity=64, kernelize=True)
+    st: dict = {}
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        d1 = df.groupby_sum("k", "v", capacity=64, kernelize=True,
+                            collect_stats=st)
+    assert d1 == d0
+    assert st["recovery.attempts"] >= 2
+    assert any("weld recovery" in str(x.message) for x in w)
+    with recovery.disabled():
+        with pytest.raises(CapacityError, match="outside \\[0, capacity\\)"):
+            df.groupby_sum("k", "v", capacity=64, kernelize=True)
 
 
 def test_float_key_groupby_falls_back():

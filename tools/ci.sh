@@ -39,6 +39,13 @@ echo "== join smoke ablation (hash-build/probe routing check) =="
 # probe launch (N probes for an N-column join is a fusion regression)
 python -m benchmarks.bench_join --smoke
 
+echo "== recovery/faults smoke (adaptive recovery + quarantine check) =="
+# injects deterministic faults (undersized join capacity, failing kernel
+# launch) and asserts the recovery ladder regrows/falls back to oracle-
+# correct rows, the offender lands in the quarantine health file, and
+# the next compile rejects it at the cost gate
+python tools/faults_smoke.py
+
 echo "== explain/trace smoke (weldtrace observability check) =="
 # compiles a kernelized m:n join + a group-by with WELD_TRACE=1,
 # asserts the Chrome-trace export is valid and nested, that
