@@ -19,6 +19,10 @@ carries a type, not just a message string:
   lowering.
 * :class:`InjectedFault` — raised by an armed ``core.faults`` failpoint
   (deterministic fault injection for tests/CI).
+* :class:`WeldVerifyError` — the static verifier (``core.check``) found
+  an ill-formed program after an optimizer pass, the kernel planner, or
+  a recovery rewrite.  Carries the offending phase and the structured
+  diagnostics so callers can pinpoint the pass that broke the IR.
 
 The module is dependency-free on purpose: anything in the runtime may
 import it without cycles.  Re-exported at top level as ``repro.errors``.
@@ -33,6 +37,7 @@ __all__ = [
     "ResourceError",
     "KernelCompileError",
     "InjectedFault",
+    "WeldVerifyError",
 ]
 
 
@@ -73,3 +78,24 @@ class KernelCompileError(WeldError):
 
 class InjectedFault(WeldError):
     """Raised by an armed deterministic failpoint (``core.faults``)."""
+
+
+class WeldVerifyError(WeldError):
+    """The static verifier rejected a program.
+
+    ``phase`` names the pipeline stage whose output failed (``"input"``,
+    ``"pass.fusion"``, ``"kernelplan"``, ``"recovery.regrow"``, ...);
+    ``diagnostics`` is the list of :class:`repro.core.check.Diagnostic`
+    objects that survived, each naming a code and the offending
+    subexpression.
+    """
+
+    def __init__(self, message: str, *, phase: Optional[str] = None,
+                 diagnostics=None):
+        super().__init__(message)
+        self.phase = phase
+        self.diagnostics = list(diagnostics or [])
+
+    @property
+    def codes(self):
+        return [d.code for d in self.diagnostics]

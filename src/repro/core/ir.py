@@ -460,24 +460,55 @@ def _binop_type(op: str, lt: WeldType, rt: WeldType) -> WeldType:
 
 
 def typeof(e: Expr, env: Optional[Dict[str, WeldType]] = None) -> WeldType:
+    """Whole-program type inference, closed over ``Let``/``Lambda``/``For``
+    environments.  On failure the raised :class:`WeldTypeError` carries the
+    pretty-printed offending subexpression and the innermost enclosing
+    binder name (``err.node`` / ``err.binder`` hold them structurally)."""
     env = dict(env or {})
 
-    def rec(x: Expr, env: Dict[str, WeldType]) -> WeldType:
+    def rec(x: Expr, env: Dict[str, WeldType],
+            binder: Optional[str] = None) -> WeldType:
+        try:
+            return _typeof_node(x, env, binder, rec)
+        except WeldTypeError as err:
+            if getattr(err, "node", None) is None:
+                from .pretty import short
+
+                err.node = x
+                err.binder = binder
+                where = f" [in {binder}]" if binder else ""
+                err.args = (f"{err.args[0]}{where} at: {short(x)}",)
+            raise
+
+    return rec(e, env)
+
+
+def _typeof_node(x: Expr, env: Dict[str, WeldType],
+                 binder: Optional[str], rec0) -> WeldType:
+    def rec(y: Expr, env2, b=None) -> WeldType:
+        return rec0(y, env2, b if b is not None else binder)
+
+    if True:
         if isinstance(x, Literal):
             return x.ty
         if isinstance(x, Ident):
             ty = env.get(x.name, x.ty)
+            if ty is None:
+                raise WeldTypeError(
+                    f"identifier {x.name} carries no type and is not "
+                    f"bound in the environment"
+                )
             return ty
         if isinstance(x, Let):
-            vt = rec(x.value, env)
-            return rec(x.body, {**env, x.name: vt})
+            vt = rec(x.value, env, x.name)
+            return rec(x.body, {**env, x.name: vt}, x.name)
         if isinstance(x, BinOp):
             return _binop_type(x.op, rec(x.left, env), rec(x.right, env))
         if isinstance(x, UnaryOp):
             t = rec(x.expr, env)
             if x.op == "not":
                 if t != wt.Bool:
-                    raise WeldTypeError("not requires bool")
+                    raise WeldTypeError(f"not requires bool, got {t}")
                 return wt.Bool
             if not isinstance(t, wt.Scalar):
                 raise WeldTypeError(f"unary {x.op} on non-scalar {t}")
@@ -503,10 +534,13 @@ def typeof(e: Expr, env: Optional[Dict[str, WeldType]] = None) -> WeldType:
             return wt.Struct(tys)
         if isinstance(x, GetField):
             st = rec(x.expr, env)
-            if isinstance(st, wt.Struct):
-                return st.fields[x.index]
-            if isinstance(st, wt.StructBuilder):
-                return st.builders[x.index]
+            if isinstance(st, (wt.Struct, wt.StructBuilder)):
+                flds = st.fields if isinstance(st, wt.Struct) else st.builders
+                if not (0 <= x.index < len(flds)):
+                    raise WeldTypeError(
+                        f"getfield index {x.index} out of range for {st}"
+                    )
+                return flds[x.index]
             raise WeldTypeError(f"getfield on non-struct {st}")
         if isinstance(x, MakeVec):
             for i in x.items:
@@ -614,8 +648,6 @@ def typeof(e: Expr, env: Optional[Dict[str, WeldType]] = None) -> WeldType:
                 raise WeldTypeError(f"for func returns {ft.ret}, builder is {bt}")
             return bt
         raise WeldTypeError(f"cannot type {type(x).__name__}")
-
-    return rec(e, env)
 
 
 def merge_arg_type(bt: wt.BuilderType) -> WeldType:

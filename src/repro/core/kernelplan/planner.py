@@ -1204,7 +1204,14 @@ def plan_kernels(
                 return consider(kc, x)
         return x
 
-    return rec(e)
+    planned = rec(e)
+    # self-verify the planned program: a bad rewrite here (stale ident
+    # type, unregistered kernel, capacity mismatch between build and
+    # probe) would otherwise only surface as a cryptic staging error
+    from .. import check
+
+    check.checkpoint("kernelplan", planned, stats=stats)
+    return planned
 
 
 def _probed_as_dict(name: str, body: ir.Expr) -> bool:

@@ -147,6 +147,12 @@ def run_with_recovery(runner, prog, *, optimize, memory_limit, passes,
             if grown is not None:
                 regrows += 1
                 factor *= GROWTH
+                # differential check: the regrown program must re-verify
+                # clean AND every capacity must dominate its predecessor
+                # (WV404) — a buggy rewrite here would loop the ladder
+                from . import check
+
+                check.verify_rewrite("recovery.regrow", prog.expr, grown)
                 cur_prog = type(prog)(expr=grown, inputs=prog.inputs,
                                       out_ty=prog.out_ty)
                 detail = (f"capacity poison; regrowing {n_stamped} "

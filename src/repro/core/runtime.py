@@ -19,6 +19,7 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
+from . import check  # noqa: E402
 from . import faults  # noqa: E402
 from . import ir  # noqa: E402
 from . import obs  # noqa: E402
@@ -158,6 +159,10 @@ def _compile_and_run(prog, optimize, memory_limit, passes, mode,
         t0 = time.perf_counter()
         expr = prog.expr
         stats["loops.before"] = loop_count(expr)
+        # verify the frontend's program before any rewrite touches it:
+        # a pre-existing violation must be blamed on the input, not on
+        # whichever pass happens to run first
+        check.checkpoint("input", expr, env=types, stats=stats)
         if optimize:
             with obs.span("optimize") as sp:
                 expr = run_passes(expr, passes=passes, stats=stats,
@@ -175,6 +180,7 @@ def _compile_and_run(prog, optimize, memory_limit, passes, mode,
                 with obs.span("autotune"):
                     expr = autotune.tune_plan(expr, impl=kernel_impl,
                                               stats=stats)
+                check.checkpoint("autotune", expr, stats=stats)
         # the planned IR is part of the stats so explain()/the measured
         # replay can reach the program that actually ran (cache hits
         # included — the expr rides along in the cached stats entry).

@@ -6,9 +6,10 @@ from .core.errors import (  # noqa: F401
     KernelCompileError,
     ResourceError,
     WeldError,
+    WeldVerifyError,
 )
 
 __all__ = [
     "WeldError", "CapacityError", "ResourceError",
-    "KernelCompileError", "InjectedFault",
+    "KernelCompileError", "InjectedFault", "WeldVerifyError",
 ]

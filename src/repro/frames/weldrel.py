@@ -895,6 +895,21 @@ class PlanReport:
                 )
             for q in st.get("recovery.quarantined", []):
                 lines.append(f"  quarantined: {q}")
+        if st.get("verify.runs"):
+            lines += ["", "-- verify --"]
+            total = st.get("verify.ms", 0.0)
+            lines.append(
+                f"  weldcheck: {st['verify.runs']} checkpoints clean "
+                f"(types, linearity, races, capacity) in {total:.1f}ms"
+            )
+            phases = st.get("verify.phases", [])
+            by_phase: Dict[str, List[float]] = {}
+            for name, ms in phases:
+                by_phase.setdefault(name, []).append(ms)
+            for name, times in by_phase.items():
+                lines.append(
+                    f"  {name:<24} x{len(times):<3} {sum(times):8.2f}ms"
+                )
         if self.analyze:
             mrows = self.kernel_spans()
             if mrows:

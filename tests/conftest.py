@@ -1,0 +1,12 @@
+"""Test-wide defaults: run the whole suite with weldcheck on.
+
+``WELD_VERIFY=1`` makes every compile re-verify the IR after each
+optimizer pass, after kernel planning, and after every recovery
+rewrite — so any pass producing ill-typed/non-linear/racy IR fails the
+suite loudly even when the miscompiled program happens to produce the
+right numbers.  Explicitly exported ``WELD_VERIFY=0`` wins (for
+overhead A/B runs).
+"""
+import os
+
+os.environ.setdefault("WELD_VERIFY", "1")

@@ -200,6 +200,21 @@ def test_join_fuzz_deep():
     _fuzz(200, seed=515000)
 
 
+def test_join_fuzz_verified():
+    """WELD_VERIFY=1 profile: the whole generated corpus must verify
+    clean (no false positives from weldcheck) on all four paths.  The
+    compile cache is cleared first so every case actually re-verifies
+    instead of hitting executables compiled before the override."""
+    from repro.core import check, runtime
+
+    runtime.clear_cache()
+    check.set_enabled(True)
+    try:
+        _fuzz(10, seed=77)
+    finally:
+        check.set_enabled(None)
+
+
 @given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1))
 @settings(max_examples=40, deadline=None, derandomize=True)
 def test_join_fuzz_hypothesis(seed):

@@ -1,0 +1,317 @@
+"""weldcheck: golden broken programs, mutation recall, pipeline wiring.
+
+Three layers:
+
+1. a hand-broken golden program per diagnostic code — each must be
+   caught with exactly that code (and a clean twin must not be);
+2. the seeded mutation harness over real planned programs captured from
+   weldrel joins / group-bys (>=95% catch rate, offender named);
+3. integration — a sabotaged optimizer pass raises ``WeldVerifyError``
+   naming the pass; ``explain()`` grows a ``-- verify --`` section; the
+   full corpus verifies clean end to end.
+"""
+import copy
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.core import check, ir, recovery, wtypes as wt
+from repro.core.check import mutate
+from repro.core.check.diagnostics import CODES
+from repro.core.errors import WeldVerifyError
+from repro.frames import weldrel
+
+
+# ---------------------------------------------------------------------------
+# builders for small well-typed programs
+# ---------------------------------------------------------------------------
+
+XS = ir.Ident("xs", wt.Vec(wt.F64))
+
+
+def sum_loop(op="+"):
+    """result(for([xs], merger[f64,op], merge))"""
+    bty = wt.Merger(wt.F64, op)
+    b, i, e = (ir.Ident("b", bty), ir.Ident("i", wt.I64),
+               ir.Ident("e", wt.F64))
+    return ir.Result(ir.For(
+        (ir.Iter(XS),), ir.NewBuilder(bty),
+        ir.Lambda((b, i, e), ir.Merge(b, e))))
+
+
+def dict_loop(cap=16):
+    """group-by-style dictmerger build with a capacity literal."""
+    bty = wt.DictMerger(wt.I64, wt.F64, "+")
+    b, i, e = (ir.Ident("b", bty), ir.Ident("i", wt.I64),
+               ir.Ident("e", wt.F64))
+    return ir.Result(ir.For(
+        (ir.Iter(XS),), ir.NewBuilder(bty, arg=ir.Literal(cap, wt.I64)),
+        ir.Lambda((b, i, e),
+                  ir.Merge(b, ir.MakeStruct((ir.Cast(e, wt.I64), e))))))
+
+
+def codes_of(e, env=None):
+    return sorted({d.code for d in check.verify(e, env=env)})
+
+
+def corrupt_op(bty, op="-"):
+    """A merger-family type with a non-commutative op, built the only
+    way one can exist: by bypassing the constructor's guard."""
+    bad = copy.copy(bty)
+    object.__setattr__(bad, "op", op)
+    return bad
+
+
+# ---------------------------------------------------------------------------
+# golden corpus: one hand-broken program per diagnostic code
+# ---------------------------------------------------------------------------
+
+
+def golden_cases():
+    bty = wt.Merger(wt.F64, "+")
+    b = ir.Ident("b", bty)
+    i, e = ir.Ident("i", wt.I64), ir.Ident("e", wt.F64)
+
+    yield "WV101", ir.BinOp("+", ir.Literal(1, wt.I64),
+                            ir.Literal(1.0, wt.F64))
+    # annotated i64 but let-bound as f64
+    yield "WV102", ir.Let("v", ir.Literal(1.0, wt.F64),
+                          ir.BinOp("+", ir.Ident("v", wt.I64),
+                                   ir.Ident("v", wt.I64)))
+    yield "WV103", ir.KernelCall("no_such_kernel", (XS,), wt.Vec(wt.F64))
+    # merger initialised with a vector
+    yield "WV104", ir.Result(ir.NewBuilder(bty, arg=XS))
+    yield "WV201", ir.Let("bb", ir.NewBuilder(bty),
+                          ir.Literal(1.0, wt.F64))
+    # merged twice in sequence: two uses on the one path
+    yield "WV202", ir.Let(
+        "bb", ir.NewBuilder(bty),
+        ir.Result(ir.Merge(ir.Ident("bb", bty),
+                           ir.Result(ir.Merge(ir.Ident("bb", bty),
+                                              ir.Literal(1.0, wt.F64))))))
+    # result() then merge into the same builder again
+    yield "WV203", ir.Let(
+        "bb", ir.NewBuilder(bty),
+        ir.Let("x", ir.Result(ir.Ident("bb", bty)),
+               ir.Result(ir.Merge(ir.Ident("bb", bty),
+                                  ir.Ident("x", wt.F64)))))
+    # free builder captured by a loop body: merged once per iteration
+    yield "WV204", ir.Let(
+        "bb", ir.NewBuilder(bty),
+        ir.Result(ir.For(
+            (ir.Iter(XS),), ir.NewBuilder(bty),
+            ir.Lambda((b, i, e),
+                      ir.Merge(b, ir.Result(
+                          ir.Merge(ir.Ident("bb", bty), e)))))))
+    # consumed only on the true branch
+    yield "WV205", ir.Let(
+        "bb", ir.NewBuilder(bty),
+        ir.If(ir.Literal(True, wt.Bool),
+              ir.Result(ir.Merge(ir.Ident("bb", bty),
+                                 ir.Literal(1.0, wt.F64))),
+              ir.Literal(0.0, wt.F64)))
+    # select evaluates both arms: the builder is consumed twice
+    yield "WV206", ir.Let(
+        "bb", ir.NewBuilder(bty),
+        ir.Result(ir.Select(
+            ir.Literal(True, wt.Bool),
+            ir.Merge(ir.Ident("bb", bty), ir.Literal(1.0, wt.F64)),
+            ir.Merge(ir.Ident("bb", bty), ir.Literal(2.0, wt.F64)))))
+
+    bad_merger = corrupt_op(bty)
+    bb = ir.Ident("b", bad_merger)
+    yield "WV301", ir.Result(ir.For(
+        (ir.Iter(XS),), ir.NewBuilder(bad_merger),
+        ir.Lambda((bb, i, e), ir.Merge(bb, e))))
+    # loop body observes its own builder mid-build
+    yield "WV302", ir.Result(ir.For(
+        (ir.Iter(XS),), ir.NewBuilder(bty),
+        ir.Lambda((b, i, e), ir.Merge(b, ir.Result(b)))))
+    # data-dependent scatter index under a non-commutative combine
+    vm = corrupt_op(wt.VecMerger(wt.F64, "+"))
+    vb = ir.Ident("b", vm)
+    yield "WV303", ir.Result(ir.For(
+        (ir.Iter(XS),), ir.NewBuilder(vm, arg=XS),
+        ir.Lambda((vb, i, e),
+                  ir.Merge(vb, ir.MakeStruct((ir.Cast(e, wt.I64), e))))))
+
+    yield "WV401", dict_mutant_capacity(0)
+    yield "WV402", ir.KernelCall(
+        "hash_probe", (XS,), wt.Vec(wt.F64), params=(("k", -4),))
+    yield "WV403", ir.Result(ir.For(
+        (ir.Iter(XS),),
+        ir.NewBuilder(wt.VecBuilder(wt.F64),
+                      size_hint=ir.Literal(-8, wt.I64)),
+        ir.Lambda((ir.Ident("b", wt.VecBuilder(wt.F64)), i, e),
+                  ir.Merge(ir.Ident("b", wt.VecBuilder(wt.F64)), e))))
+
+
+def dict_mutant_capacity(cap):
+    good = dict_loop()
+    nb = next(n for n in ir.walk(good) if isinstance(n, ir.NewBuilder))
+    return mutate._replace_node(
+        good, nb, replace(nb, arg=ir.Literal(cap, wt.I64)))
+
+
+@pytest.mark.parametrize("code,prog",
+                         list(golden_cases()),
+                         ids=[c for c, _ in golden_cases()])
+def test_golden_broken_program_caught(code, prog):
+    got = codes_of(prog)
+    assert code in got, f"expected {code} ({CODES[code][0]}), got {got}"
+
+
+def test_golden_codes_cover_registry():
+    """Every registered code except the differential-only WV404 has a
+    golden broken program."""
+    covered = {c for c, _ in golden_cases()} | {"WV404"}
+    assert covered == set(CODES)
+
+
+def test_clean_programs_verify_clean():
+    assert codes_of(sum_loop()) == []
+    assert codes_of(dict_loop()) == []
+
+
+def test_diagnostic_renders_anchor_and_snippet():
+    prog = dict_mutant_capacity(0)
+    diags = check.verify(prog)
+    assert diags and diags[0].code == "WV401"
+    msg = diags[0].render(prog)
+    assert "#n" in msg and "dictmerger" in msg and "bad-capacity" in msg
+
+
+def test_checkpoint_raises_typed_error_naming_phase():
+    check.set_enabled(True)
+    try:
+        with pytest.raises(WeldVerifyError) as exc:
+            check.checkpoint("pass.fusion", dict_mutant_capacity(0))
+    finally:
+        check.set_enabled(None)
+    err = exc.value
+    assert err.phase == "pass.fusion"
+    assert "WV401" in err.codes
+    assert "pass.fusion" in str(err) and ">>>" in str(err)
+
+
+def test_verify_rewrite_rejects_shrinking_regrow():
+    before, after = dict_loop(16), dict_loop(8)
+    check.set_enabled(True)
+    try:
+        with pytest.raises(WeldVerifyError) as exc:
+            check.verify_rewrite("recovery.regrow", before, after)
+        assert "WV404" in exc.value.codes
+        # a genuine regrow passes
+        grown, n = recovery.regrow_capacities(before, 2)
+        assert n == 1
+        check.verify_rewrite("recovery.regrow", before, grown)
+    finally:
+        check.set_enabled(None)
+
+
+# ---------------------------------------------------------------------------
+# mutation harness over real planned programs
+# ---------------------------------------------------------------------------
+
+
+def _captured_programs():
+    """Planned IR from real weldrel pipelines: a hash join, a group-by
+    aggregate, and an m:n join (GroupBuilder expansion)."""
+    rng = np.random.RandomState(7)
+    n = 64
+    progs = []
+
+    left = weldrel.Table({"k": rng.randint(0, 8, n).astype(np.int64),
+                          "lv": rng.rand(n)})
+    right1 = weldrel.Table({"k": np.arange(8, dtype=np.int64),
+                            "rv": rng.rand(8)})
+    st = {}
+    weldrel.Query(left).join(right1, on="k", how="inner",
+                             collect_stats=st)
+    progs.append(st["plan.ir"])
+
+    st = {}
+    weldrel.Query(left).group_agg(
+        [left.col("k")], {"s": (left.col("lv"), "+")}, collect_stats=st)
+    progs.append(st["plan.ir"])
+
+    rightmn = weldrel.Table({"k": rng.randint(0, 4, 16).astype(np.int64),
+                             "rv": rng.rand(16)})
+    st = {}
+    weldrel.Query(left).join(rightmn, on="k", how="inner",
+                             collect_stats=st)
+    progs.append(st["plan.ir"])
+    return progs
+
+
+def test_mutation_harness_recall():
+    progs = _captured_programs()
+    score = mutate.run_mutations(progs, seed=2026, rounds=3)
+    assert score.applied >= 30
+    assert score.rate >= 0.95, (
+        f"verifier caught {score.caught}/{score.applied} mutants "
+        f"({score.rate:.0%}); misses: {score.misses}"
+    )
+
+
+def test_captured_corpus_verifies_clean():
+    for prog in _captured_programs():
+        assert codes_of(prog) == [], "planned pipeline IR must be clean"
+
+
+# ---------------------------------------------------------------------------
+# pipeline integration
+# ---------------------------------------------------------------------------
+
+
+def test_sabotaged_pass_is_caught_and_named(monkeypatch):
+    """A pass that corrupts the program mid-fixpoint must be blamed by
+    name, before planning or codegen ever sees the broken IR."""
+    from repro.core import passes as P
+
+    def evil_cse(e, stats):
+        # drop every Result wrapper: type/linearity carnage
+        return P.ir.postorder_map(
+            e, lambda n: n.builder if isinstance(n, P.ir.Result) else n)
+
+    monkeypatch.setitem(P._PASS_FNS, "cse", evil_cse)
+    check.set_enabled(True)
+    try:
+        with pytest.raises(WeldVerifyError) as exc:
+            P.optimize(dict_loop())
+    finally:
+        check.set_enabled(None)
+    assert exc.value.phase == "pass.cse"
+
+
+def test_explain_has_verify_section():
+    from repro.core import runtime
+
+    runtime.clear_cache()
+    check.set_enabled(True)
+    try:
+        rng = np.random.RandomState(0)
+        t = weldrel.Table({"k": rng.randint(0, 4, 32).astype(np.int64),
+                           "lv": rng.rand(32)})
+        rep = weldrel.Query(t).explain().group_agg(
+            [t.col("k")], {"s": (t.col("lv"), "+")})
+        text = rep.render()
+    finally:
+        check.set_enabled(None)
+    assert "-- verify --" in text
+    assert "weldcheck" in text and "checkpoints clean" in text
+    assert "pass.cse" in text and "kernelplan" in text
+    assert rep.stats["verify.runs"] > 0
+    assert rep.stats["verify.ms"] >= 0
+
+
+def test_verify_disabled_is_a_noop():
+    check.set_enabled(False)
+    try:
+        stats = {}
+        check.checkpoint("pass.fusion", dict_mutant_capacity(0),
+                         stats=stats)
+        assert stats == {}
+    finally:
+        check.set_enabled(None)

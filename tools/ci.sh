@@ -18,13 +18,25 @@ echo "== compileall lint =="
 python -m compileall -q src benchmarks tests tools 2>/dev/null || \
 python -m compileall -q src benchmarks tests
 
-echo "== pytest =="
+echo "== pytest (WELD_VERIFY=1: weldcheck on every compile) =="
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+# every compile in the suite re-verifies its IR after each optimizer
+# pass, after kernel planning, and after recovery rewrites — a pass
+# that miscompiles fails here even when the numbers happen to agree
+export WELD_VERIFY=1
 if [[ -n "$MARK" ]]; then
     python -m pytest -x -q -m "$MARK" "$@"
 else
     python -m pytest -x -q "$@"
 fi
+
+echo "== weldlint smoke (static verifier corpus + overhead gate) =="
+# verifies the representative corpus (joins, group-by) compiles with
+# every weldcheck checkpoint clean, gates verifier overhead at <10% of
+# compile time, and gates mutation recall (seeded IR sabotage must be
+# caught with the right code at the right node) at >=95%
+python tools/weldlint.py --smoke
+python tools/weldlint.py --mutate 3
 
 echo "== kernelplan smoke ablation (cost-gate regression check) =="
 # asserts every auto-routed workload stays within tolerance of the jnp
