@@ -13,7 +13,11 @@ lints, never repeated inference):
    builder mid-construction, aliasing scatters (WV3xx);
 4. **capacity** (``capacity.lint_capacity``) — capacity/poison
    soundness, plus the differential ``verify_rewrite`` used by
-   recovery's regrow (WV4xx).
+   recovery's regrow (WV4xx);
+5. **bounds** (``bounds_lint.lint_bounds``) — declared sizes vs. the
+   weldbound interval analysis (hint below the derived lower bound,
+   capacity above the proven upper bound, peak-memory certificate
+   contradicting ``memory_limit``) (WV5xx).
 
 The pipeline calls :func:`checkpoint` after every optimizer pass, after
 kernel planning, and after every recovery rewrite.  Checkpoints are
@@ -31,6 +35,7 @@ from .. import ir
 from .. import obs
 from .. import wtypes as wt
 from ..errors import WeldVerifyError
+from .bounds_lint import lint_bounds
 from .capacity import check_regrow_monotone, lint_capacity
 from .diagnostics import CODES, Diagnostic
 from .linear import lint_linearity
@@ -52,11 +57,13 @@ __all__ = [
 
 ENV_VERIFY = "WELD_VERIFY"
 
-#: analysis name -> lint entrypoint (all take (expr, types) -> [Diagnostic])
+#: analysis name -> lint entrypoint (all take (expr, types) -> [Diagnostic];
+#: "bounds" additionally receives shapes/memory_limit keywords)
 ANALYSES = {
     "linearity": lint_linearity,
     "races": lint_races,
     "capacity": lint_capacity,
+    "bounds": lint_bounds,
 }
 
 _override: Optional[bool] = None
@@ -82,12 +89,18 @@ def verify(
     e: ir.Expr,
     env: Optional[Dict[str, wt.WeldType]] = None,
     analyses: Optional[Sequence[str]] = None,
+    shapes: Optional[dict] = None,
+    memory_limit: Optional[int] = None,
 ) -> List[Diagnostic]:
     """Run the verifier over ``e`` and return every diagnostic found.
 
     ``env`` types the program's free identifiers; when omitted it is
     recovered from the idents' own annotations (sufficient for
     post-frontend IR, where frames stamp input types on the roots).
+    ``shapes`` (input name -> shape) lets the bounds lint resolve
+    symbolic sizes; ``memory_limit`` additionally arms the WV503
+    certificate-contradiction check (checkpoints never pass it — the
+    admission path owns that rejection with a typed ResourceError).
     """
     if env is None:
         env = {k: t for k, t in ir.free_vars(e).items() if t is not None}
@@ -100,7 +113,11 @@ def verify(
             f"missing result()",
             e, analysis="linearity"))
     for name in (analyses if analyses is not None else ANALYSES):
-        diags.extend(ANALYSES[name](e, types))
+        if name == "bounds":
+            diags.extend(ANALYSES[name](e, types, shapes=shapes,
+                                        memory_limit=memory_limit))
+        else:
+            diags.extend(ANALYSES[name](e, types))
     return diags
 
 
@@ -109,6 +126,7 @@ def checkpoint(
     e: ir.Expr,
     env: Optional[Dict[str, wt.WeldType]] = None,
     stats: Optional[dict] = None,
+    shapes: Optional[dict] = None,
 ) -> None:
     """Verify ``e`` at a named pipeline point; raise on violations.
 
@@ -119,7 +137,7 @@ def checkpoint(
         return
     t0 = time.perf_counter()
     with obs.span("verify", phase=phase) as sp:
-        diags = verify(e, env=env)
+        diags = verify(e, env=env, shapes=shapes)
         sp.set("diagnostics", len(diags))
     ms = (time.perf_counter() - t0) * 1e3
     if stats is not None:

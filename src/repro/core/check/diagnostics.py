@@ -6,6 +6,7 @@ Codes are grouped by analysis family:
 * ``WV2xx`` — builder linearity (consumed exactly once per path)
 * ``WV3xx`` — merge-race lint (parallel-loop soundness)
 * ``WV4xx`` — capacity / poison soundness
+* ``WV5xx`` — weldbound size/memory-bounds contradictions
 
 Every diagnostic carries the offending IR node so callers (the
 ``WeldVerifyError`` message, ``tools/weldlint.py``) can point at the
@@ -61,6 +62,15 @@ CODES = {
               "size hint is negative or duplicates a loop"),
     "WV404": ("regrow-not-monotone",
               "capacity rewrite shrank a capacity (regrow must grow)"),
+    # -- bounds (weldbound interval analysis) -----------------------------
+    "WV501": ("size-below-lower-bound",
+              "declared size is below the derived lower bound (buffer "
+              "provably truncates)"),
+    "WV502": ("size-above-upper-bound",
+              "declared size exceeds the derived upper bound (allocation "
+              "provably wastes budget)"),
+    "WV503": ("certificate-exceeds-limit",
+              "peak-memory certificate exceeds the plan's memory_limit"),
 }
 
 

@@ -179,6 +179,91 @@ def dup_builder(e: ir.Expr, rng: random.Random) -> Optional[Mutation]:
                     {"WV202", "WV101", "WV201", "WV205"}, None)
 
 
+def _probe_out_caps(e: ir.Expr, left_only: bool = False
+                    ) -> List[ir.KernelCall]:
+    """Planned ``group_probe`` calls carrying an ``out_cap`` param (the
+    post-kernelplan spelling of an expansion-buffer size)."""
+    out = []
+    for n in ir.walk(e):
+        if not (isinstance(n, ir.KernelCall)
+                and n.kernel == "group_probe"):
+            continue
+        params = dict(n.params)
+        if "out_cap" not in params:
+            continue
+        if left_only and not (params.get("how") == "left"
+                              and not params.get("has_pred")):
+            continue
+        out.append(n)
+    return out
+
+
+def _with_out_cap(kc: ir.KernelCall, value: int) -> ir.KernelCall:
+    return replace(kc, params=tuple(
+        (k, value if k == "out_cap" else v) for k, v in kc.params))
+
+
+def inflate_size_hint(e: ir.Expr, rng: random.Random) -> Optional[Mutation]:
+    """Blow a vecbuilder size hint (or a planned group_probe out_cap)
+    far past anything the inputs could produce — the weldbound interval
+    analysis proves the declared size exceeds the derived upper bound
+    (WV502: budget provably wasted / certificate inflated)."""
+
+    def is_hinted(n):
+        return (isinstance(n, ir.NewBuilder)
+                and isinstance(n.ty, wt.VecBuilder)
+                and isinstance(n.size_hint, ir.Literal))
+
+    sites = _sites(e, is_hinted) + _probe_out_caps(e)
+    if not sites:
+        return None
+    s = rng.choice(sites)
+    if isinstance(s, ir.NewBuilder):
+        huge = int(s.size_hint.value) * 1000 + 10 ** 7
+        bad: ir.Expr = replace(
+            s, size_hint=ir.Literal(huge, s.size_hint.ty))
+    else:
+        huge = int(dict(s.params)["out_cap"]) * 1000 + 10 ** 7
+        bad = _with_out_cap(s, huge)
+    return Mutation("inflate_size_hint", _replace_node(e, s, bad),
+                    {"WV502"}, bad)
+
+
+def undersize_hint(e: ir.Expr, rng: random.Random) -> Optional[Mutation]:
+    """Shrink an expansion-buffer size below the weldbound-derived lower
+    bound (WV501: provable truncation).  Only left-join expansion sites
+    carry a nonzero derived lower bound (every probe row emits at least
+    one output row), so the sites are hinted vecbuilders initializing a
+    loop whose body is guarded by KeyExists — the left m:n shape — or a
+    planned left group_probe."""
+    sites: List[ir.Expr] = []
+    for n in ir.walk(e):
+        if not (isinstance(n, ir.For) and isinstance(n.func, ir.Lambda)):
+            continue
+        body = n.func.body
+        if not (isinstance(body, ir.If)
+                and isinstance(body.cond, ir.KeyExists)):
+            continue
+        init = n.builder
+        items = init.items if isinstance(init, ir.MakeStruct) else (init,)
+        for item in items:
+            if (isinstance(item, ir.NewBuilder)
+                    and isinstance(item.ty, wt.VecBuilder)
+                    and isinstance(item.size_hint, ir.Literal)):
+                sites.append(item)
+    sites += _probe_out_caps(e, left_only=True)
+    if not sites:
+        return None
+    s = rng.choice(sites)
+    if isinstance(s, ir.NewBuilder):
+        bad: ir.Expr = replace(s, size_hint=ir.Literal(
+            1, s.size_hint.ty))
+    else:
+        bad = _with_out_cap(s, 1)
+    return Mutation("undersize_hint", _replace_node(e, s, bad),
+                    {"WV501"}, bad)
+
+
 MUTATORS: Dict[str, Callable] = {
     "drop_result": drop_result,
     "swap_merge_op": swap_merge_op,
@@ -186,6 +271,8 @@ MUTATORS: Dict[str, Callable] = {
     "retype_param": retype_param,
     "getfield_oob": getfield_oob,
     "dup_builder": dup_builder,
+    "inflate_size_hint": inflate_size_hint,
+    "undersize_hint": undersize_hint,
 }
 
 
@@ -194,21 +281,27 @@ def run_mutations(
     seed: int = 0,
     rounds: int = 3,
     mutators: Optional[Sequence[str]] = None,
+    shapes: Optional[Sequence[Optional[dict]]] = None,
 ) -> Score:
     """Apply each mutator ``rounds`` times per program (seeded) and
     score how many mutants the verifier catches with an expected code.
+
+    ``shapes`` (one input-shapes dict per program, or None) lets the
+    bounds lint resolve symbolic sizes — the WV501/WV502 mutators are
+    only catchable when the derived bounds evaluate to numbers.
     """
     rng = random.Random(seed)
     score = Score()
     names = list(mutators if mutators is not None else MUTATORS)
-    for prog in programs:
+    for pi, prog in enumerate(programs):
+        shp = shapes[pi] if shapes is not None else None
         for mname in names:
             for _ in range(rounds):
                 m = MUTATORS[mname](prog, rng)
                 if m is None:
                     continue
                 score.applied += 1
-                diags = verify(m.mutant)
+                diags = verify(m.mutant, shapes=shp)
                 if _caught(m, diags):
                     score.caught += 1
                 else:

@@ -146,6 +146,17 @@ def _scalar_kind_ok(ty: wt.WeldType, spec: reg.KernelSpec) -> bool:
     return isinstance(ty, wt.Scalar) and ty.kind in spec.elem_kinds
 
 
+def _static_cap(e: Optional[ir.Expr], dense: Shapes) -> Optional[int]:
+    """Resolve a capacity / size-hint expression to a concrete int.
+    Accepts anything the backend's static evaluator can resolve —
+    literals AND symbolic forms over input lengths (``max(len(r), 1)``,
+    ``len(l)*len(r)``) from the host-count-free join path — so kernel
+    routing no longer requires a host pre-count."""
+    from ..analysis.bounds import static_size
+
+    return static_size(e, dense)
+
+
 def _is_plus_identity(e: ir.Expr, elem: wt.Scalar) -> bool:
     return (
         isinstance(e, ir.Literal)
@@ -304,9 +315,9 @@ def _match_dict_group(loop: ir.For, dense: Shapes) -> Optional[ir.KernelCall]:
         return None
     if not _scalar_kind_ok(vt, spec):
         return None
-    if not (isinstance(nb.arg, ir.Literal)):
-        return None  # capacity must be a static literal
-    cap = int(nb.arg.value)
+    cap = _static_cap(nb.arg, dense)
+    if cap is None:
+        return None  # capacity must be statically resolvable
     if spec.max_segments is not None and cap > spec.max_segments:
         return None
     b, i, x = loop.func.params
@@ -365,9 +376,9 @@ def _match_hash_build(loop: ir.For, dense: Shapes) -> Optional[ir.KernelCall]:
     val_tys = vt.fields if isinstance(vt, wt.Struct) else (vt,)
     if not all(_scalar_kind_ok(t, spec) for t in val_tys):
         return None
-    if not isinstance(nb.arg, ir.Literal):
-        return None  # capacity must be a static literal
-    cap = int(nb.arg.value)
+    cap = _static_cap(nb.arg, dense)
+    if cap is None:
+        return None  # capacity must be statically resolvable
     if spec.max_segments is not None and cap > spec.max_segments:
         return None
     b, i, x = loop.func.params
@@ -689,9 +700,9 @@ def _match_group_build(loop: ir.For, dense: Shapes) -> Optional[ir.KernelCall]:
         return None
     if not _scalar_kind_ok(vt, spec):
         return None
-    if not isinstance(nb.arg, ir.Literal):
-        return None  # capacity must be a static literal
-    cap = int(nb.arg.value)
+    cap = _static_cap(nb.arg, dense)
+    if cap is None:
+        return None  # capacity must be statically resolvable
     if spec.max_segments is not None and cap > spec.max_segments:
         return None
     b, i, x = loop.func.params
@@ -752,10 +763,9 @@ def _match_group_probe(loop: ir.For,
         return None
     if not all(p.ty.elem.kind in spec.elem_kinds for p in shape.builders):
         return None
-    hint = shape.builders[0].size_hint
-    if not isinstance(hint, ir.Literal):
+    out_cap = _static_cap(shape.builders[0].size_hint, dense)
+    if out_cap is None:
         return None  # output capacity must be static to size the buffers
-    out_cap = int(hint.value)
     kt = shape.d.ty.key
     key_tys = kt.fields if isinstance(kt, wt.Struct) else (kt,)
     if not all(isinstance(t, wt.Scalar) and t.is_int for t in key_tys):
@@ -1085,6 +1095,17 @@ def plan_kernels(
     #: let-bound dict values (kernelized or generic) -> static capacity,
     #: which prices and autotunes the probe side of a hash join.
     dict_caps: Dict[str, int] = {}
+    #: weldbound [lo, hi] row intervals for let-bound intermediates
+    #: whose exact length is unknown — the roofline model prices those
+    #: candidates at the interval midpoint instead of bailing
+    nbounds: Dict[str, Tuple[int, Optional[int]]] = {}
+    try:
+        from ..analysis import bounds as _bounds
+
+        if _bounds.enabled():
+            nbounds = _bounds.analyze(e).name_bounds(input_shapes)
+    except Exception:
+        nbounds = {}
 
     def _quarantined(kc: ir.KernelCall, meta: dict) -> bool:
         from . import quarantine
@@ -1097,6 +1118,12 @@ def plan_kernels(
 
     def consider(kc: ir.KernelCall, orig: ir.Expr) -> ir.Expr:
         meta = _call_meta(kc, dense, dict_caps)
+        if meta.get("n") is None and nbounds:
+            mid = _midpoint_n(kc, nbounds)
+            if mid is not None:
+                meta["n"] = mid
+                kplan["midpoint_priced"] = (
+                    kplan.get("midpoint_priced", 0) + 1)
         if _quarantined(kc, meta):
             # a route that failed to stage/compile before is rejected up
             # front (even under "always") — re-paying a known failure
@@ -1189,7 +1216,7 @@ def plan_kernels(
             v = rec_let_value(x.value, _probed_as_dict(x.name, x.body))
             if _value_dense(v, dense):
                 dense[x.name] = _shape_of(v, dense)
-            cap = _dict_cap_of(v)
+            cap = _dict_cap_of(v, dense)
             if cap is not None:
                 dict_caps[x.name] = cap
             return ir.Let(x.name, v, rec(x.body))
@@ -1210,8 +1237,28 @@ def plan_kernels(
     # probe) would otherwise only surface as a cryptic staging error
     from .. import check
 
-    check.checkpoint("kernelplan", planned, stats=stats)
+    check.checkpoint("kernelplan", planned, stats=stats,
+                     shapes=input_shapes)
     return planned
+
+
+def _midpoint_n(kc: ir.KernelCall,
+                nbounds: Dict[str, Tuple[int, Optional[int]]]
+                ) -> Optional[int]:
+    """Midpoint of the derived [lo, hi] length interval of the call's
+    driving argument — only consulted when the exact length is unknown,
+    and only when the interval's upper bound is finite."""
+    if kc.kernel in ("matmul", "matvec"):
+        return None  # dims-driven: a guessed n would misprice the MXU
+    args = (kc.args[1:] if kc.kernel in ("hash_probe", "group_probe")
+            else kc.args)
+    for a in args:
+        if isinstance(a, ir.Ident) and a.name in nbounds:
+            lo, hi = nbounds[a.name]
+            if hi is None:
+                continue
+            return max(1, (int(lo) + int(hi) + 1) // 2)
+    return None
 
 
 def _probed_as_dict(name: str, body: ir.Expr) -> bool:
@@ -1224,8 +1271,10 @@ def _probed_as_dict(name: str, body: ir.Expr) -> bool:
     )
 
 
-def _dict_cap_of(v: ir.Expr) -> Optional[int]:
-    """Static capacity of a let-bound dict value, kernelized or not."""
+def _dict_cap_of(v: ir.Expr, dense: Shapes) -> Optional[int]:
+    """Static capacity of a let-bound dict value, kernelized or not.
+    Symbolic capacities (the host-count-free join path) resolve against
+    the bound input shapes like any other static size."""
     if isinstance(v, ir.KernelCall) and v.kernel in (
             "dict_group_sum", "dict_hash_build", "group_build"):
         cap = dict(v.params).get("capacity")
@@ -1233,7 +1282,6 @@ def _dict_cap_of(v: ir.Expr) -> Optional[int]:
     if isinstance(v, ir.Result) and isinstance(v.builder, ir.For):
         nb = v.builder.builder
         if isinstance(nb, ir.NewBuilder) \
-                and isinstance(nb.ty, (wt.DictMerger, wt.GroupBuilder)) \
-                and isinstance(nb.arg, ir.Literal):
-            return int(nb.arg.value)
+                and isinstance(nb.ty, (wt.DictMerger, wt.GroupBuilder)):
+            return _static_cap(nb.arg, dense)
     return None

@@ -68,7 +68,8 @@ def optimize(
                 else:
                     e = _PASS_FNS[name](e, stats)
             if verifying:
-                check.checkpoint(f"pass.{name}", e, stats=stats)
+                check.checkpoint(f"pass.{name}", e, stats=stats,
+                                 shapes=input_shapes)
         stats["iterations"] = it + 1
         if ir.canon_key(e) == before:
             break

@@ -73,26 +73,72 @@ def disabled():
         set_enabled(prev)
 
 
-def regrow_capacities(e: ir.Expr, factor: int):
+def regrow_capacities(e: ir.Expr, factor: int, bounds=None):
     """Re-stamp every dict/group builder capacity literal with
-    ``capacity * factor``; returns ``(expr, n_stamped)``."""
+    ``capacity * factor``; returns ``(expr, n_stamped)``.
+
+    ``bounds`` (``id(NewBuilder) -> (lb, ub)``, from
+    ``analysis.bounds.BoundsReport.capacity_bounds``) clamps the ladder
+    at what the interval analysis proved: a rung below the proven lower
+    bound jumps straight to it (growing there would provably still
+    poison), and no rung grows past the proven upper bound — a capacity
+    already at/above it provably cannot be exceeded, so it is left
+    unstamped (and an all-clamped program falls through to the generic
+    lowering instead of burning rungs)."""
     n = 0
+    bounds = bounds or {}
 
     def rec(x: ir.Expr) -> ir.Expr:
         nonlocal n
+        orig = x
         x = x.map_children(rec)
         if (isinstance(x, ir.NewBuilder)
                 and isinstance(x.ty, (wt.DictMerger, wt.GroupBuilder))
                 and isinstance(x.arg, ir.Literal)):
+            old = int(x.arg.value)
+            new = old * factor
+            lb, ub = bounds.get(id(orig), (0, None))
+            if lb and new < lb:
+                new = int(lb)
+            if ub is not None and int(ub) > 0:
+                # never shrink below the current rung's own value: the
+                # differential WV404 check (and cache keys) rely on
+                # regrow being monotone
+                new = min(new, max(int(ub), old))
+            if new <= old:
+                return x  # provably can't overflow: nothing to regrow
             n += 1
             return ir.NewBuilder(
                 x.ty,
-                arg=ir.Literal(int(x.arg.value) * factor, x.arg.ty),
+                arg=ir.Literal(new, x.arg.ty),
                 size_hint=x.size_hint,
             )
         return x
 
     return rec(e), n
+
+
+def _capacity_bounds(prog):
+    """Proven ``id(NewBuilder) -> (lb, ub)`` capacity bounds for the
+    program's dict/group builders, from the weldbound interval analysis
+    evaluated at the bound input shapes.  Best-effort: any failure (or
+    the analysis being disabled) just leaves the ladder unclamped."""
+    try:
+        import numpy as np
+
+        from .analysis import bounds as _bounds
+
+        if not _bounds.enabled():
+            return {}
+        shapes = {}
+        for name, bound in getattr(prog, "inputs", {}).items():
+            try:
+                shapes[name] = tuple(np.asarray(bound[-1]).shape)
+            except Exception:
+                continue
+        return _bounds.analyze(prog.expr).capacity_bounds(shapes)
+    except Exception:
+        return {}
 
 
 def _warn(msg: str) -> None:
@@ -141,7 +187,15 @@ def run_with_recovery(runner, prog, *, optimize, memory_limit, passes,
             grown = None
             if regrows < MAX_REGROW:
                 grown, n_stamped = regrow_capacities(
-                    prog.expr, factor * GROWTH)
+                    prog.expr, factor * GROWTH,
+                    bounds=_capacity_bounds(prog))
+                if n_stamped == 0:
+                    # every capacity already sits at its proven upper bound,
+                    # yet the runtime still observed a poison — the bound is
+                    # contradicted (transient fault or unsound proof), so
+                    # distrust the clamp and double unconditionally
+                    grown, n_stamped = regrow_capacities(
+                        prog.expr, factor * GROWTH)
                 if n_stamped == 0:
                     grown = None  # nothing to regrow: skip to fallback
             if grown is not None:

@@ -24,9 +24,10 @@ from . import faults  # noqa: E402
 from . import ir  # noqa: E402
 from . import obs  # noqa: E402
 from . import wtypes as wt  # noqa: E402
+from .analysis import bounds as _bounds  # noqa: E402
 from .backend.jaxgen import emit_program  # noqa: E402
 from .backend.values import WDict, WGroup, WVec  # noqa: E402
-from .errors import CapacityError  # noqa: E402
+from .errors import CapacityError, ResourceError  # noqa: E402
 from .lazy import Program  # noqa: E402
 from .passes import loop_count, optimize as run_passes  # noqa: E402
 
@@ -162,7 +163,8 @@ def _compile_and_run(prog, optimize, memory_limit, passes, mode,
         # verify the frontend's program before any rewrite touches it:
         # a pre-existing violation must be blamed on the input, not on
         # whichever pass happens to run first
-        check.checkpoint("input", expr, env=types, stats=stats)
+        check.checkpoint("input", expr, env=types, stats=stats,
+                         shapes=shapes)
         if optimize:
             with obs.span("optimize") as sp:
                 expr = run_passes(expr, passes=passes, stats=stats,
@@ -180,7 +182,8 @@ def _compile_and_run(prog, optimize, memory_limit, passes, mode,
                 with obs.span("autotune"):
                     expr = autotune.tune_plan(expr, impl=kernel_impl,
                                               stats=stats)
-                check.checkpoint("autotune", expr, stats=stats)
+                check.checkpoint("autotune", expr, stats=stats,
+                                 shapes=shapes)
         # the planned IR is part of the stats so explain()/the measured
         # replay can reach the program that actually ran (cache hits
         # included — the expr rides along in the cached stats entry).
@@ -191,6 +194,39 @@ def _compile_and_run(prog, optimize, memory_limit, passes, mode,
         stats["plan.ir"] = expr
         stats["plan.inputs"] = (list(input_names), dict(types),
                                 dict(shapes))
+        # weldbound admission: evaluate the plan's symbolic peak-memory
+        # certificate against the bound inputs and reject BEFORE tracing
+        # — a rejected plan costs zero kernel launches and is never
+        # cached.  Analysis failures only disable admission (the
+        # emitter's own trace-time charging still guards execution).
+        if _bounds.enabled():
+            tb0 = time.perf_counter()
+            with obs.span("bounds") as sp:
+                try:
+                    brep = _bounds.analyze(expr)
+                except Exception:
+                    brep = None
+                if brep is not None:
+                    peak = brep.peak(shapes)
+                    admitted = (memory_limit is None
+                                or peak <= int(memory_limit))
+                    stats["bounds.certificate"] = brep.certificate()
+                    stats["bounds.peak_bytes"] = peak
+                    stats["bounds.builders"] = brep.builder_lines(shapes)
+                    stats["bounds.out_rows"] = brep.result_rows(shapes)
+                    stats["bounds.admitted"] = admitted
+                    sp.set("peak_bytes", peak)
+                    sp.set("admitted", admitted)
+            stats["bounds.ms"] = round(
+                (time.perf_counter() - tb0) * 1e3, 3)
+            if brep is not None and not stats["bounds.admitted"]:
+                raise ResourceError(
+                    f"plan rejected at admission: peak-memory certificate "
+                    f"{stats['bounds.certificate']} = "
+                    f"{stats['bounds.peak_bytes']} bytes exceeds "
+                    f"memory_limit={int(memory_limit)} (builder size "
+                    f"hints + kernel scratch footprints provably do not "
+                    f"fit; nothing was traced or launched)")
         with obs.span("jit_compile"):
             fn = emit_program(expr, input_names, types, shapes, memory_limit,
                               kernel_impl=kernel_impl)

@@ -254,6 +254,8 @@ class Query:
         suffix: str = "_r",
         capacity: Optional[int] = None,
         validate: Optional[str] = None,
+        precount: bool = True,
+        memory_limit: Optional[int] = None,
         kernelize=None,
         kernel_impl=None,
         collect_stats: Optional[dict] = None,
@@ -306,6 +308,25 @@ class Query:
         plan (``dict_hash_build``+``hash_probe``, or ``group_build``+
         ``group_probe`` for m:n) — ALL output columns share one probe
         launch regardless of width (``repro.core.kernelplan``).
+
+        ``precount=False`` (lazy tables only) drops the host pre-count
+        entirely: no distinct/duplicate scan, no match-total sum.
+        Capacities and expansion buffers are instead *symbolic* IR
+        expressions (``max(len(build), 1)`` for the group capacity,
+        ``len(probe) * len(build)`` for the expansion buffer) that the
+        weldbound interval analysis derives bounds for and the backend
+        resolves against the bound shapes at trace time.  Every join
+        lowers through the m:n group path (duplicates cannot be ruled
+        out without counting), so ``how="anti"``, ``validate="m:1"``
+        and packed (float or multi-column) keys — all of which *need* a
+        host value scan — raise under ``precount=False``.
+
+        ``memory_limit`` (bytes, lazy only) arms compile-time admission
+        control: the plan's symbolic peak-memory certificate is
+        evaluated against the bound input shapes and a provably
+        over-budget plan raises a typed
+        :class:`~repro.core.errors.ResourceError` *before* anything is
+        traced or launched (see ``repro.core.analysis.bounds``).
         """
         if how not in ("inner", "left", "anti"):
             raise NotImplementedError(
@@ -345,10 +366,38 @@ class Query:
             np.issubdtype(c.dtype, np.floating)
             for c in (lk_host[0], rk_host[0])
         )
-        rk_packed = _pack_host(rk_host) if do_pack else rk_host[0]
-        distinct = int(np.unique(rk_packed).size)
-        n_dup = int(rk_packed.size) - distinct
-        if do_pack and any(
+        static_caps = (not precount) and not self.table.eager
+        if static_caps:
+            # weldbound static-capacity mode: no host counting at all.
+            # Everything below that *requires* a value scan is rejected
+            # up front; duplicates can't be ruled out, so every join
+            # lowers through the m:n group path with symbolic sizes.
+            if how == "anti":
+                raise NotImplementedError(
+                    "join precount=False cannot lower how='anti': anti "
+                    "joins require host pre-counting (unique build "
+                    "keys); pass precount=True"
+                )
+            if validate == "m:1":
+                raise ValueError(
+                    "join precount=False cannot honor validate='m:1': "
+                    "duplicate detection is a host value scan; pass "
+                    "precount=True"
+                )
+            if do_pack:
+                raise ValueError(
+                    "join precount=False supports single integer key "
+                    "columns only: packed (float or multi-column) keys "
+                    "need a host conflation scan; pass precount=True"
+                )
+            mn = True
+            distinct = n_dup = 0  # never consulted on this path
+        else:
+            rk_packed = _pack_host(rk_host) if do_pack else rk_host[0]
+            distinct = int(np.unique(rk_packed).size)
+            n_dup = int(rk_packed.size) - distinct
+            mn = n_dup > 0
+        if not static_caps and do_pack and any(
             np.issubdtype(c.dtype, np.floating) for c in rk_host
         ):
             # m:n made duplicate build keys legal, so the uniqueness
@@ -380,7 +429,6 @@ class Query:
                 "m:n anti joins pending (build side has duplicate "
                 "keys); aggregate the right side first"
             )
-        mn = n_dup > 0
         names_l = list(self.table.cols)
         names_r = (
             [] if how == "anti"
@@ -398,13 +446,21 @@ class Query:
                 f"{dups}; rename columns or pick another suffix"
             )
         m = len(names_r)
-        cap = int(capacity if capacity is not None else max(distinct, 1))
+        cap: Optional[int] = (
+            int(capacity) if capacity is not None
+            else (None if static_caps else max(distinct, 1))
+        )
         injected_cap = faults.capacity_override("join.capacity")
         if injected_cap is not None:
             # fault injection: simulate a mis-estimated build capacity
             # (bypassing the guard below) so the runtime's poison ->
             # regrow -> fallback recovery ladder can be exercised
             cap = injected_cap
+        elif static_caps:
+            # no distinct count exists to guard against — an undersized
+            # explicit capacity surfaces as runtime capacity poison and
+            # rides the recovery regrow ladder instead
+            pass
         elif cap < distinct:
             # an undersized dict poisons the build at decode time — on
             # an explicit user-passed capacity, fail loudly (and typed)
@@ -490,15 +546,26 @@ class Query:
             # by the exact unfiltered match total (host-computed from
             # the same packed keys the dict compares); a predicate only
             # shrinks the in-program count.
-            lk_packed = _pack_host(lk_host) if do_pack else lk_host[0]
-            rks_h = np.sort(rk_packed)
-            cnt_h = (np.searchsorted(rks_h, lk_packed, side="right")
-                     - np.searchsorted(rks_h, lk_packed, side="left"))
-            out_cap = int(cnt_h.sum() if how == "inner"
-                          else np.maximum(cnt_h, 1).sum())
+            out_cap: Optional[int] = None
+            if not static_caps:
+                lk_packed = _pack_host(lk_host) if do_pack else lk_host[0]
+                rks_h = np.sort(rk_packed)
+                cnt_h = (np.searchsorted(rks_h, lk_packed, side="right")
+                         - np.searchsorted(rks_h, lk_packed, side="left"))
+                out_cap = int(cnt_h.sum() if how == "inner"
+                              else np.maximum(cnt_h, 1).sum())
 
             r_objs = [c.obj for c in rkey_cols]
             r_ids = [ir.Ident(o.obj_id, o.weld_type()) for o in r_objs]
+            # group capacity: the host distinct count when we have one,
+            # else the proven-sufficient symbolic bound max(len(build),1)
+            # — structurally >= the number of distinct keys, so the
+            # symbolic path can never poison the build
+            cap_node: ir.Expr = (
+                ir.Literal(cap, wt.I64) if cap is not None
+                else ir.BinOp("max", ir.Len(r_ids[0]),
+                              ir.Literal(1, wt.I64))
+            )
             b_elem = (
                 wt.Struct(tuple(_ety(k, r_ids) for k in range(len(r_ids))))
                 if len(r_ids) > 1 else _ety(0, r_ids)
@@ -517,7 +584,7 @@ class Query:
             )
             build = ir.For(
                 tuple(ir.Iter(idn) for idn in r_ids),
-                ir.NewBuilder(bt, arg=ir.Literal(cap, wt.I64)),
+                ir.NewBuilder(bt, arg=cap_node),
                 ir.Lambda((b, i, x), ir.Merge(b, ir.MakeStruct((kf, i)))),
             )
             group_obj = NewWeldObject(r_objs, ir.Result(build))
@@ -597,18 +664,31 @@ class Query:
             body2: ir.Expr = core if pred_slot is None else ir.If(
                 field(pred_slot), core, b2
             )
+            if out_cap is not None:
+                hint_node: ir.Expr = ir.Literal(out_cap, wt.I64)
+            else:
+                # symbolic expansion bound: every probe row matches at
+                # most len(build) rows (left joins emit at least one, so
+                # max(len(build), 1) per row) — the weldbound interval
+                # analysis tightens and certifies this, and the backend
+                # resolves it against the bound shapes at trace time
+                per_row: ir.Expr = ir.Len(r_ids[0])
+                if how == "left":
+                    per_row = ir.BinOp("max", per_row,
+                                       ir.Literal(1, wt.I64))
+                hint_node = ir.BinOp("*", ir.Len(ids2[0]), per_row)
+                dep(r_objs[0])  # the hint reads len(build keys)
             loop = ir.For(
                 tuple(ir.Iter(idn) for idn in ids2),
                 ir.MakeStruct(tuple(
-                    ir.NewBuilder(
-                        bt2, size_hint=ir.Literal(out_cap, wt.I64)
-                    )
+                    ir.NewBuilder(bt2, size_hint=hint_node)
                     for bt2 in builders
                 )),
                 ir.Lambda((b2, i2, x2), body2),
             )
             obj = NewWeldObject(deps, ir.Result(loop))
-            res = Evaluate(obj, kernelize=kernelize,
+            res = Evaluate(obj, memory_limit=memory_limit,
+                           kernelize=kernelize,
                            kernel_impl=kernel_impl,
                            collect_stats=collect_stats)
             arrays = [np.asarray(v) for v in res.value]
@@ -740,7 +820,8 @@ class Query:
         )
 
         obj = NewWeldObject(deps, ir.Result(loop))
-        res = Evaluate(obj, kernelize=kernelize, kernel_impl=kernel_impl,
+        res = Evaluate(obj, memory_limit=memory_limit,
+                       kernelize=kernelize, kernel_impl=kernel_impl,
                        collect_stats=collect_stats)
         arrays = [np.asarray(v) for v in res.value]
         return Table(dict(zip(out_names, arrays)), eager=False)
@@ -910,6 +991,24 @@ class PlanReport:
                 lines.append(
                     f"  {name:<24} x{len(times):<3} {sum(times):8.2f}ms"
                 )
+        if "bounds.certificate" in st:
+            lines += ["", "-- bounds --"]
+            lines.append(
+                f"  peak-memory certificate: {st['bounds.certificate']}"
+            )
+            lines.append(
+                f"  peak_bytes={st.get('bounds.peak_bytes')}   "
+                f"admitted={st.get('bounds.admitted')}   "
+                f"analysis_ms={st.get('bounds.ms', 0.0):.2f}"
+            )
+            out_rows = st.get("bounds.out_rows")
+            if out_rows is not None:
+                lo, hi = out_rows
+                lines.append(
+                    f"  out_rows in [{lo}, {'inf' if hi is None else hi}]"
+                )
+            for bl in st.get("bounds.builders") or []:
+                lines.append(f"  {bl}")
         if self.analyze:
             mrows = self.kernel_spans()
             if mrows:

@@ -1,0 +1,322 @@
+"""weldbound: symbolic size/memory-bounds inference + admission control.
+
+Four layers:
+
+1. the symbolic domain (folding, evaluation, rendering, intervals);
+2. interpreter transfer functions on hand-built IR (map / filter /
+   dict build / m:n expansion);
+3. whole-plan artifacts on real weldrel pipelines — certificates in
+   stats, the ``-- bounds --`` explain section, soundness of derived
+   intervals against observed output sizes;
+4. consumers — compile-time admission control (typed ResourceError,
+   zero launches), the recovery ladder's capacity clamp, and the
+   ``WELD_BOUNDS`` kill switch.
+"""
+import numpy as np
+import pytest
+
+from repro.core import ir, obs, recovery, wtypes as wt
+from repro.core.analysis import bounds, domain as d
+from repro.core.errors import ResourceError
+from repro.frames import weldrel
+
+
+# ---------------------------------------------------------------------------
+# domain
+# ---------------------------------------------------------------------------
+
+
+def test_sym_folding_and_identities():
+    n = d.length("xs")
+    assert d.add(d.const(2), d.const(3)) == d.const(5)
+    assert d.mul(d.const(1), n) == n
+    assert d.mul(d.const(0), n) == d.const(0)
+    assert d.add(d.const(0), n) == n
+    assert d.smax(n, d.const(0)) == n  # lengths are nonnegative
+    assert d.smin(d.const(4), d.const(9)) == d.const(4)
+
+
+def test_sym_evaluate_against_shapes():
+    s = d.mul(d.add(d.length("a"), d.const(2)), d.const(8))
+    assert d.evaluate(s, {"a": (10,)}) == 96
+    assert d.evaluate(s, {}) is None  # unknown length: unresolvable
+    assert d.evaluate(d.div(d.const(7), d.const(0)), {}) == 0
+
+
+def test_sym_render_is_readable():
+    s = d.mul(d.length("obj123"), d.smax(d.length("obj9"), d.const(1)))
+    txt = d.render(s, {"obj123": "in0", "obj9": "in1"})
+    assert txt == "len(in0)*max(len(in1), 1)"
+
+
+def test_interval_arithmetic_and_values():
+    a = d.Interval(d.const(2), d.const(5))
+    b = d.Interval(d.const(0), d.length("xs"))
+    m = a.mul(b)
+    assert m.lo_val({}) == 0
+    assert m.hi_val({"xs": (3,)}) == 15
+    assert a.join(b).lo_val({}) == 0
+    assert b.hi_val({}) == d.INF
+
+
+def test_sym_of_mirrors_static_eval_fragment():
+    xs = ir.Ident("xs", wt.Vec(wt.F64))
+    e = ir.BinOp("*", ir.Len(xs), ir.Literal(8, wt.I64))
+    assert bounds.static_size(e, {"xs": (11,)}) == 88
+    assert bounds.static_size(e, {}) is None
+    # outside the emitter's static fragment: None, not a guess
+    assert bounds.sym_of(ir.UnaryOp("not", ir.Literal(True, wt.Bool))) \
+        is None
+
+
+# ---------------------------------------------------------------------------
+# interpreter transfer functions
+# ---------------------------------------------------------------------------
+
+XS = ir.Ident("xs", wt.Vec(wt.F64))
+
+
+def _loop(body_fn, init=None):
+    vbt = wt.VecBuilder(wt.F64)
+    b, i, e = (ir.Ident("b", vbt), ir.Ident("i", wt.I64),
+               ir.Ident("e", wt.F64))
+    return ir.Result(ir.For(
+        (ir.Iter(XS),),
+        init if init is not None else ir.NewBuilder(vbt),
+        ir.Lambda((b, i, e), body_fn(b, i, e))))
+
+
+def test_map_bounds_are_exact():
+    prog = _loop(lambda b, i, e: ir.Merge(b, e))
+    rep = bounds.analyze(prog)
+    lo, hi = rep.result_rows({"xs": (42,)})
+    assert (lo, hi) == (42, 42)
+
+
+def test_filter_bounds_are_zero_to_n():
+    prog = _loop(lambda b, i, e: ir.If(
+        ir.BinOp(">", e, ir.Literal(0.0, wt.F64)), ir.Merge(b, e), b))
+    rep = bounds.analyze(prog)
+    assert rep.result_rows({"xs": (42,)}) == (0, 42)
+    # and symbolically: hi is len(xs), not a constant
+    iv = rep.result_interval()
+    assert iv.hi_val({}) == d.INF or iv.hi == d.length("xs")
+
+
+def test_dict_build_bounds_min_of_n_and_capacity():
+    bty = wt.DictMerger(wt.I64, wt.F64, "+")
+    b, i, e = (ir.Ident("b", bty), ir.Ident("i", wt.I64),
+               ir.Ident("e", wt.F64))
+    prog = ir.Result(ir.For(
+        (ir.Iter(XS),),
+        ir.NewBuilder(bty, arg=ir.Literal(16, wt.I64)),
+        ir.Lambda((b, i, e),
+                  ir.Merge(b, ir.MakeStruct((ir.Cast(e, wt.I64), e))))))
+    rep = bounds.analyze(prog)
+    # distinct keys <= min(n, capacity)
+    assert rep.result_rows({"xs": (100,)}) == (0, 16)
+    assert rep.result_rows({"xs": (7,)}) == (0, 7)
+    (bb,) = rep.builders
+    assert bb.role == "cap" and bb.kind == "dictmerger"
+    # rows (merge mass) is exactly n — the regrow ladder's upper clamp
+    assert rep.capacity_bounds({"xs": (100,)})[id(bb.node)] == (1, 100)
+
+
+def test_constant_vector_loop_needs_no_shapes():
+    mv = ir.MakeVec(tuple(ir.Literal(float(k), wt.F64)
+                          for k in range(5)), wt.F64)
+    vbt = wt.VecBuilder(wt.F64)
+    b, i, e = (ir.Ident("b", vbt), ir.Ident("i", wt.I64),
+               ir.Ident("e", wt.F64))
+    prog = ir.Result(ir.For(
+        (ir.Iter(mv),), ir.NewBuilder(vbt),
+        ir.Lambda((b, i, e), ir.Merge(b, e))))
+    assert bounds.analyze(prog).result_rows({}) == (5, 5)
+
+
+# ---------------------------------------------------------------------------
+# whole-plan artifacts on real pipelines
+# ---------------------------------------------------------------------------
+
+
+def _mat(table, col):
+    c = table.cols[col]
+    return c._eager if c.is_eager else np.asarray(c.obj.data)
+
+
+@pytest.fixture()
+def join_tables():
+    rng = np.random.RandomState(3)
+    left = weldrel.Table({"k": rng.randint(0, 16, 256).astype(np.int64),
+                          "lv": rng.rand(256)})
+    mn = weldrel.Table({"k": rng.randint(0, 16, 48).astype(np.int64),
+                        "rv": rng.rand(48)})
+    return left, mn
+
+
+def test_stats_carry_certificate_and_intervals(join_tables):
+    left, mn = join_tables
+    st = {}
+    out = weldrel.Query(left).join(mn, on="k", collect_stats=st)
+    assert "bounds.certificate" in st
+    assert st["bounds.admitted"] is True
+    assert st["bounds.peak_bytes"] >= 0
+    lo, hi = st["bounds.out_rows"]
+    observed = _mat(out, "k").size
+    assert lo <= observed <= (hi if hi is not None else observed)
+
+
+def test_mn_soundness_observed_inside_interval(join_tables):
+    """The m:n expansion's derived interval must contain the observed
+    output size — for inner (lo=0) and left (lo=n_probe) alike."""
+    left, mn = join_tables
+    for how in ("inner", "left"):
+        st = {}
+        out = weldrel.Query(left).join(mn, on="k", how=how,
+                                       collect_stats=st)
+        rep = bounds.analyze(st["plan.ir"])
+        shapes = st["plan.inputs"][2]
+        lo, hi = rep.result_rows(shapes)
+        observed = _mat(out, "k").size
+        assert lo <= observed, (how, lo, observed)
+        assert hi is None or observed <= hi, (how, observed, hi)
+        if how == "left":
+            assert lo >= 256  # every probe row emits at least once
+
+
+def test_explain_precount_false_shows_symbolic_certificate(join_tables):
+    left, mn = join_tables
+    rep = weldrel.Query(left).explain().join(mn, on="k", how="left",
+                                             precount=False)
+    txt = rep.render()
+    assert "-- bounds --" in txt
+    i = txt.index("-- bounds --")
+    sect = txt[i:]
+    assert "peak-memory certificate" in sect
+    assert "len(" in sect  # symbolic in the input lengths
+    assert "admitted=True" in sect
+    assert "out_rows in [" in sect
+
+
+def test_precount_false_matches_precount_true(join_tables):
+    left, mn = join_tables
+    for how in ("inner", "left"):
+        a = weldrel.Query(left).join(mn, on="k", how=how, precount=False)
+        b = weldrel.Query(left).join(mn, on="k", how=how)
+        for c in ("k", "lv", "rv"):
+            np.testing.assert_array_equal(_mat(a, c), _mat(b, c))
+
+
+def test_precount_false_rejects_unsupported_shapes(join_tables):
+    left, mn = join_tables
+    fleft = weldrel.Table({"k": np.arange(8).astype(np.float64),
+                           "lv": np.arange(8.0)})
+    fr = weldrel.Table({"k": np.arange(8).astype(np.float64),
+                        "rv": np.arange(8.0)})
+    with pytest.raises(NotImplementedError, match="anti"):
+        weldrel.Query(left).join(mn, on="k", how="anti", precount=False)
+    with pytest.raises(ValueError, match="m:1"):
+        weldrel.Query(left).join(mn, on="k", validate="m:1",
+                                 precount=False)
+    with pytest.raises(ValueError, match="integer key"):
+        weldrel.Query(fleft).join(fr, on="k", precount=False)
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+
+def test_admission_rejects_before_any_tracing(join_tables):
+    left, mn = join_tables
+    obs.enable()
+    obs.clear()
+    pos = obs.mark()
+    try:
+        with pytest.raises(ResourceError, match="admission"):
+            weldrel.Query(left).join(mn, on="k", precount=False,
+                                     memory_limit=64)
+        names = {s.name for s in obs.spans_since(pos)}
+    finally:
+        obs.disable()
+        obs.clear()
+    assert "bounds" in names
+    # nothing was traced, compiled, or launched
+    assert "jit_compile" not in names
+    assert "execute" not in names
+    assert not any(n.startswith("kernel.") or n.startswith("launch.")
+                   for n in names)
+
+
+def test_admission_admits_with_room(join_tables):
+    left, mn = join_tables
+    out = weldrel.Query(left).join(mn, on="k", precount=False,
+                                   memory_limit=1 << 30)
+    assert _mat(out, "k").size > 0
+
+
+def test_bounds_disabled_skips_admission(join_tables):
+    from repro.core import runtime
+
+    left, mn = join_tables
+    runtime.clear_cache()  # a cached hit would replay bounds.* stats
+    bounds.set_enabled(False)
+    try:
+        st = {}
+        weldrel.Query(left).join(mn, on="k", collect_stats=st)
+        assert "bounds.certificate" not in st
+    finally:
+        bounds.set_enabled(None)
+
+
+# ---------------------------------------------------------------------------
+# recovery clamp
+# ---------------------------------------------------------------------------
+
+
+def _cap_loop(cap):
+    bty = wt.DictMerger(wt.I64, wt.F64, "+")
+    b, i, e = (ir.Ident("b", bty), ir.Ident("i", wt.I64),
+               ir.Ident("e", wt.F64))
+    return ir.Result(ir.For(
+        (ir.Iter(XS),),
+        ir.NewBuilder(bty, arg=ir.Literal(cap, wt.I64)),
+        ir.Lambda((b, i, e),
+                  ir.Merge(b, ir.MakeStruct((ir.Cast(e, wt.I64), e))))))
+
+
+def _the_nb(prog):
+    return next(n for n in ir.walk(prog)
+                if isinstance(n, ir.NewBuilder))
+
+
+def test_regrow_clamps_at_proven_upper_bound():
+    prog = _cap_loop(2)
+    nb = _the_nb(prog)
+    grown, n = recovery.regrow_capacities(prog, 8,
+                                          bounds={id(nb): (1, 4)})
+    assert n == 1
+    assert _the_nb(grown).arg.value == 4  # 2*8=16 clamped to ub=4
+
+
+def test_regrow_skips_capacity_already_at_bound():
+    prog = _cap_loop(8)
+    nb = _the_nb(prog)
+    grown, n = recovery.regrow_capacities(prog, 2,
+                                          bounds={id(nb): (1, 4)})
+    assert n == 0  # 8 >= ub 4: provably cannot overflow, unstamped
+
+
+def test_regrow_jumps_to_proven_lower_bound():
+    prog = _cap_loop(1)
+    nb = _the_nb(prog)
+    grown, n = recovery.regrow_capacities(prog, 2,
+                                          bounds={id(nb): (100, 1000)})
+    assert n == 1
+    assert _the_nb(grown).arg.value == 100  # 1*2=2 jumps to lb
+
+
+def test_regrow_without_bounds_unchanged():
+    prog = _cap_loop(4)
+    grown, n = recovery.regrow_capacities(prog, 2)
+    assert n == 1 and _the_nb(grown).arg.value == 8

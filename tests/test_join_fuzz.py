@@ -215,6 +215,62 @@ def test_join_fuzz_verified():
         check.set_enabled(None)
 
 
+def test_join_fuzz_bounds_soundness():
+    """weldbound soundness profile: for every generated lazy case the
+    derived interval must contain the observed output size (stats AND
+    an independent re-analysis of the planned IR), and a statically
+    admitted plan must never trip the runtime memory limit — re-running
+    with ``memory_limit`` set to exactly the certificate's peak must
+    succeed, because the certificate mirrors the emitter's trace-time
+    charges term for term."""
+    from repro.core import runtime
+    from repro.core.analysis import bounds
+
+    rng = np.random.RandomState(424)
+    checked = admitted_checked = 0
+    for _ in range(15):
+        lcols, rcols, on, how, filtered = make_case(rng)
+        on_list = on if isinstance(on, list) else [on]
+        if how == "anti" \
+                and pd.DataFrame(rcols)[on_list].duplicated().any():
+            continue  # error-parity shape: covered elsewhere
+
+        def run(memory_limit=None):
+            t = weldrel.Table(lcols, eager=False)
+            r = weldrel.Table(rcols, eager=False)
+            q = weldrel.Query(t)
+            if filtered:
+                q = q.filter(t.col("lv") > 0.5)
+            st = {}
+            out = q.join(r, on=on, how=how, memory_limit=memory_limit,
+                         collect_stats=st)
+            n = np.asarray(weldrel._host(out.cols["k"])).size
+            return n, st
+
+        observed, st = run()
+        checked += 1
+        assert st["bounds.out_rows"] is not None, (how, filtered)
+        lo, hi = st["bounds.out_rows"]
+        assert lo <= observed, (how, filtered, lo, observed)
+        assert hi is None or observed <= hi, (how, filtered, observed, hi)
+        # independent re-derivation from the planned IR agrees
+        rep = bounds.analyze(st["plan.ir"])
+        lo2, hi2 = rep.result_rows(st["plan.inputs"][2])
+        assert lo2 <= observed, (how, filtered, lo2, observed)
+        assert hi2 is None or observed <= hi2
+        # admission exactness: limit == certificate peak must admit AND
+        # survive the emitter's own trace-time charging
+        peak = st["bounds.peak_bytes"]
+        if peak > 0:
+            runtime.clear_cache()
+            observed2, st2 = run(memory_limit=peak)
+            assert observed2 == observed
+            assert st2["bounds.admitted"] is True
+            admitted_checked += 1
+    assert checked >= 8  # the seed must exercise a real corpus
+    assert admitted_checked >= 1
+
+
 @given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1))
 @settings(max_examples=40, deadline=None, derandomize=True)
 def test_join_fuzz_hypothesis(seed):

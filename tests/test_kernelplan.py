@@ -643,7 +643,8 @@ def test_kernel_footprint_charged_to_memory_limit():
 # ---------------------------------------------------------------------------
 
 DOCUMENTED_STATS = ("loops.before", "loops.after", "kernelize.matched",
-                    "kernelplan", "compile_ms")
+                    "kernelplan", "compile_ms", "bounds.certificate",
+                    "bounds.peak_bytes", "bounds.admitted")
 
 
 def test_stats_namespaces_survive_cache_hit_and_miss():
@@ -681,6 +682,8 @@ def test_cached_stats_returned_as_copy_mutation_cannot_poison():
     st1["kernelplan"]["costs"].append({"kernel": "fake"})
     st1["loops.after"] = -1
     st1["kernelize.matched"] = 0
+    st1["bounds.admitted"] = False
+    st1["bounds.builders"].append("fake builder line")
     st2: dict = {}
     r2 = Evaluate(obj, kernelize=True, collect_stats=st2)
     assert r2.from_cache is True
@@ -689,3 +692,5 @@ def test_cached_stats_returned_as_copy_mutation_cannot_poison():
                for c in st2["kernelplan"]["costs"])
     assert st2["loops.after"] >= 0
     assert st2["kernelize.matched"] == 1
+    assert st2["bounds.admitted"] is True
+    assert "fake builder line" not in st2["bounds.builders"]

@@ -275,7 +275,24 @@ def test_quarantine_corrupt_file_degrades_to_empty(tmp_path, monkeypatch):
     with warnings.catch_warnings(record=True) as w:
         warnings.simplefilter("always")
         assert quarantine.entries() == {}
-    assert any("corrupt" in str(x.message) for x in w)
+    hits = [x for x in w if "corrupt" in str(x.message)]
+    assert hits, [str(x.message) for x in w]
+    # warning parity with the recovery ladder's other RuntimeWarnings:
+    # typed, names the offending path, carries the parser error, and
+    # tells the user the remedy
+    (warning,) = hits
+    assert issubclass(warning.category, RuntimeWarning)
+    msg = str(warning.message)
+    assert str(p) in msg
+    assert "Expecting" in msg or "not an object" in msg  # parser detail
+    assert "delete the file" in msg
+    # a non-dict JSON root takes the same degrade path
+    p.write_text("[1, 2, 3]")
+    monkeypatch.setattr(quarantine, "_health", None)
+    with warnings.catch_warnings(record=True) as w2:
+        warnings.simplefilter("always")
+        assert quarantine.entries() == {}
+    assert any("not an object" in str(x.message) for x in w2)
 
 
 def test_quarantine_io_fault_is_best_effort(tmp_path):

@@ -51,8 +51,24 @@ def dict_loop(cap=16):
                   ir.Merge(b, ir.MakeStruct((ir.Cast(e, wt.I64), e))))))
 
 
-def codes_of(e, env=None):
-    return sorted({d.code for d in check.verify(e, env=env)})
+def codes_of(e, env=None, **kw):
+    return sorted({d.code for d in check.verify(e, env=env, **kw)})
+
+
+def hinted_vec_loop(hint, n_elems=4):
+    """Map-style loop over a constant-length vector into a hinted
+    vecbuilder — the weldbound-derived row count is the constant
+    ``n_elems``, so the bounds lint can compare declared sizes without
+    any input shapes."""
+    vbt = wt.VecBuilder(wt.F64)
+    b, i, e = (ir.Ident("b", vbt), ir.Ident("i", wt.I64),
+               ir.Ident("e", wt.F64))
+    mv = ir.MakeVec(tuple(ir.Literal(float(k), wt.F64)
+                          for k in range(n_elems)), wt.F64)
+    return ir.Result(ir.For(
+        (ir.Iter(mv),),
+        ir.NewBuilder(vbt, size_hint=ir.Literal(hint, wt.I64)),
+        ir.Lambda((b, i, e), ir.Merge(b, e))))
 
 
 def corrupt_op(bty, op="-"):
@@ -146,6 +162,12 @@ def golden_cases():
         ir.Lambda((ir.Ident("b", wt.VecBuilder(wt.F64)), i, e),
                   ir.Merge(ir.Ident("b", wt.VecBuilder(wt.F64)), e))))
 
+    # weldbound contradictions: a 4-element map merges exactly 4 rows
+    yield "WV501", hinted_vec_loop(hint=2)       # provable truncation
+    yield "WV502", hinted_vec_loop(hint=500)     # provable waste
+    # certificate 8GB vs a 1KB limit (memory_limit via VERIFY_KW)
+    yield "WV503", hinted_vec_loop(hint=10 ** 9)
+
 
 def dict_mutant_capacity(cap):
     good = dict_loop()
@@ -154,11 +176,15 @@ def dict_mutant_capacity(cap):
         good, nb, replace(nb, arg=ir.Literal(cap, wt.I64)))
 
 
+#: extra verify() kwargs a golden case needs to be catchable
+VERIFY_KW = {"WV503": {"memory_limit": 1024}}
+
+
 @pytest.mark.parametrize("code,prog",
                          list(golden_cases()),
                          ids=[c for c, _ in golden_cases()])
 def test_golden_broken_program_caught(code, prog):
-    got = codes_of(prog)
+    got = codes_of(prog, **VERIFY_KW.get(code, {}))
     assert code in got, f"expected {code} ({CODES[code][0]}), got {got}"
 
 
@@ -216,11 +242,17 @@ def test_verify_rewrite_rejects_shrinking_regrow():
 
 
 def _captured_programs():
-    """Planned IR from real weldrel pipelines: a hash join, a group-by
-    aggregate, and an m:n join (GroupBuilder expansion)."""
+    """Planned IR (+ bound input shapes) from real weldrel pipelines: a
+    hash join, a group-by aggregate, and inner/left m:n joins
+    (GroupBuilder expansion — the left one carries the nonzero derived
+    lower bound the WV501 mutator targets)."""
     rng = np.random.RandomState(7)
     n = 64
-    progs = []
+    progs, shapes = [], []
+
+    def cap(st):
+        progs.append(st["plan.ir"])
+        shapes.append(st["plan.inputs"][2])
 
     left = weldrel.Table({"k": rng.randint(0, 8, n).astype(np.int64),
                           "lv": rng.rand(n)})
@@ -229,25 +261,31 @@ def _captured_programs():
     st = {}
     weldrel.Query(left).join(right1, on="k", how="inner",
                              collect_stats=st)
-    progs.append(st["plan.ir"])
+    cap(st)
 
     st = {}
     weldrel.Query(left).group_agg(
         [left.col("k")], {"s": (left.col("lv"), "+")}, collect_stats=st)
-    progs.append(st["plan.ir"])
+    cap(st)
 
     rightmn = weldrel.Table({"k": rng.randint(0, 4, 16).astype(np.int64),
                              "rv": rng.rand(16)})
     st = {}
     weldrel.Query(left).join(rightmn, on="k", how="inner",
                              collect_stats=st)
-    progs.append(st["plan.ir"])
-    return progs
+    cap(st)
+
+    st = {}
+    weldrel.Query(left).join(rightmn, on="k", how="left",
+                             collect_stats=st)
+    cap(st)
+    return progs, shapes
 
 
 def test_mutation_harness_recall():
-    progs = _captured_programs()
-    score = mutate.run_mutations(progs, seed=2026, rounds=3)
+    progs, shapes = _captured_programs()
+    score = mutate.run_mutations(progs, seed=2026, rounds=3,
+                                 shapes=shapes)
     assert score.applied >= 30
     assert score.rate >= 0.95, (
         f"verifier caught {score.caught}/{score.applied} mutants "
@@ -256,8 +294,10 @@ def test_mutation_harness_recall():
 
 
 def test_captured_corpus_verifies_clean():
-    for prog in _captured_programs():
-        assert codes_of(prog) == [], "planned pipeline IR must be clean"
+    progs, shapes = _captured_programs()
+    for prog, shp in zip(progs, shapes):
+        assert codes_of(prog, shapes=shp) == [], \
+            "planned pipeline IR must be clean (bounds lint included)"
 
 
 # ---------------------------------------------------------------------------

@@ -38,6 +38,13 @@ echo "== weldlint smoke (static verifier corpus + overhead gate) =="
 python tools/weldlint.py --smoke
 python tools/weldlint.py --mutate 3
 
+echo "== weldbound smoke (size/memory-bounds certificate gate) =="
+# asserts every corpus pipeline carries a peak-memory certificate in
+# its stats, gates the bounds-analysis overhead at <10% of compile
+# time, and prints the golden symbolic m:n certificate (an explain()
+# with precount=False — no host pre-count anywhere in the plan)
+python tools/weldlint.py --bounds-smoke
+
 echo "== kernelplan smoke ablation (cost-gate regression check) =="
 # asserts every auto-routed workload stays within tolerance of the jnp
 # baseline (and that the group-by route still wins), so a cost-gate

@@ -10,6 +10,10 @@ Modes:
 * ``--mutate N`` — run the seeded mutation harness N rounds per
   mutator over the same corpus and report verifier recall (gated at
   >=95%);
+* ``--bounds-smoke`` — the weldbound gate: every corpus pipeline must
+  carry a peak-memory certificate in its stats, the analysis overhead
+  must stay <10% of compile time, and the symbolic (no host pre-count)
+  m:n certificate must render in ``explain()``;
 * ``--demo`` — print a diagnostic rendered on a deliberately broken
   program (what a failing checkpoint looks like).
 
@@ -63,6 +67,9 @@ def corpus():
     weldrel.Query(left).join(uniq, on="k", how="left", collect_stats=st)
     out.append(("join.left", st))
     st = {}
+    weldrel.Query(left).join(mn, on="k", how="left", collect_stats=st)
+    out.append(("join.left.m:n", st))
+    st = {}
     weldrel.Query(left).group_agg(
         [left.col("k")], {"s": (left.col("lv"), "+")}, collect_stats=st)
     out.append(("group_agg.sum", st))
@@ -111,8 +118,14 @@ def cmd_smoke() -> int:
 
 def cmd_mutate(rounds: int, seed: int) -> int:
     print(f"== weldlint --mutate (rounds={rounds}, seed={seed}) ==")
-    progs = [st["plan.ir"] for _, st in corpus() if "plan.ir" in st]
-    score = mutate.run_mutations(progs, seed=seed, rounds=rounds)
+    caught = [st for _, st in corpus() if "plan.ir" in st]
+    progs = [st["plan.ir"] for st in caught]
+    # bound input shapes per program: the WV501/WV502 bounds mutators
+    # are only catchable when derived symbolic sizes evaluate to numbers
+    shapes = [st.get("plan.inputs", (None, None, None))[2]
+              for st in caught]
+    score = mutate.run_mutations(progs, seed=seed, rounds=rounds,
+                                 shapes=shapes)
     print(f"  mutants applied: {score.applied}")
     print(f"  caught (right code, right node): {score.caught} "
           f"({score.rate:.0%})")
@@ -122,6 +135,62 @@ def cmd_mutate(rounds: int, seed: int) -> int:
         print(f"FAIL: recall {score.rate:.0%} < {RECALL_GATE:.0%}")
         return 1
     print(f"OK: recall {score.rate:.0%} >= {RECALL_GATE:.0%}")
+    return 0
+
+
+def cmd_bounds_smoke() -> int:
+    """weldbound gate: every corpus pipeline gets a peak-memory
+    certificate, analysis overhead stays <10% of compile time, and the
+    symbolic m:n certificate (no host pre-count) renders in explain()."""
+    from repro.core import runtime
+
+    runtime.clear_cache()
+    print("== weldlint --bounds-smoke ==")
+    total_bounds = 0.0
+    total_compile = 0.0
+    for label, st in corpus():
+        for key in ("bounds.certificate", "bounds.peak_bytes",
+                    "bounds.admitted"):
+            if key not in st:
+                print(f"FAIL {label}: no {key} in stats (analysis "
+                      f"failed or was skipped)")
+                return 1
+        if not st["bounds.admitted"]:
+            print(f"FAIL {label}: rejected with no memory_limit set")
+            return 1
+        bms = st.get("bounds.ms", 0.0)
+        cms = st.get("compile_ms", 0.0)
+        total_bounds += bms
+        total_compile += cms
+        print(f"  {label:<18} peak={st['bounds.peak_bytes']:>12} "
+              f"bounds={bms:6.2f}ms compile={cms:8.1f}ms  "
+              f"cert: {st['bounds.certificate'][:60]}")
+    frac = total_bounds / total_compile if total_compile else 0.0
+    if frac >= OVERHEAD_GATE:
+        print(f"FAIL: bounds-analysis overhead {frac:.1%} >= "
+              f"{OVERHEAD_GATE:.0%} of compile time")
+        return 1
+    # golden: the symbolic certificate of an m:n join with NO host
+    # pre-count must render in explain() in terms of the input lengths
+    rng = np.random.RandomState(7)
+    left = weldrel.Table({"k": rng.randint(0, 16, 256).astype(np.int64),
+                          "lv": rng.rand(256)})
+    mn = weldrel.Table({"k": rng.randint(0, 16, 64).astype(np.int64),
+                        "rv": rng.rand(64)})
+    rep = weldrel.Query(left).explain().join(mn, on="k", how="left",
+                                             precount=False)
+    txt = rep.render()
+    if "-- bounds --" not in txt or "len(" not in txt:
+        print("FAIL: precount=False explain() lacks a symbolic "
+              "'-- bounds --' certificate:")
+        print(txt)
+        return 1
+    i = txt.index("-- bounds --")
+    print("  golden symbolic m:n certificate (precount=False):")
+    for line in txt[i:].splitlines()[:4]:
+        print("  " + line)
+    print(f"OK: certificates on corpus, overhead {frac:.1%} < "
+          f"{OVERHEAD_GATE:.0%}, symbolic certificate renders")
     return 0
 
 
@@ -151,6 +220,9 @@ def main(argv=None) -> int:
     ap.add_argument("--mutate", type=int, metavar="N", default=None,
                     help="mutation harness, N rounds per mutator")
     ap.add_argument("--seed", type=int, default=2026)
+    ap.add_argument("--bounds-smoke", action="store_true",
+                    help="weldbound gate: certificates + overhead < 10%%"
+                         " + symbolic m:n golden")
     ap.add_argument("--demo", action="store_true",
                     help="show a rendered diagnostic")
     args = ap.parse_args(argv)
@@ -158,6 +230,8 @@ def main(argv=None) -> int:
         return cmd_smoke()
     if args.mutate is not None:
         return cmd_mutate(args.mutate, args.seed)
+    if args.bounds_smoke:
+        return cmd_bounds_smoke()
     if args.demo:
         return cmd_demo()
     ap.print_help()
