@@ -86,12 +86,12 @@ def __getattr__(name: str):  # PEP 562 lazy re-exports
         from . import autotune
 
         return getattr(autotune, name)
-    if name == "quarantine":
+    if name in ("quarantine", "calibrate"):
         # importlib (not ``from . import``) — the fromlist lookup would
         # re-enter this __getattr__ before the submodule is bound
         import importlib
 
-        return importlib.import_module(".quarantine", __name__)
+        return importlib.import_module(f".{name}", __name__)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
@@ -113,4 +113,5 @@ __all__ = [
     "KERNELIZE_MODES",
     "DEFAULT_KERNELIZE",
     "quarantine",
+    "calibrate",
 ]

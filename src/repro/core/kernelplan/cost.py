@@ -39,7 +39,7 @@ take (the jnp lowering is always correct).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from math import ceil, log2
 from typing import Optional
 
@@ -89,6 +89,10 @@ class CostEstimate:
     jnp_s: float
     routed: bool
     why: str
+    #: where the kernel-side figure came from: "roofline" (analytic
+    #: constants) or "measured" (cost-ledger median via kernelplan
+    #: calibration).
+    source: str = "roofline"
 
     def as_stats(self) -> dict:
         return {
@@ -96,6 +100,7 @@ class CostEstimate:
             "jnp_us": round(self.jnp_s * 1e6, 3),
             "routed": self.routed,
             "why": self.why,
+            "source": self.source,
         }
 
 
@@ -338,10 +343,44 @@ def cost_map_chain(meta: dict) -> CostEstimate:
     return _decide(kernel_s, jnp_s, f"n={n} cols={cols} ops={ops}")
 
 
+def _calibrated(spec, meta: dict, est: CostEstimate) -> CostEstimate:
+    """Overlay the cost ledger's measured median over the roofline
+    kernel-side estimate (see :mod:`.calibrate`).  The gate re-decides
+    routing from the measured figure; ``why`` gains ``source=measured``
+    vs ``source=roofline`` so ``Query.explain()`` shows which world the
+    decision came from.  Best-effort: any calibration failure leaves the
+    roofline estimate untouched."""
+    kernel = meta.get("kernel") or getattr(spec, "name", None)
+    dtype = meta.get("dtype")
+    n = meta.get("n")
+    hit = None
+    try:
+        if kernel and dtype is not None and n:
+            from . import calibrate
+
+            hit = calibrate.measured_ns(str(kernel), str(dtype), int(n))
+    except Exception:
+        hit = None
+    if hit is None:
+        if " source=" in est.why:
+            return est
+        return replace(est, why=f"{est.why} source=roofline")
+    med_ns, calls = hit
+    kernel_s = med_ns / 1e9
+    routed = kernel_s <= est.jnp_s * (1.0 + ROUTE_MARGIN)
+    return CostEstimate(
+        kernel_s, est.jnp_s, routed,
+        f"{est.why} source=measured calls={calls} "
+        f"median={med_ns / 1e3:.1f}us",
+        source="measured",
+    )
+
+
 def estimate(spec, meta: dict) -> CostEstimate:
-    """Price one candidate through the spec's cost hook.  Specs without
-    a hook route unconditionally (the pre-cost-model behavior)."""
+    """Price one candidate through the spec's cost hook, then overlay
+    any ledger-measured median (:func:`_calibrated`).  Specs without a
+    hook route unconditionally (the pre-cost-model behavior)."""
     hook = getattr(spec, "cost", None)
     if hook is None:
         return CostEstimate(0.0, 0.0, True, "no cost hook: always route")
-    return hook(meta)
+    return _calibrated(spec, meta, hook(meta))

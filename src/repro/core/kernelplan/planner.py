@@ -1057,6 +1057,16 @@ def _call_meta(kc: ir.KernelCall, dense: Shapes,
         blk = _min_block(spec, "block")
         if blk:
             meta["block"] = blk
+    # the call's ledger/calibration identity — the same dtype formula the
+    # measured-replay recorder uses, so cost.estimate can match medians
+    try:
+        import numpy as _np
+
+        from .autotune import _np_dtype_of
+
+        meta["dtype"] = str(_np.dtype(_np_dtype_of(kc.ret_ty)))
+    except Exception:
+        pass
     return meta
 
 

@@ -9,7 +9,6 @@ application's in-memory data (zero-copy for numpy/jax arrays).
 from __future__ import annotations
 
 import itertools
-import threading
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
@@ -280,9 +279,6 @@ def build_program(root: WeldObject) -> Program:
 # Evaluate
 # ---------------------------------------------------------------------------
 
-_eval_lock = threading.Lock()
-
-
 def Evaluate(
     o: WeldObject,
     memory_limit: Optional[int] = None,
@@ -307,18 +303,21 @@ def Evaluate(
     """
     from .runtime import compile_and_run  # local import: runtime needs jax
 
-    with _eval_lock:
-        prog = build_program(o)
-        t0 = time.perf_counter()
-        value, compile_ms, from_cache, stats = compile_and_run(
-            prog,
-            optimize=optimize,
-            memory_limit=memory_limit,
-            passes=passes,
-            kernelize=kernelize,
-            kernel_impl=kernel_impl,
-        )
-        run_ms = (time.perf_counter() - t0) * 1e3 - compile_ms
+    # no global lock here: the runtime's compile cache is single-flight
+    # (one thread compiles a key, peers wait) and compiles serialize on
+    # the runtime's compile lock — concurrent Evaluates of already-
+    # compiled programs execute in parallel
+    prog = build_program(o)
+    t0 = time.perf_counter()
+    value, compile_ms, from_cache, stats = compile_and_run(
+        prog,
+        optimize=optimize,
+        memory_limit=memory_limit,
+        passes=passes,
+        kernelize=kernelize,
+        kernel_impl=kernel_impl,
+    )
+    run_ms = (time.perf_counter() - t0) * 1e3 - compile_ms
     if collect_stats is not None:
         collect_stats.update(stats)
     native = o.encoder.decode(value, prog.out_ty)

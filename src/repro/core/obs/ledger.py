@@ -24,6 +24,7 @@ import json
 import math
 import os
 import time
+import warnings
 from typing import Any, Dict, List, Optional
 
 __all__ = [
@@ -46,7 +47,9 @@ def ledger_path() -> str:
     # default: sit next to the autotune cache so both calibration
     # artifacts live (and get wiped) together
     at = os.environ.get(_ENV_AUTOTUNE_CACHE)
-    base = os.path.dirname(at) if at else os.path.join(
+    # abspath first: a bare-filename WELD_AUTOTUNE_CACHE has dirname ""
+    # which would silently drop the ledger into whatever cwd is
+    base = os.path.dirname(os.path.abspath(at)) if at else os.path.join(
         os.path.expanduser("~"), ".cache", "weld-repro"
     )
     return os.path.join(base, "cost_ledger.jsonl")
@@ -95,24 +98,44 @@ def record(kernel: str, dtype: str, n: int, predicted_ns: Optional[int],
 
 
 def read(path: Optional[str] = None) -> List[dict]:
-    """Load all records, silently skipping corrupt lines (a crashed
-    writer can leave a truncated tail)."""
+    """Load all records, skipping corrupt lines (a crashed writer can
+    leave a truncated tail — a torn write must never crash the reader).
+
+    Malformed lines raise ONE RuntimeWarning naming the file and the
+    first bad line number (mirroring the autotune corrupt-cache idiom)
+    so the torn tail is visible instead of silently shrinking the
+    calibration dataset."""
     p = path or ledger_path()
     out: List[dict] = []
+    bad = 0
+    first_bad = None
+    first_err = None
     try:
         with open(p) as f:
-            for line in f:
+            for lineno, line in enumerate(f, start=1):
                 line = line.strip()
                 if not line:
                     continue
                 try:
                     rec = json.loads(line)
-                except ValueError:
+                except ValueError as e:
+                    bad += 1
+                    if first_bad is None:
+                        first_bad, first_err = lineno, e
                     continue
                 if isinstance(rec, dict) and "kernel" in rec:
                     out.append(rec)
     except OSError:
         pass
+    if bad:
+        warnings.warn(
+            f"cost ledger {p} has {bad} malformed line"
+            f"{'s' if bad != 1 else ''} (first at line {first_bad}: "
+            f"{first_err}); skipping them — likely a writer killed "
+            "mid-append; truncate or delete the file to silence this "
+            "warning",
+            RuntimeWarning, stacklevel=2,
+        )
     return out
 
 

@@ -1,14 +1,38 @@
-"""Evaluation driver: optimize → lower → jit → execute → decode.
+"""Evaluation driver: lower → optimize → compile → execute → decode.
 
 One `Evaluate` call == one fused XLA executable (the paper's evaluation
 point).  Compiled programs are cached by alpha-invariant structure +
 input signature, mirroring the paper's §7.8 observation that compile cost
 amortizes across repeated evaluations.
+
+The pipeline is split into explicit AOT stages (JaCe's
+``Wrapped/Lowered/Compiled`` staging is the exemplar) so a serving tier
+can hold a compiled plan and re-bind same-shape inputs without paying a
+recompile:
+
+* :func:`lower` → :class:`LoweredProgram` — inputs encoded, the
+  compile-cache key formed (nothing optimized yet);
+* ``LoweredProgram.optimize()`` → :class:`OptimizedProgram` — optimizer
+  passes, kernel planning, autotuning, weldbound admission;
+* ``OptimizedProgram.compile()`` / ``LoweredProgram.compile()`` /
+  :func:`compile_program` → :class:`CompiledProgram` — the reusable AOT
+  handle with ``.stats`` and ``.run(arrays)``.
+
+The compile cache is a bounded, locked, single-flight LRU
+(``$WELD_COMPILE_CACHE_MAX``, default 256): one thread compiles a given
+key while peers wait on the in-flight slot, eviction is
+least-recently-used, and hit/miss/evict/wait counters surface in every
+result's ``stats["cache.*"]``.  ``compile_and_run`` (what `Evaluate`
+calls, under the recovery ladder) drives the same stages end-to-end.
 """
 from __future__ import annotations
 
+import os
+import threading
 import time
-from typing import Dict, Optional, Tuple
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
 
 import jax
 
@@ -31,7 +55,123 @@ from .errors import CapacityError, ResourceError  # noqa: E402
 from .lazy import Program  # noqa: E402
 from .passes import loop_count, optimize as run_passes  # noqa: E402
 
-_compile_cache: Dict[str, Tuple[object, dict]] = {}
+ENV_CACHE_MAX = "WELD_COMPILE_CACHE_MAX"
+DEFAULT_CACHE_MAX = 256
+
+#: Serializes the optimize→plan→autotune→trace compile body.  The
+#: optimizer, planner, autotune cache and jax tracing all touch
+#: process-global state; executions of already-compiled programs run
+#: WITHOUT this lock, so concurrent serving only serializes on compiles.
+_compile_lock = threading.RLock()
+
+
+def cache_max() -> int:
+    """Bound on cached executables (``$WELD_COMPILE_CACHE_MAX``, ≥1)."""
+    try:
+        return max(1, int(os.environ.get(ENV_CACHE_MAX, DEFAULT_CACHE_MAX)))
+    except ValueError:
+        return DEFAULT_CACHE_MAX
+
+
+class _Flight:
+    """In-flight compile slot: the leader resolves it, waiters block on
+    the event and take the entry from the flight itself (NOT a cache
+    lookup — the entry may have been filed under a refreshed-fingerprint
+    key, or already evicted under pressure)."""
+
+    __slots__ = ("event", "entry", "error")
+
+    def __init__(self) -> None:
+        self.event = threading.Event()
+        self.entry: Optional[Tuple[object, dict]] = None
+        self.error: Optional[BaseException] = None
+
+
+class _CompileCache:
+    """Bounded, locked, single-flight LRU of compiled executables."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._entries: "OrderedDict[str, Tuple[object, dict]]" = OrderedDict()
+        self._flights: Dict[str, _Flight] = {}
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.waits = 0
+
+    def lookup_or_begin(self, key: str):
+        """('hit', entry) | ('wait', flight) | ('lead', flight)."""
+        with self._lock:
+            ent = self._entries.get(key)
+            if ent is not None:
+                self._entries.move_to_end(key)
+                self.hits += 1
+                return "hit", ent
+            fl = self._flights.get(key)
+            if fl is not None:
+                self.waits += 1
+                return "wait", fl
+            fl = _Flight()
+            self._flights[key] = fl
+            self.misses += 1
+            return "lead", fl
+
+    def fill(self, key: str, entry: Tuple[object, dict],
+             store_key: Optional[str] = None) -> None:
+        """Store the compiled entry and resolve any waiters.
+
+        The entry is stored ONLY under ``store_key`` (defaults to
+        ``key``).  When first-encounter tuning refreshed the autotune
+        fingerprint mid-compile, ``store_key`` is the refreshed key and
+        the pre-tuning ``key`` is deliberately NOT filed: its fingerprint
+        can never match a future lookup, so filing it would leak one
+        forever-unreachable entry per first-encounter tuning."""
+        store = store_key if store_key is not None else key
+        with self._lock:
+            self._entries[store] = entry
+            self._entries.move_to_end(store)
+            limit = cache_max()
+            while len(self._entries) > limit:
+                self._entries.popitem(last=False)
+                self.evictions += 1
+            fl = self._flights.pop(key, None)
+        if fl is not None:
+            fl.entry = entry
+            fl.event.set()
+
+    def abandon(self, key: str, error: BaseException) -> None:
+        """Leader failed: release the flight so waiters can retry (and
+        surface the same typed error if they fail the same way)."""
+        with self._lock:
+            fl = self._flights.pop(key, None)
+        if fl is not None:
+            fl.error = error
+            fl.event.set()
+
+    def clear(self) -> None:
+        # in-flight compiles are left to resolve their own flights; only
+        # the stored entries and the counters reset
+        with self._lock:
+            self._entries.clear()
+            self.hits = self.misses = self.evictions = self.waits = 0
+
+    def size(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def counters(self) -> dict:
+        with self._lock:
+            return {
+                "cache.hits": self.hits,
+                "cache.misses": self.misses,
+                "cache.evictions": self.evictions,
+                "cache.waits": self.waits,
+                "cache.size": len(self._entries),
+                "cache.max": cache_max(),
+            }
+
+
+_cache = _CompileCache()
 
 
 def _copy_stats(v):
@@ -48,11 +188,414 @@ def _copy_stats(v):
 
 
 def clear_cache() -> None:
-    _compile_cache.clear()
+    _cache.clear()
 
 
 def cache_size() -> int:
-    return len(_compile_cache)
+    return _cache.size()
+
+
+def cache_stats() -> dict:
+    """Global ``cache.*`` counters (also injected into every result's
+    stats): hits, misses, evictions, single-flight waits, size, max."""
+    return _cache.counters()
+
+
+def _export_stats(stats: dict, from_cache: bool) -> dict:
+    out = _copy_stats(stats)
+    out.update(_cache.counters())
+    out["cache.hit"] = from_cache
+    return out
+
+
+# ---------------------------------------------------------------------------
+# staged AOT pipeline
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class LoweredProgram:
+    """Stage 1: inputs encoded, compile-cache key formed.
+
+    ``opt``/``memory_limit``/``passes``/``mode``/``kernel_impl`` are the
+    resolved compile options; ``arrays`` are the encoded (device-ready)
+    inputs in ``input_names`` order — the positional binding every
+    same-key execution re-binds against."""
+
+    prog: Program
+    opt: bool
+    memory_limit: Optional[int]
+    passes: Optional[tuple]
+    mode: str
+    kernel_impl: Optional[str]
+    input_names: List[str] = field(default_factory=list)
+    arrays: list = field(default_factory=list)
+    shapes: Dict[str, tuple] = field(default_factory=dict)
+    types: Dict[str, wt.WeldType] = field(default_factory=dict)
+    sig: str = ""
+    kreg: str = ""
+    key: str = ""
+
+    @property
+    def kernelize_on(self) -> bool:
+        return self.mode != "off"
+
+    def refresh_kreg(self) -> str:
+        return _kreg_fingerprint() if self.kernelize_on else ""
+
+    def cache_key(self, kreg_now: Optional[str] = None) -> str:
+        # positional input aliasing: rebuilt workflows (fresh obj ids)
+        # share one compiled executable as long as structure matches.
+        # Armed faults join the key too (empty when none — the common
+        # path): an injected fault must never be defeated by a cached
+        # executable, and a consumed fault must never serve the poisoned
+        # executable it produced
+        name_map = {n: f"in{i}" for i, n in enumerate(self.input_names)}
+        kreg_now = self.kreg if kreg_now is None else kreg_now
+        return (
+            ir.canon_key(self.prog.expr, name_map)
+            + f"|opt={self.opt}|mem={self.memory_limit}|passes={self.passes}"
+            + f"|kz={self.mode}|kimpl={self.kernel_impl}|kreg={kreg_now}"
+            + f"|flt={faults.fingerprint()}|{self.sig}"
+        )
+
+    def optimize(self) -> "OptimizedProgram":
+        """Stage 2: optimizer passes + kernel planning + autotuning +
+        weldbound admission.  Uncached — callers wanting the shared
+        cache go through :meth:`compile` / :func:`compile_program`."""
+        with _compile_lock:
+            return _optimize_stage(self)
+
+    def compile(self) -> "CompiledProgram":
+        """Stages 2+3 through the shared single-flight cache."""
+        jitted, stats, from_cache = _compile_handle(self)
+        return CompiledProgram(self, jitted, stats, from_cache)
+
+
+def _kreg_fingerprint() -> str:
+    from .kernelplan import autotune, fingerprint, quarantine
+
+    return (fingerprint() + "/" + autotune.fingerprint()
+            + "/" + quarantine.fingerprint())
+
+
+def lower(
+    prog: Program,
+    optimize: bool = True,
+    memory_limit: Optional[int] = None,
+    passes=None,
+    kernelize=None,
+    kernel_impl: Optional[str] = None,
+) -> LoweredProgram:
+    """Public stage-1 entry: resolve options, encode inputs, form the key."""
+    from .kernelplan import normalize_kernelize
+
+    mode = normalize_kernelize(kernelize)
+    if mode != "off" and kernel_impl is None:
+        # resolve the kernel library's default NOW so it lands in the
+        # compile-cache key — kops promises set_default_impl() always
+        # takes effect, which a cached executable would otherwise defeat
+        from ..kernels import ops as _kops
+
+        kernel_impl = _kops.DEFAULT_IMPL
+    return _lower(prog, optimize, memory_limit, passes, mode, kernel_impl)
+
+
+def _lower(prog, optimize, memory_limit, passes, mode,
+           kernel_impl) -> LoweredProgram:
+    low = LoweredProgram(prog=prog, opt=optimize, memory_limit=memory_limit,
+                         passes=passes, mode=mode, kernel_impl=kernel_impl)
+    low.input_names = sorted(prog.inputs)
+    with obs.span("encode", inputs=len(low.input_names)):
+        for name in low.input_names:
+            ty, enc, data = prog.inputs[name]
+            arr = jnp.asarray(enc.encode(data))
+            low.arrays.append(arr)
+            low.shapes[name] = tuple(arr.shape)
+            low.types[name] = ty
+    low.sig = ",".join(f"{a.dtype}:{a.shape}" for a in low.arrays)
+    if low.kernelize_on:
+        # register/unregister, new tunings AND quarantine changes must
+        # invalidate the cache: a stale executable must never serve a
+        # newly tuned plan or a newly quarantined kernel route
+        low.kreg = _kreg_fingerprint()
+    low.key = low.cache_key()
+    return low
+
+
+@dataclass
+class OptimizedProgram:
+    """Stage 2 result: the planned IR + stats, ready to jit."""
+
+    lowered: LoweredProgram
+    expr: ir.Expr
+    stats: dict
+    optimize_ms: float = 0.0
+
+    def compile(self) -> "CompiledProgram":
+        """Stage 3: emit + jit + AOT-compile, then file the executable in
+        the shared cache (under the refreshed autotune-fingerprint key
+        when first-encounter tuning bumped it — the stale pre-tuning key
+        is never stored, so it cannot leak)."""
+        low = self.lowered
+        with _compile_lock:
+            jitted = _jit_stage(low, self.expr, self.stats,
+                                self.optimize_ms)
+        store_key = low.key
+        if low.kernelize_on:
+            kreg_now = low.refresh_kreg()
+            if kreg_now != low.kreg:
+                store_key = low.cache_key(kreg_now)
+        _cache.fill(low.key, (jitted, self.stats), store_key=store_key)
+        return CompiledProgram(low, jitted, self.stats, from_cache=False)
+
+
+def _optimize_stage(low: LoweredProgram) -> OptimizedProgram:
+    t0 = time.perf_counter()
+    expr = low.prog.expr
+    stats: dict = {}
+    stats["loops.before"] = loop_count(expr)
+    # verify the frontend's program before any rewrite touches it: a
+    # pre-existing violation must be blamed on the input, not on
+    # whichever pass happens to run first
+    check.checkpoint("input", expr, env=low.types, stats=stats,
+                     shapes=low.shapes)
+    if low.opt:
+        with obs.span("optimize") as sp:
+            expr = run_passes(expr, passes=low.passes, stats=stats,
+                              input_shapes=low.shapes)
+            sp.set("iterations", stats.get("iterations"))
+    stats["loops.after"] = loop_count(expr)
+    if low.kernelize_on:
+        from .kernelplan import autotune, plan_kernels
+
+        with obs.span("kernelplan", mode=low.mode) as sp:
+            expr = plan_kernels(expr, input_shapes=low.shapes, stats=stats,
+                                mode=low.mode, impl=low.kernel_impl)
+            sp.set("matched", stats.get("kernelize.matched", 0))
+        if stats.get("kernelize.matched"):
+            with obs.span("autotune"):
+                expr = autotune.tune_plan(expr, impl=low.kernel_impl,
+                                          stats=stats)
+            check.checkpoint("autotune", expr, stats=stats,
+                             shapes=low.shapes)
+    # the planned IR is part of the stats so explain()/the measured
+    # replay can reach the program that actually ran (cache hits
+    # included — the expr rides along in the cached stats entry).
+    # plan.inputs pins the COMPILE-time input binding: a later hit
+    # from a rebuilt workflow has fresh obj ids, but its arrays map
+    # positionally onto these names (the cache key aliases inputs
+    # positionally), so the replay re-binds them the same way
+    stats["plan.ir"] = expr
+    stats["plan.inputs"] = (list(low.input_names), dict(low.types),
+                            dict(low.shapes))
+    _admit(low, expr, stats)
+    return OptimizedProgram(lowered=low, expr=expr, stats=stats,
+                            optimize_ms=(time.perf_counter() - t0) * 1e3)
+
+
+def _admit(low: LoweredProgram, expr: ir.Expr, stats: dict) -> None:
+    """Weldbound admission: evaluate the plan's symbolic peak-memory
+    certificate against the bound inputs and reject BEFORE tracing — a
+    rejected plan costs zero kernel launches and is never cached.
+    Analysis OR certificate-evaluation failures only disable admission
+    (the emitter's own trace-time charging still guards execution)."""
+    if not _bounds.enabled():
+        return
+    tb0 = time.perf_counter()
+    admitted = True
+    brep = None
+    with obs.span("bounds") as sp:
+        try:
+            brep = _bounds.analyze(expr)
+        except Exception:
+            brep = None
+        if brep is not None:
+            try:
+                peak = brep.peak(low.shapes)
+                certificate = brep.certificate()
+                builders = brep.builder_lines(low.shapes)
+                out_rows = brep.result_rows(low.shapes)
+            except Exception as e:
+                # the certificate itself failed to evaluate at these
+                # shapes — same contract as an analysis failure: degrade
+                # to trace-time charging, never kill the compile
+                brep = None
+                stats.pop("bounds.certificate", None)
+                stats["bounds.degraded"] = f"{type(e).__name__}: {e}"
+                sp.set("degraded", stats["bounds.degraded"])
+        if brep is not None:
+            admitted = (low.memory_limit is None
+                        or peak <= int(low.memory_limit))
+            stats["bounds.certificate"] = certificate
+            stats["bounds.peak_bytes"] = peak
+            stats["bounds.builders"] = builders
+            stats["bounds.out_rows"] = out_rows
+            stats["bounds.admitted"] = admitted
+            sp.set("peak_bytes", peak)
+            sp.set("admitted", admitted)
+    stats["bounds.ms"] = round((time.perf_counter() - tb0) * 1e3, 3)
+    if brep is not None and not admitted:
+        raise ResourceError(
+            f"plan rejected at admission: peak-memory certificate "
+            f"{stats['bounds.certificate']} = "
+            f"{stats['bounds.peak_bytes']} bytes exceeds "
+            f"memory_limit={int(low.memory_limit)} (builder size "
+            f"hints + kernel scratch footprints provably do not "
+            f"fit; nothing was traced or launched)")
+
+
+def _jit_stage(low: LoweredProgram, expr: ir.Expr, stats: dict,
+               optimize_ms: float) -> object:
+    t0 = time.perf_counter()
+    with obs.span("jit_compile"):
+        fn = emit_program(expr, low.input_names, low.types, low.shapes,
+                          low.memory_limit, kernel_impl=low.kernel_impl)
+        jitted = jax.jit(fn)
+        # trigger tracing+compilation now so compile_ms is honest
+        _ = jitted.lower(*low.arrays).compile()
+    stats["compile_ms"] = optimize_ms + (time.perf_counter() - t0) * 1e3
+    return jitted
+
+
+def _compile_handle(low: LoweredProgram) -> Tuple[object, dict, bool]:
+    """The cached, single-flight compile driver: one thread compiles a
+    key, peers wait on the flight and receive the entry from it."""
+    while True:
+        with obs.span("cache.lookup") as sp:
+            kind, payload = _cache.lookup_or_begin(low.key)
+            sp.set("hit", kind == "hit")
+        if kind == "hit":
+            jitted, stats = payload
+            return jitted, stats, True
+        if kind == "wait":
+            with obs.span("cache.wait"):
+                payload.event.wait()
+            if payload.entry is not None:
+                jitted, stats = payload.entry
+                return jitted, stats, True
+            # leader failed: loop — this thread may become the next
+            # leader and surface the same typed error itself
+            continue
+        try:
+            opt = low.optimize()
+            handle = opt.compile()  # fills the cache + resolves the flight
+        except BaseException as e:
+            _cache.abandon(low.key, e)
+            raise
+        return handle._jitted, handle._cached_stats, False
+
+
+class CompiledProgram:
+    """Stage-3 AOT handle: one compiled (plan, shape-signature)
+    executable plus its compile-time stats.  ``run()`` re-binds
+    same-shape inputs with zero recompiles; data-dependent capacity
+    poison at decode still climbs the full recovery ladder."""
+
+    def __init__(self, lowered: LoweredProgram, jitted, stats: dict,
+                 from_cache: bool) -> None:
+        self._low = lowered
+        self._jitted = jitted
+        self._cached_stats = stats
+        self.from_cache = from_cache
+
+    @property
+    def key(self) -> str:
+        return self._low.key
+
+    @property
+    def out_ty(self) -> wt.WeldType:
+        return self._low.prog.out_ty
+
+    @property
+    def stats(self) -> dict:
+        return _export_stats(self._cached_stats, self.from_cache)
+
+    def signature(self) -> str:
+        """dtype:shape signature the executable was compiled against."""
+        return self._low.sig
+
+    def run(self, arrays=None, *, recover: bool = True):
+        """Execute against ``arrays`` (encoded, positional; None = the
+        inputs the handle was lowered with) and decode the result.
+
+        Same shapes+dtypes are the caller's contract (checked against
+        the compiled signature).  On capacity poison — re-bound data
+        overflowing the plan's baked builder capacities — the full
+        recovery ladder re-runs the program with regrown capacities."""
+        low = self._low
+        if arrays is None:
+            arrays = low.arrays
+        else:
+            arrays = [jnp.asarray(a) for a in arrays]
+            sig = ",".join(f"{a.dtype}:{a.shape}" for a in arrays)
+            if sig != low.sig:
+                raise ValueError(
+                    f"CompiledProgram.run: bound inputs {sig} do not "
+                    f"match the compiled signature {low.sig}; re-lower "
+                    "and compile for new shapes/dtypes")
+        stats = self._cached_stats
+        with obs.span("weld.run", from_cache=self.from_cache):
+            with obs.span("execute"):
+                out = self._jitted(*arrays)
+                out = jax.block_until_ready(out)
+            if (obs.enabled() and stats.get("kernelize.matched")
+                    and stats.get("plan.ir") is not None
+                    and stats.get("plan.inputs") is not None):
+                pnames, ptypes, pshapes = stats["plan.inputs"]
+                _measured_replay(stats["plan.ir"], pnames, ptypes, pshapes,
+                                 low.memory_limit, low.kernel_impl, arrays)
+            with obs.span("decode"):
+                try:
+                    faults.maybe_raise("decode")
+                    if faults.poisoned("decode"):
+                        raise CapacityError(
+                            "fault injected at decode: result poisoned")
+                    return decode_value(out, low.prog.out_ty)
+                except CapacityError:
+                    from . import recovery
+
+                    if not recover or not recovery.enabled():
+                        raise
+        # capacity poison under recovery: rebuild a Program bound to
+        # THESE arrays and climb the full ladder (regrow → fallback)
+        prog2 = Program(
+            expr=low.prog.expr,
+            inputs={name: (low.types[name], low.prog.inputs[name][1],
+                           arrays[i])
+                    for i, name in enumerate(low.input_names)},
+            out_ty=low.prog.out_ty,
+        )
+        value, _, _, _ = compile_and_run(
+            prog2, optimize=low.opt, memory_limit=low.memory_limit,
+            passes=low.passes, kernelize=low.mode,
+            kernel_impl=low.kernel_impl)
+        return value
+
+
+def compile_program(
+    prog: Program,
+    optimize: bool = True,
+    memory_limit: Optional[int] = None,
+    passes=None,
+    kernelize=None,
+    kernel_impl: Optional[str] = None,
+) -> CompiledProgram:
+    """AOT entry: lower → (cached, single-flight) optimize + compile.
+    Nothing is executed; the returned handle's ``run()`` re-binds
+    same-shape inputs against the cached executable."""
+    low = lower(prog, optimize=optimize, memory_limit=memory_limit,
+                passes=passes, kernelize=kernelize, kernel_impl=kernel_impl)
+    with obs.span("weld.compile", kernelize=low.mode,
+                  impl=low.kernel_impl) as sp:
+        jitted, stats, from_cache = _compile_handle(low)
+        sp.set("from_cache", from_cache)
+    return CompiledProgram(low, jitted, stats, from_cache)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end driver (Evaluate path)
+# ---------------------------------------------------------------------------
 
 
 def compile_and_run(
@@ -82,9 +625,6 @@ def compile_and_run(
     mode = normalize_kernelize(kernelize)
     kernelize_on = mode != "off"
     if kernelize_on and kernel_impl is None:
-        # resolve the kernel library's default NOW so it lands in the
-        # compile-cache key — kops promises set_default_impl() always
-        # takes effect, which a cached executable would otherwise defeat
         from ..kernels import ops as _kops
 
         kernel_impl = _kops.DEFAULT_IMPL
@@ -102,165 +642,26 @@ def compile_and_run(
 
 def _compile_and_run(prog, optimize, memory_limit, passes, mode,
                      kernelize_on, kernel_impl, root):
-    input_names = sorted(prog.inputs)
-    arrays = []
-    shapes: Dict[str, tuple] = {}
-    types: Dict[str, wt.WeldType] = {}
-    with obs.span("encode", inputs=len(input_names)):
-        for name in input_names:
-            ty, enc, data = prog.inputs[name]
-            arr = enc.encode(data)
-            arr = jnp.asarray(arr)
-            arrays.append(arr)
-            shapes[name] = tuple(arr.shape)
-            types[name] = ty
-
-    # positional input aliasing: rebuilt workflows (fresh obj ids) share
-    # one compiled executable as long as their structure matches
-    name_map = {n: f"in{i}" for i, n in enumerate(input_names)}
-    sig = ",".join(f"{a.dtype}:{a.shape}" for a in arrays)
-    kreg = ""
-
-    def _kreg() -> str:
-        from .kernelplan import autotune, fingerprint, quarantine
-
-        return (fingerprint() + "/" + autotune.fingerprint()
-                + "/" + quarantine.fingerprint())
-
-    if kernelize_on:
-        # register/unregister, new tunings AND quarantine changes must
-        # invalidate the cache: a stale executable must never serve a
-        # newly tuned plan or a newly quarantined kernel route
-        kreg = _kreg()
-
-    def _mk_key(kreg_now: str) -> str:
-        # armed faults join the key too (empty when none — the common
-        # path): an injected fault must never be defeated by a cached
-        # executable, and a consumed fault must never serve the
-        # poisoned executable it produced
-        return (
-            ir.canon_key(prog.expr, name_map)
-            + f"|opt={optimize}|mem={memory_limit}|passes={passes}"
-            + f"|kz={mode}|kimpl={kernel_impl}|kreg={kreg_now}"
-            + f"|flt={faults.fingerprint()}|{sig}"
-        )
-
-    key = _mk_key(kreg)
-
-    stats: dict = {}
-    with obs.span("cache.lookup") as sp:
-        hit = key in _compile_cache
-        sp.set("hit", hit)
-    if hit:
-        jitted, stats = _compile_cache[key]
-        from_cache = True
-        compile_ms = 0.0
-    else:
-        from_cache = False
-        t0 = time.perf_counter()
-        expr = prog.expr
-        stats["loops.before"] = loop_count(expr)
-        # verify the frontend's program before any rewrite touches it:
-        # a pre-existing violation must be blamed on the input, not on
-        # whichever pass happens to run first
-        check.checkpoint("input", expr, env=types, stats=stats,
-                         shapes=shapes)
-        if optimize:
-            with obs.span("optimize") as sp:
-                expr = run_passes(expr, passes=passes, stats=stats,
-                                  input_shapes=shapes)
-                sp.set("iterations", stats.get("iterations"))
-        stats["loops.after"] = loop_count(expr)
-        if kernelize_on:
-            from .kernelplan import autotune, plan_kernels
-
-            with obs.span("kernelplan", mode=mode) as sp:
-                expr = plan_kernels(expr, input_shapes=shapes, stats=stats,
-                                    mode=mode, impl=kernel_impl)
-                sp.set("matched", stats.get("kernelize.matched", 0))
-            if stats.get("kernelize.matched"):
-                with obs.span("autotune"):
-                    expr = autotune.tune_plan(expr, impl=kernel_impl,
-                                              stats=stats)
-                check.checkpoint("autotune", expr, stats=stats,
-                                 shapes=shapes)
-        # the planned IR is part of the stats so explain()/the measured
-        # replay can reach the program that actually ran (cache hits
-        # included — the expr rides along in the cached stats entry).
-        # plan.inputs pins the COMPILE-time input binding: a later hit
-        # from a rebuilt workflow has fresh obj ids, but its arrays map
-        # positionally onto these names (the cache key aliases inputs
-        # positionally), so the replay re-binds them the same way
-        stats["plan.ir"] = expr
-        stats["plan.inputs"] = (list(input_names), dict(types),
-                                dict(shapes))
-        # weldbound admission: evaluate the plan's symbolic peak-memory
-        # certificate against the bound inputs and reject BEFORE tracing
-        # — a rejected plan costs zero kernel launches and is never
-        # cached.  Analysis failures only disable admission (the
-        # emitter's own trace-time charging still guards execution).
-        if _bounds.enabled():
-            tb0 = time.perf_counter()
-            with obs.span("bounds") as sp:
-                try:
-                    brep = _bounds.analyze(expr)
-                except Exception:
-                    brep = None
-                if brep is not None:
-                    peak = brep.peak(shapes)
-                    admitted = (memory_limit is None
-                                or peak <= int(memory_limit))
-                    stats["bounds.certificate"] = brep.certificate()
-                    stats["bounds.peak_bytes"] = peak
-                    stats["bounds.builders"] = brep.builder_lines(shapes)
-                    stats["bounds.out_rows"] = brep.result_rows(shapes)
-                    stats["bounds.admitted"] = admitted
-                    sp.set("peak_bytes", peak)
-                    sp.set("admitted", admitted)
-            stats["bounds.ms"] = round(
-                (time.perf_counter() - tb0) * 1e3, 3)
-            if brep is not None and not stats["bounds.admitted"]:
-                raise ResourceError(
-                    f"plan rejected at admission: peak-memory certificate "
-                    f"{stats['bounds.certificate']} = "
-                    f"{stats['bounds.peak_bytes']} bytes exceeds "
-                    f"memory_limit={int(memory_limit)} (builder size "
-                    f"hints + kernel scratch footprints provably do not "
-                    f"fit; nothing was traced or launched)")
-        with obs.span("jit_compile"):
-            fn = emit_program(expr, input_names, types, shapes, memory_limit,
-                              kernel_impl=kernel_impl)
-            jitted = jax.jit(fn)
-            # trigger tracing+compilation now so compile_ms is honest
-            _ = jitted.lower(*arrays).compile()
-        compile_ms = (time.perf_counter() - t0) * 1e3
-        stats["compile_ms"] = compile_ms
-        _compile_cache[key] = (jitted, stats)
-        if kernelize_on:
-            # first-encounter tuning bumps the autotune fingerprint AFTER
-            # the key was formed; the executable was built WITH those
-            # tunings, so file it under the refreshed key too — the next
-            # identical call hits instead of recompiling the same plan
-            kreg_now = _kreg()
-            if kreg_now != kreg:
-                _compile_cache[_mk_key(kreg_now)] = (jitted, stats)
-
+    del kernelize_on  # carried by mode
+    low = _lower(prog, optimize, memory_limit, passes, mode, kernel_impl)
+    jitted, stats, from_cache = _compile_handle(low)
+    compile_ms = 0.0 if from_cache else stats.get("compile_ms", 0.0)
     root.set("from_cache", from_cache)
     with obs.span("execute"):
-        out = jitted(*arrays)
+        out = jitted(*low.arrays)
         out = jax.block_until_ready(out)
     if (obs.enabled() and stats.get("kernelize.matched")
             and stats.get("plan.ir") is not None
             and stats.get("plan.inputs") is not None):
         pnames, ptypes, pshapes = stats["plan.inputs"]
         _measured_replay(stats["plan.ir"], pnames, ptypes, pshapes,
-                         memory_limit, kernel_impl, arrays)
+                         memory_limit, kernel_impl, low.arrays)
     with obs.span("decode"):
         faults.maybe_raise("decode")
         if faults.poisoned("decode"):
             raise CapacityError("fault injected at decode: result poisoned")
         value = decode_value(out, prog.out_ty)
-    return value, compile_ms, from_cache, _copy_stats(stats)
+    return value, compile_ms, from_cache, _export_stats(stats, from_cache)
 
 
 def _measured_replay(expr, input_names, types, shapes, memory_limit,
@@ -271,14 +672,17 @@ def _measured_replay(expr, input_names, types, shapes, memory_limit,
     boundaries, so when tracing is on we pay one extra eager pass to get
     honest per-kernel wall times (adapter overhead included — the same
     thing the roofline model prices).  Best-effort: a replay failure is
-    recorded on the span, never raised."""
+    recorded on the span, never raised.  Serialized under the compile
+    lock: the eager pass runs through the same global emitter state a
+    concurrent compile would be mutating."""
     with obs.span("measure.replay") as sp:
         try:
             faults.maybe_raise("measure.replay")
-            fn = emit_program(expr, input_names, types, shapes,
-                              memory_limit, kernel_impl=kernel_impl,
-                              measure=True)
-            out = fn(*arrays)
+            with _compile_lock:
+                fn = emit_program(expr, input_names, types, shapes,
+                                  memory_limit, kernel_impl=kernel_impl,
+                                  measure=True)
+                out = fn(*arrays)
             jax.block_until_ready(out)
         except Exception as e:  # pragma: no cover - defensive
             sp.set("error", f"{type(e).__name__}: {e}")

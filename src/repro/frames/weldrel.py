@@ -15,7 +15,7 @@ import numpy as np
 
 from ..core import faults, ir, macros as M, wtypes as wt
 from ..core.errors import CapacityError
-from ..core.lazy import Evaluate, NewWeldObject, WeldObject
+from ..core.lazy import Evaluate, NewWeldObject, WeldObject, build_program
 from . import weldnp
 
 
@@ -38,10 +38,54 @@ class Query:
     def __init__(self, table: Table):
         self.table = table
         self.pred: Optional[weldnp.ndarray] = None
+        #: set by the stage()/compile() proxies: operator tails return a
+        #: StagedQuery instead of evaluating
+        self._staged = False
 
     def filter(self, pred: weldnp.ndarray) -> "Query":
         self.pred = pred if self.pred is None else (self.pred & pred)
         return self
+
+    def stage(self) -> "_Stage":
+        """Capture the *next* operator as a :class:`StagedQuery` instead
+        of evaluating it::
+
+            sq = Query(t).filter(p).stage().join(r, on="key")
+
+        The staged query binds the operator's tables and IR but compiles
+        nothing; hand it to ``core.serve.QueryServer.submit`` or call
+        ``sq.compile()`` for the AOT handle.  Lazy tables only."""
+        return _Stage(self)
+
+    def compile(self, collect_stats: Optional[dict] = None) -> "_Compile":
+        """AOT-compile the *next* operator::
+
+            cq = Query(t).compile().join(r, on="key")   # CompiledQuery
+            out1 = cq.run()                   # the staged tables
+            out2 = cq.run(table=t2, right=r2)  # same shapes, 0 recompiles
+
+        Returns a proxy; calling an operator on it yields a
+        :class:`CompiledQuery` with ``.stats``, ``.explain()`` and
+        ``.run(**tables)``.  Compilation goes through the runtime's
+        bounded single-flight cache, so repeated compiles of the same
+        (plan, shape) are free."""
+        return _Compile(self, collect_stats)
+
+    def _finish(self, obj: WeldObject, finalize: Callable, *, op: str,
+                tables: Dict[str, Table], memory_limit=None, kernelize=None,
+                kernel_impl=None, collect_stats=None):
+        """Common tail of every lazy operator: evaluate now (the normal
+        path) or, under stage()/compile(), capture the program plus the
+        result finalizer as a :class:`StagedQuery`."""
+        if self._staged:
+            return StagedQuery(op=op, obj=obj, finalize=finalize,
+                               tables=dict(tables),
+                               memory_limit=memory_limit,
+                               kernelize=kernelize,
+                               kernel_impl=kernel_impl)
+        res = Evaluate(obj, memory_limit=memory_limit, kernelize=kernelize,
+                       kernel_impl=kernel_impl, collect_stats=collect_stats)
+        return finalize(res.value)
 
     def explain(self, analyze: bool = False) -> "_Explain":
         """EXPLAIN [ANALYZE] the *next* operator instead of returning its
@@ -133,9 +177,11 @@ class Query:
             ir.Lambda((b, i, x), body),
         )
         obj = NewWeldObject(deps, ir.Result(loop))
-        res = Evaluate(obj, kernelize=kernelize, kernel_impl=kernel_impl,
-                       collect_stats=collect_stats).value
-        return {n: res[k] for k, n in enumerate(names)}
+        return self._finish(
+            obj, lambda v: {n: v[k] for k, n in enumerate(names)},
+            op="agg", tables={"table": self.table},
+            kernelize=kernelize, kernel_impl=kernel_impl,
+            collect_stats=collect_stats)
 
     # -- grouped aggregate -------------------------------------------------------
 
@@ -239,9 +285,11 @@ class Query:
             ir.Lambda((b, i, x), body),
         )
         obj = NewWeldObject(deps, ir.Result(loop))
-        return Evaluate(obj, kernelize=kernelize,
-                        kernel_impl=kernel_impl,
-                        collect_stats=collect_stats).value
+        return self._finish(
+            obj, lambda v: v,
+            op="group_agg", tables={"table": self.table},
+            kernelize=kernelize, kernel_impl=kernel_impl,
+            collect_stats=collect_stats)
 
     # -- hash join ---------------------------------------------------------------
 
@@ -687,12 +735,14 @@ class Query:
                 ir.Lambda((b2, i2, x2), body2),
             )
             obj = NewWeldObject(deps, ir.Result(loop))
-            res = Evaluate(obj, memory_limit=memory_limit,
-                           kernelize=kernelize,
-                           kernel_impl=kernel_impl,
-                           collect_stats=collect_stats)
-            arrays = [np.asarray(v) for v in res.value]
-            return Table(dict(zip(out_names, arrays)), eager=False)
+            return self._finish(
+                obj,
+                lambda v: Table(
+                    dict(zip(out_names, [np.asarray(a) for a in v])),
+                    eager=False),
+                op="join", tables={"table": self.table, "right": other},
+                memory_limit=memory_limit, kernelize=kernelize,
+                kernel_impl=kernel_impl, collect_stats=collect_stats)
 
         # bool value columns cannot ride the "+"-dictmerger directly —
         # they build as i8 and cast back to bool at the probe (build
@@ -820,11 +870,14 @@ class Query:
         )
 
         obj = NewWeldObject(deps, ir.Result(loop))
-        res = Evaluate(obj, memory_limit=memory_limit,
-                       kernelize=kernelize, kernel_impl=kernel_impl,
-                       collect_stats=collect_stats)
-        arrays = [np.asarray(v) for v in res.value]
-        return Table(dict(zip(out_names, arrays)), eager=False)
+        return self._finish(
+            obj,
+            lambda v: Table(
+                dict(zip(out_names, [np.asarray(a) for a in v])),
+                eager=False),
+            op="join", tables={"table": self.table, "right": other},
+            memory_limit=memory_limit, kernelize=kernelize,
+            kernel_impl=kernel_impl, collect_stats=collect_stats)
 
 
 class _Explain:
@@ -1032,6 +1085,167 @@ class PlanReport:
 
     def __repr__(self) -> str:
         return self.render()
+
+
+class _Stage:
+    """Proxy returned by :meth:`Query.stage`: the next operator call
+    captures a :class:`StagedQuery` instead of evaluating."""
+
+    def __init__(self, query: Query):
+        self._q = query
+
+    def agg(self, *args, **kwargs) -> "StagedQuery":
+        return self._capture("agg", args, kwargs)
+
+    def group_agg(self, *args, **kwargs) -> "StagedQuery":
+        return self._capture("group_agg", args, kwargs)
+
+    def join(self, *args, **kwargs) -> "StagedQuery":
+        return self._capture("join", args, kwargs)
+
+    def _capture(self, op: str, args, kwargs) -> "StagedQuery":
+        if self._q.table.eager:
+            raise ValueError(
+                "stage()/compile() require a lazy table — eager tables "
+                "evaluate immediately and never build a Weld program"
+            )
+        q = Query(self._q.table)
+        q.pred = self._q.pred
+        q._staged = True
+        out = getattr(Query, op)(q, *args, **kwargs)
+        if not isinstance(out, StagedQuery):  # pragma: no cover - guard
+            raise ValueError(f"{op} did not reach the lazy tail; "
+                             "cannot stage it")
+        return out
+
+
+class _Compile:
+    """Proxy returned by :meth:`Query.compile`: the next operator call
+    stages AND compiles, yielding a :class:`CompiledQuery`."""
+
+    def __init__(self, query: Query, collect_stats: Optional[dict] = None):
+        self._stage = _Stage(query)
+        self._collect = collect_stats
+
+    def agg(self, *args, **kwargs) -> "CompiledQuery":
+        return self._stage._capture("agg", args, kwargs).compile(
+            collect_stats=self._collect)
+
+    def group_agg(self, *args, **kwargs) -> "CompiledQuery":
+        return self._stage._capture("group_agg", args, kwargs).compile(
+            collect_stats=self._collect)
+
+    def join(self, *args, **kwargs) -> "CompiledQuery":
+        return self._stage._capture("join", args, kwargs).compile(
+            collect_stats=self._collect)
+
+
+class StagedQuery:
+    """One captured lazy operator: the stitched program, the bound
+    tables, and the host-side result finalizer — nothing compiled yet.
+
+    ``core.serve.QueryServer.submit`` accepts these directly (it reads
+    ``program()``/``compile()``/``finalize`` by duck type);
+    :meth:`compile` produces the reusable :class:`CompiledQuery`."""
+
+    def __init__(self, op: str, obj: WeldObject, finalize: Callable,
+                 tables: Dict[str, Table], memory_limit=None,
+                 kernelize=None, kernel_impl=None):
+        self.op = op
+        self.obj = obj
+        self.finalize = finalize
+        self.tables = tables
+        self.memory_limit = memory_limit
+        self.kernelize = kernelize
+        self.kernel_impl = kernel_impl
+        self._prog = None
+
+    def program(self):
+        """The stitched :class:`~repro.core.lazy.Program` (cached)."""
+        if self._prog is None:
+            self._prog = build_program(self.obj)
+        return self._prog
+
+    def binding(self) -> Dict[str, Dict[str, str]]:
+        """alias -> {column name -> program input name} for every bound
+        table column that is actually a program input (filter predicates
+        reach their columns through the same input objects, so
+        re-binding a column re-binds the predicate too)."""
+        prog = self.program()
+        out: Dict[str, Dict[str, str]] = {}
+        for alias, tbl in self.tables.items():
+            cols = {}
+            for cname, col in tbl.cols.items():
+                oid = col.obj.obj_id
+                if oid in prog.inputs:
+                    cols[cname] = oid
+            out[alias] = cols
+        return out
+
+    def compile(self, collect_stats: Optional[dict] = None
+                ) -> "CompiledQuery":
+        from ..core import runtime
+
+        handle = runtime.compile_program(
+            self.program(), memory_limit=self.memory_limit,
+            kernelize=self.kernelize, kernel_impl=self.kernel_impl)
+        if collect_stats is not None:
+            collect_stats.update(handle.stats)
+        return CompiledQuery(self, handle)
+
+
+class CompiledQuery:
+    """AOT handle for one weldrel operator: ``.stats``, ``.explain()``,
+    and ``.run(**tables)`` re-binding same-shape tables against the
+    cached executable with zero recompiles.
+
+    ``run()`` with no arguments executes against the staged tables;
+    ``run(table=t2)`` (and ``right=r2`` for joins) re-binds the named
+    tables' columns by name.  Shapes and dtypes must match the compiled
+    signature — anything else needs a fresh ``Query(...).compile()``."""
+
+    def __init__(self, staged: StagedQuery, handle):
+        self.staged = staged
+        self.handle = handle
+        self._binding = staged.binding()
+        self._pos = {name: i
+                     for i, name in enumerate(handle._low.input_names)}
+
+    @property
+    def stats(self) -> dict:
+        return self.handle.stats
+
+    @property
+    def from_cache(self) -> bool:
+        return self.handle.from_cache
+
+    def explain(self) -> PlanReport:
+        """The same EXPLAIN report ``Query.explain()`` renders, off the
+        compiled plan's stats (cost-gate decisions included)."""
+        return PlanReport(op=self.staged.op, stats=self.stats, spans=[],
+                          analyze=False, result=None)
+
+    def run(self, **tables):
+        prog = self.staged.program()
+        arrays = None
+        if tables:
+            arrays = list(self.handle._low.arrays)
+            for alias, tbl in tables.items():
+                mapping = self._binding.get(alias)
+                if mapping is None:
+                    raise KeyError(
+                        f"unknown table alias {alias!r}; this "
+                        f"{self.staged.op} binds {sorted(self._binding)}")
+                for cname, iname in mapping.items():
+                    if cname not in tbl.cols:
+                        raise KeyError(
+                            f"re-bound table {alias!r} is missing column "
+                            f"{cname!r} required by the compiled plan")
+                    enc = prog.inputs[iname][1]
+                    arrays[self._pos[iname]] = enc.encode(
+                        np.asarray(_host(tbl.cols[cname])))
+        value = self.handle.run(arrays)
+        return self.staged.finalize(value)
 
 
 def _host(col: weldnp.ndarray) -> np.ndarray:

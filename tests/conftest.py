@@ -6,7 +6,16 @@ rewrite — so any pass producing ill-typed/non-linear/racy IR fails the
 suite loudly even when the miscompiled program happens to produce the
 right numbers.  Explicitly exported ``WELD_VERIFY=0`` wins (for
 overhead A/B runs).
+
+``WELD_COST_LEDGER`` defaults to a per-session temp file: the cost
+gate calibrates itself from ledger medians, so a developer's real
+ledger (with honest-but-slow CPU timings) would silently flip routing
+decisions the suite asserts on.  Explicitly exported paths win.
 """
 import os
+import tempfile
 
 os.environ.setdefault("WELD_VERIFY", "1")
+os.environ.setdefault(
+    "WELD_COST_LEDGER",
+    os.path.join(tempfile.mkdtemp(prefix="weld-test-"), "ledger.jsonl"))

@@ -71,3 +71,12 @@ echo "== explain/trace smoke (weldtrace observability check) =="
 # explain(analyze=True) shows predicted AND measured kernel times,
 # and that tools/cost_report.py summarizes the produced ledger
 WELD_TRACE=1 python tools/trace_smoke.py
+
+echo "== serve smoke (AOT staging + concurrent serving check) =="
+# drives QueryServer with 8 threads x 32 mixed staged queries and
+# asserts byte-identical results vs the serial oracle, exactly one
+# compile per distinct (plan, shape) key (single-flight), zero-compile
+# same-shape rebinds, typed ResourceError shedding at admission, and
+# that ledger-seeded medians reprice the cost gate (source=measured in
+# explain) without flipping any routing decision
+python tools/serve_smoke.py

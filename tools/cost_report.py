@@ -25,6 +25,33 @@ sys.path.insert(
 from repro.core.obs import ledger  # noqa: E402
 
 
+def _calibrate_dump(path: str, kernel: str | None) -> int:
+    """Print the gate's own view of the ledger: one JSON row per
+    (kernel, dtype, size-bucket) with the median it would overlay and
+    whether the group clears the sample floor.  This goes through
+    ``kernelplan.calibrate`` itself, so what it prints is BY
+    CONSTRUCTION what ``cost.estimate`` would use."""
+    from repro.core.kernelplan import calibrate  # noqa: E402
+
+    floor = calibrate.min_samples()
+    rows = []
+    for (kern, dtype, bucket), g in sorted(calibrate.medians(path).items()):
+        if kernel and kern != kernel:
+            continue
+        rows.append({
+            "kernel": kern,
+            "dtype": dtype,
+            "bucket": bucket,
+            "calls": g["calls"],
+            "measured_ns_median": g["measured_ns"],
+            "eligible": g["calls"] >= floor,
+            "min_samples": floor,
+        })
+    print(json.dumps({"ledger": path, "enabled": calibrate.enabled(),
+                      "groups": rows}, indent=1))
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--ledger", default=None,
@@ -34,9 +61,15 @@ def main() -> int:
                     help="only report this kernel")
     ap.add_argument("--json", action="store_true",
                     help="emit the summary rows as JSON")
+    ap.add_argument("--calibrate-dump", action="store_true",
+                    help="emit the EXACT per-(kernel, dtype, bucket) "
+                         "medians the serving cost gate overlays on the "
+                         "roofline estimates, as JSON rows")
     args = ap.parse_args()
 
     path = args.ledger or ledger.ledger_path()
+    if args.calibrate_dump:
+        return _calibrate_dump(path, args.kernel)
     records = ledger.read(path)
     if args.kernel:
         records = [r for r in records if r.get("kernel") == args.kernel]
